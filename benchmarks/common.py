@@ -1,0 +1,112 @@
+"""Shared benchmark fixtures: synthetic Conviva-like + TPC-H-lite data and a
+standard engine setup mirroring the paper's §6.1 evaluation setting
+(K=100,000, resolutions ×2 apart, 50% storage budget default) scaled to this
+container."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (AggOp, Atom, BlinkDB, CmpOp, EngineConfig, ErrorBound,
+                        Predicate, Query, QueryTemplate, TimeBound)
+from repro.core import table as table_lib
+from repro.data import synth
+
+N_ROWS = 400_000          # scaled-down stand-in for the paper's 5.5e9 rows
+K1 = 2000.0               # scaled from the paper's 1e5 cap
+SEED = 7
+
+
+def conviva_db(storage_budget: float = 0.5, n_rows: int = N_ROWS,
+               use_pallas: bool = False, m: int = 5) -> BlinkDB:
+    tbl = table_lib.from_columns(
+        "sessions", synth.sessions_table(n_rows, seed=SEED))
+    db = BlinkDB(EngineConfig(k1=K1, c=2.0, m=m, uniform_fraction=0.5,
+                              use_pallas=use_pallas, seed=SEED))
+    db.register_table("sessions", tbl)
+    db.build_samples("sessions", conviva_templates(),
+                     storage_budget_fraction=storage_budget)
+    return db
+
+
+def conviva_templates() -> list[QueryTemplate]:
+    """§2.3's example workload: 42 templates in the paper; the headline ones
+    here with the paper's weights."""
+    return [
+        QueryTemplate(frozenset({"City"}), 0.30),
+        QueryTemplate(frozenset({"Genre", "City"}), 0.25),
+        QueryTemplate(frozenset({"OS", "URL"}), 0.25),
+        QueryTemplate(frozenset({"Genre"}), 0.10),
+        QueryTemplate(frozenset({"URL"}), 0.10),
+    ]
+
+
+def tpch_db(storage_budget: float = 0.5, n_rows: int = N_ROWS // 2) -> BlinkDB:
+    tbl = table_lib.from_columns("lineitem", synth.lineitem_table(n_rows,
+                                                                  seed=SEED))
+    db = BlinkDB(EngineConfig(k1=K1, c=2.0, m=5, seed=SEED))
+    db.register_table("lineitem", tbl)
+    db.build_samples("lineitem", tpch_templates(),
+                     storage_budget_fraction=storage_budget)
+    return db
+
+
+def tpch_templates() -> list[QueryTemplate]:
+    """TPC-H's 22 queries map to 6 templates (paper §6.1)."""
+    return [
+        QueryTemplate(frozenset({"l_returnflag", "l_linestatus"}), 0.25),
+        QueryTemplate(frozenset({"l_suppkey"}), 0.20),
+        QueryTemplate(frozenset({"l_partkey"}), 0.20),
+        QueryTemplate(frozenset({"l_shipmode"}), 0.15),
+        QueryTemplate(frozenset({"l_partkey", "l_suppkey"}), 0.10),
+        QueryTemplate(frozenset({"l_returnflag"}), 0.10),
+    ]
+
+
+def conviva_queries(db: BlinkDB, bound) -> list[Query]:
+    """Representative instantiations of the workload templates."""
+    tbl = db.tables["sessions"]
+    cities = tbl.dictionaries["City"]
+    urls = tbl.dictionaries["URL"]
+    return [
+        Query("sessions", AggOp.AVG, "SessionTime", group_by=("City",),
+              bound=bound),
+        Query("sessions", AggOp.COUNT,
+              predicate=Predicate.where(Atom("City", CmpOp.EQ, cities[0])),
+              bound=bound),
+        Query("sessions", AggOp.SUM, "SessionTime",
+              predicate=Predicate.where(Atom("Genre", CmpOp.EQ, "genre03")),
+              group_by=("City",), bound=bound),
+        Query("sessions", AggOp.COUNT,
+              predicate=Predicate.where(Atom("OS", CmpOp.EQ, "os1"),
+                                        Atom("URL", CmpOp.EQ, urls[1])),
+              bound=bound),
+        Query("sessions", AggOp.AVG, "Bitrate", group_by=("OS",),
+              bound=bound),
+    ]
+
+
+def time_call(fn, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def rel_error(ans, exact, reduce: str = "median") -> float:
+    """|rel err| over groups present in both (median by default — matches
+    the paper's per-template 'average statistical error' which is dominated
+    by the populous groups, not the tiny tail strata)."""
+    ex = {g.key: (g.estimate, g.n_selected) for g in exact.groups}
+    errs = []
+    for g in ans.groups:
+        t = ex.get(g.key)
+        if t and t[0]:
+            errs.append(abs(g.estimate - t[0]) / abs(t[0]))
+    if not errs:
+        return float("nan")
+    return float(np.median(errs) if reduce == "median" else np.mean(errs))

@@ -1,0 +1,32 @@
+"""E8 / Fig 6(a,b): sample families selected at 50/100/200% storage budgets
+on Conviva-like and TPC-H-lite workloads. Paper behaviour to reproduce:
+larger budgets admit more (and wider) stratified families; Genre-like
+uniform columns are NOT selected (§2.3)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run() -> list[dict]:
+    out = []
+    for workload, mk in [("conviva", common.conviva_db),
+                         ("tpch", common.tpch_db)]:
+        prev_cost = 0.0
+        for budget in (0.5, 1.0, 2.0):
+            db = mk(storage_budget=budget)
+            table = next(iter(db.tables.values()))
+            fams = {p: f for p, f in db.families[table.schema.name].items() if p}
+            cost = sum(f.storage_bytes(table.row_bytes()) for f in fams.values())
+            names = ",".join("+".join(p) for p in sorted(fams))
+            out.append({
+                "name": f"fig6ab_{workload}_budget{int(budget*100)}",
+                "us_per_call": 0.0,
+                "derived": (f"families=[{names}] "
+                            f"cost_frac={cost / table.nbytes:.3f} "
+                            f"objective={db.last_solution.objective:.1f}"),
+                "n_families": len(fams),
+                "cost_fraction": cost / table.nbytes,
+            })
+            assert cost <= budget * table.nbytes * 1.05, "budget violated"
+            prev_cost = cost
+    return out

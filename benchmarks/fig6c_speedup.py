@@ -1,0 +1,51 @@
+"""E1 / Fig 6(c): BlinkDB vs full-data execution.
+
+Paper claim: 10-100× faster than Hive/Shark at a 1% error bound, 95% conf.
+Here both paths run on the same JAX executor, so the speedup isolates the
+paper's actual mechanism — rows scanned — not engine differences. Run on two
+dataset sizes (the paper's 2.5TB in-mem / 7.5TB spilled analogue is a small /
+large table here).
+"""
+from __future__ import annotations
+
+from repro.core import AggOp, Atom, CmpOp, ErrorBound, Predicate, Query
+
+from benchmarks import common
+
+
+def run(n_rows_small: int = 200_000, n_rows_large: int = 800_000) -> list[dict]:
+    out = []
+    # eps is scaled to the container: the paper's 1% on 5.5e9 rows and our
+    # 5% on 8e5 rows both require samples ~1-3% of the table — the mechanism
+    # (latency ∝ rows scanned, bound met) is scale-free; the absolute eps a
+    # fixed sample can deliver is not.
+    for label, n in [("small", n_rows_small), ("large", n_rows_large),
+                     ("xlarge", 2_000_000)]:
+        db = common.conviva_db(n_rows=n)
+        queries = {
+            # §2's COUNT with a genre filter (selectivity ~1/12)
+            "count": Query("sessions", AggOp.COUNT,
+                           predicate=Predicate.where(
+                               Atom("Genre", CmpOp.EQ, "genre03")),
+                           bound=ErrorBound(0.05, 0.95)),
+            # the Fig-6c query family: filtered AVG with a GROUP BY
+            "avg": Query("sessions", AggOp.AVG, "SessionTime",
+                         predicate=Predicate.where(Atom("dt", CmpOp.LT, 5.0)),
+                         group_by=("OS",), bound=ErrorBound(0.05, 0.95)),
+        }
+        for qname, q in queries.items():
+            ans, t_approx = common.time_call(db.query, q)
+            exact, t_exact = common.time_call(db.exact_query, q)
+            err = common.rel_error(ans, exact)
+            bound_met = err <= q.bound.eps
+            out.append({
+                "name": f"fig6c_{label}_{qname}",
+                "us_per_call": t_approx * 1e6,
+                "derived": (f"speedup={t_exact / max(t_approx, 1e-9):.1f}x "
+                            f"rows={ans.rows_read}/{ans.rows_total} "
+                            f"err={err:.4f} bound_met={bound_met}"),
+                "t_exact_s": t_exact, "t_approx_s": t_approx,
+                "speedup": t_exact / max(t_approx, 1e-9),
+                "rel_err": err,
+            })
+    return out

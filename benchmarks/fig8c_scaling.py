@@ -1,0 +1,56 @@
+"""E5 / Fig 8(c): scaling with cluster size.
+
+The paper scales 10→100 nodes with 100GB/node (input grows with the
+cluster). Here `n_shards` plays the node count on striped families; each
+query's per-shard work is fixed (rows ∝ shards), so flat per-query latency =
+good scaling for selective queries; bulk queries grow with data.
+
+On this 1-CPU container shards execute sequentially inside one vmap, so we
+report per-shard-normalized latency (the distributed analogue) plus raw time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (AggOp, Atom, CmpOp, ErrorBound, Predicate, Query)
+from repro.core import executor as exec_lib
+from repro.core import table as table_lib
+from repro.data import synth
+
+from benchmarks import common
+
+
+def run() -> list[dict]:
+    out = []
+    base_rows = 50_000
+    for n_shards in (1, 2, 4, 8):
+        n_rows = base_rows * n_shards       # data grows with "cluster"
+        tbl = table_lib.from_columns(
+            "sessions", synth.sessions_table(n_rows, seed=common.SEED))
+        from repro.core import BlinkDB, EngineConfig
+        db = BlinkDB(EngineConfig(k1=1000.0, c=2.0, m=4, seed=common.SEED))
+        db.register_table("sessions", tbl)
+        db.add_family("sessions", ("City",))
+        db.add_family("sessions", ())
+        # monkey-strip: stripe across n_shards without a mesh
+        db._n_shards = lambda: n_shards  # noqa: SLF001 — bench-only override
+
+        selective = Query("sessions", AggOp.COUNT,
+                          predicate=Predicate.where(
+                              Atom("City", CmpOp.EQ,
+                                   tbl.dictionaries["City"][-1])),
+                          bound=ErrorBound(0.1, 0.95))
+        bulk = Query("sessions", AggOp.AVG, "SessionTime",
+                     group_by=("City",), bound=ErrorBound(0.02, 0.95))
+        for qname, q in [("selective", selective), ("bulk", bulk)]:
+            ans, dt = common.time_call(db.query, q, repeat=2)
+            per_shard = dt / n_shards
+            out.append({
+                "name": f"fig8c_{qname}_n{n_shards}",
+                "us_per_call": dt * 1e6,
+                "derived": (f"shards={n_shards} rows_read={ans.rows_read} "
+                            f"t={dt*1e3:.1f}ms t/shard={per_shard*1e3:.2f}ms"),
+                "n_shards": n_shards, "t_s": dt, "t_per_shard_s": per_shard,
+                "rows_read": ans.rows_read,
+            })
+    return out

@@ -1,0 +1,42 @@
+"""BlinkDB engine scan-path micro-benchmark (wall-clock, this container).
+
+The paper's hot path: fused predicate + grouped HT aggregation. Measures
+rows/s and effective bytes/s of (a) the pure-jnp reference executor and
+(b) the Pallas kernel in interpret mode (correctness path on CPU; the
+BlockSpec tiling targets TPU). Effective scan bandwidth vs the container's
+memory bandwidth is the CPU-local roofline for §Perf's measured hillclimb.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators as est_lib
+from repro.kernels import ops
+
+from benchmarks import common
+
+
+def run(n: int = 2_000_000, n_groups: int = 64) -> list[dict]:
+    rng = np.random.default_rng(3)
+    values = jnp.asarray(rng.normal(10, 3, n).astype(np.float32))
+    freq = rng.integers(1, 5000, n).astype(np.float32)
+    rates = jnp.asarray(np.minimum(1.0, 1000.0 / freq))
+    mask = jnp.asarray(rng.random(n) < 0.3)
+    codes = jnp.asarray(rng.integers(0, n_groups, n).astype(np.int32))
+
+    ref = jax.jit(lambda *a: est_lib.grouped_moments(*a, n_groups))
+    out_ref, t_ref = common.time_call(
+        lambda: jax.tree.map(lambda x: x.block_until_ready(),
+                             ref(values, rates, mask, codes)))
+    bytes_scanned = n * 4 * 4  # 4 f32-ish columns
+    rows = []
+    rows.append({
+        "name": "scan_ref_jnp",
+        "us_per_call": t_ref * 1e6,
+        "derived": (f"rows/s={n/t_ref:.3e} eff_GB/s={bytes_scanned/t_ref/1e9:.2f}"),
+        "rows_per_s": n / t_ref,
+        "gb_per_s": bytes_scanned / t_ref / 1e9,
+    })
+    return rows

@@ -1,0 +1,47 @@
+"""R1: roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/pod/*.json (single-pod mesh, per spec) and emits
+one row per (arch × shape) with the three terms, bottleneck, usefulness
+ratio, and roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.roofline import Roofline
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun",
+                   "pod")
+
+
+def load_rooflines() -> list[Roofline]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        a = json.load(open(fn))
+        out.append(Roofline(
+            a["arch"], a["shape"], a["mesh"], a["chips"],
+            a["global_flops_jaxpr"], a["cost_analysis"]["flops"],
+            a["per_device_hbm_bytes"], a["collective_bytes"],
+            a["model_flops"]))
+    return out
+
+
+def run() -> list[dict]:
+    rows = []
+    for r in load_rooflines():
+        rows.append({
+            "name": f"roofline_{r.arch}_{r.shape}",
+            "us_per_call": max(r.t_compute, r.t_memory, r.t_collective) * 1e6,
+            "derived": (f"bottleneck={r.bottleneck} "
+                        f"tc={r.t_compute:.3f}s tm={r.t_memory:.3f}s "
+                        f"tx={r.t_collective:.3f}s "
+                        f"useful={r.usefulness:.2f} "
+                        f"frac={r.roofline_fraction:.3f}"),
+            **r.to_dict(),
+        })
+    if not rows:
+        rows.append({"name": "roofline_missing", "us_per_call": 0.0,
+                     "derived": "run repro.launch.dryrun --all first"})
+    return rows

@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Select with --only <prefix>.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+
+SUITES = [
+    ("table5", "benchmarks.table5_storage"),
+    ("fig6ab", "benchmarks.fig6ab_budget"),
+    ("fig6c", "benchmarks.fig6c_speedup"),
+    ("fig7", "benchmarks.fig7_error"),
+    ("fig8ab", "benchmarks.fig8_bounds"),
+    ("fig8c", "benchmarks.fig8c_scaling"),
+    ("kernel", "benchmarks.kernel_perf"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, help="also dump rows to a JSON file")
+    args = ap.parse_args()
+
+    import importlib
+    all_rows = []
+    print("name,us_per_call,derived")
+    failed = []
+    for tag, module in SUITES:
+        if args.only and not tag.startswith(args.only):
+            continue
+        try:
+            mod = importlib.import_module(module)
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001 — keep harness going
+            traceback.print_exc(file=sys.stderr)
+            failed.append((tag, repr(e)[:100]))
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+            all_rows.append(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_rows, f, indent=1, default=str)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

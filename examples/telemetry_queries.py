@@ -1,0 +1,77 @@
+"""BlinkDB × LM training: bounded-error queries over training telemetry.
+
+Trains a tiny model for a few steps, streams (step, domain, loss) records
+into a BlinkDB table, and answers ops-style questions with error bounds —
+the paper's technique applied to the training framework's own data plane
+(DESIGN.md §3 'first-class feature').
+
+    PYTHONPATH=src python examples/telemetry_queries.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (AggOp, Atom, BlinkDB, CmpOp, EngineConfig, ErrorBound,
+                        Predicate, Query, QueryTemplate)
+from repro.core import table as table_lib
+from repro.data.tokens import DataConfig, SyntheticTokenStream
+from repro.models import model as model_lib
+from repro.train import optim as optim_lib
+from repro.train import step as step_lib
+from repro.train.loop import LoopConfig, Telemetry, train
+
+
+def main() -> None:
+    cfg = get_config("qwen2-1.5b").reduced()
+    params, _ = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = optim_lib.OptConfig(lr=3e-3, warmup_steps=5, decay_steps=60)
+    opt = optim_lib.init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(step_lib.make_train_step(
+        cfg, opt_cfg, step_lib.StepConfig(remat=False)), donate_argnums=(0, 1))
+    stream = SyntheticTokenStream(DataConfig(cfg.vocab_size, 32, 8, seed=1))
+    _, _, telemetry = train(step_fn, params, opt, stream,
+                            LoopConfig(total_steps=60, ckpt_every=0,
+                                       log_every=30,
+                                       ckpt_dir="/tmp/repro_telemetry"),
+                            resume=False)
+
+    cols = telemetry.as_columns()
+    print(f"\n[telemetry] {len(cols['step'])} records, "
+          f"{len(np.unique(cols['domain']))} domains")
+    tbl = table_lib.from_columns("telemetry", {
+        "step": cols["step"].astype(np.int32),
+        "domain": cols["domain"].astype(np.int32),
+        "loss": cols["loss"].astype(np.float32),
+        "grad_norm": cols["grad_norm"].astype(np.float32),
+    }, categorical=["domain"])
+    db = BlinkDB(EngineConfig(k1=50.0, m=3, uniform_fraction=0.5))
+    db.register_table("telemetry", tbl)
+    db.build_samples("telemetry",
+                     [QueryTemplate(frozenset({"domain"}), 1.0)],
+                     storage_budget_fraction=0.5)
+
+    # Ops question 1: per-domain mean loss, 10% error bound.
+    q = Query("telemetry", AggOp.AVG, "loss", group_by=("domain",),
+              bound=ErrorBound(0.10, 0.95))
+    ans = db.query(q)
+    print("\nper-domain AVG(loss) within 10%@95%:")
+    for g in sorted(ans.groups, key=lambda g: g.key)[:4]:
+        print(f"  domain {g.key[0]}: {g.estimate:.3f} ± {1.96*g.stderr:.3f}")
+
+    # Ops question 2: how many late-phase high-grad-norm events?
+    q2 = Query("telemetry", AggOp.COUNT,
+               predicate=Predicate.where(Atom("step", CmpOp.GE, 30.0),
+                                         Atom("grad_norm", CmpOp.GT, 1.0)),
+               bound=ErrorBound(0.2, 0.95))
+    a2 = db.query(q2)
+    if a2.groups:
+        print(f"\nlate high-grad events ~= {a2.groups[0].estimate:.0f} "
+              f"± {1.96*a2.groups[0].stderr:.0f}")
+    else:
+        print("\nno late high-grad events in sample")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Error-Latency Profiles (paper §4.2).
+
+Given a selected family, the ELP projects — from a probe run on the smallest
+resolution — the resolution K_q that meets the query's error or time bound:
+
+  * Error profile: Var ∝ 1/n (Table 2) ⇒ required selected-rows n_req =
+    n_probe · Var_probe/Var_target; pick the smallest K whose expected
+    selected rows ≥ n_req (paper: smallest K > n·K_m/n_{i,m}).
+  * Latency profile: t(rows_read) is modeled linear (paper assumption,
+    calibrated on small resolutions); pick the largest K with t(K) ≤ bound.
+
+On TPU the latency model is bytes-scanned/BW_eff + t0 — same linear form, so
+the calibration code is identical on CPU (wall-clock) and TPU (step time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.sampling import SampleFamily
+from repro.core.types import ErrorBound, TimeBound
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """t = a * rows_read + b  (least squares over probe timings)."""
+    a: float
+    b: float
+
+    def predict(self, rows: float) -> float:
+        return self.a * rows + self.b
+
+    def max_rows_within(self, seconds: float) -> float:
+        if self.a <= 0:
+            return float("inf")
+        return max(0.0, (seconds - self.b) / self.a)
+
+
+def fit_latency(rows: Sequence[float], times: Sequence[float]) -> LatencyModel:
+    r = np.asarray(rows, dtype=np.float64)
+    t = np.asarray(times, dtype=np.float64)
+    if len(r) == 1:
+        return LatencyModel(float(t[0] / max(r[0], 1.0)), 0.0)
+    A = np.stack([r, np.ones_like(r)], axis=1)
+    (a, b), *_ = np.linalg.lstsq(A, t, rcond=None)
+    return LatencyModel(float(max(a, 0.0)), float(max(b, 0.0)))
+
+
+def pick_k_for_error(fam: SampleFamily, n_probe_selected, n_required,
+                     k_probe: float) -> float:
+    """Smallest K in the family whose expected selected rows ≥ n_required
+    (paper §4.2: smallest K > n·K_m/n_{i,m}). Accepts per-group arrays —
+    with GROUP BY, selected rows scale ∝ K *within each group-stratum*, so
+    the binding constraint is the max over groups of n_req_g / n_probe_g."""
+    n_probe = np.atleast_1d(np.asarray(n_probe_selected, dtype=np.float64))
+    n_req = np.atleast_1d(np.asarray(n_required, dtype=np.float64))
+    valid = n_probe > 0
+    if not valid.any():
+        return fam.ks[0]  # no signal: be conservative, use the largest sample
+    k_needed = float(np.max(n_req[valid] / n_probe[valid]) * k_probe)
+    for k in sorted(fam.ks):           # ascending: smallest adequate K
+        if k >= k_needed:
+            return k
+    return fam.ks[0]
+
+
+def pick_k_for_time(fam: SampleFamily, model: LatencyModel,
+                    seconds: float) -> float:
+    """Largest K whose prefix is predicted to run within the bound."""
+    max_rows = model.max_rows_within(seconds)
+    best = min(fam.ks)
+    for k, n_rows in zip(fam.ks, fam.prefix_sizes):  # ks descending
+        if n_rows <= max_rows:
+            return k
+    return best
+
+
+@dataclasses.dataclass
+class ProbeResult:
+    k: float
+    rows_read: int
+    rows_selected: float
+    elapsed_s: float
+
+
+def run_probes(fam: SampleFamily,
+               run_at_k: Callable[[float], tuple[float, float]],
+               n_probes: int = 2) -> list[ProbeResult]:
+    """Time the query on the smallest n_probes resolutions (§4.2: run until
+    scaling looks linear). run_at_k(k) -> (rows_selected, elapsed_s)."""
+    out = []
+    ks_asc = sorted(range(len(fam.ks)), key=lambda i: fam.ks[i])
+    for i in ks_asc[:n_probes]:
+        k = fam.ks[i]
+        sel, dt = run_at_k(k)
+        out.append(ProbeResult(k, fam.prefix_sizes[i], sel, dt))
+    return out

@@ -1,0 +1,461 @@
+"""BlinkDB engine facade.
+
+    db = BlinkDB()
+    db.register_table("sessions", table)
+    db.build_samples("sessions", templates, storage_budget_fraction=0.5)
+    ans = db.query(Query(..., bound=ErrorBound(0.1, 0.95)))
+
+Wires together: offline sample creation driven by the §3.2 optimizer, runtime
+family selection (§4.1), ELP resolution selection (§4.2), the fused
+distributed scan (executor), HT estimation with Table-2 error bars (§4.3),
+and background maintenance (§4.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elp as elp_lib
+from repro.core import estimators as est_lib
+from repro.core import executor as exec_lib
+from repro.core import optimizer as opt_lib
+from repro.core import sampling as samp_lib
+from repro.core import table as table_lib
+from repro.core.types import (AggOp, Answer, ColumnKind, ErrorBound,
+                              GroupResult, Query, QueryTemplate, TimeBound)
+from repro.core.selection import rewrite_disjuncts, select_family
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    k1: float = 100_000.0        # largest stratification cap (paper §6.1: 1e5)
+    c: float = 2.0               # resolution shrink factor
+    m: int | None = None         # resolutions per family (None: log_c K1)
+    uniform_fraction: float = 0.5
+    max_strat_cols: int = 3      # §6.3: optimizer capped at 3 columns
+    probe_resolutions: int = 2
+    use_pallas: bool = False     # fused Pallas scan vs pure-jnp reference
+    reuse_elp: bool = True       # cache ELP decisions per template (§4.4)
+    seed: int = 0
+
+
+class BlinkDB:
+    def __init__(self, config: EngineConfig | None = None, mesh=None,
+                 data_axes: tuple[str, ...] = ("data",)):
+        self.config = config or EngineConfig()
+        self.mesh = mesh
+        self.data_axes = data_axes
+        self.tables: dict[str, table_lib.Table] = {}
+        # table -> {phi: SampleFamily}; striped views cached alongside
+        self.families: dict[str, dict[tuple[str, ...], samp_lib.SampleFamily]] = {}
+        self._striped: dict[tuple[str, tuple[str, ...]], exec_lib.StripedFamily] = {}
+        self._latency: dict[tuple[str, tuple[str, ...]], elp_lib.LatencyModel] = {}
+        self._programs: dict = {}     # (table, phi, template) -> compiled fn
+        self._exact_programs: dict = {}
+        self._elp_cache: dict = {}    # (template, bound) -> chosen K (§4.4)
+        self._fk_maps: dict = {}      # (fact, dim, fk) -> np fk->row map
+        self.last_solution: opt_lib.Solution | None = None
+
+    # ------------------------------------------------------------- offline
+    def register_table(self, name: str, tbl: table_lib.Table) -> None:
+        self.tables[name] = tbl
+        self.families.setdefault(name, {})
+
+    def candidate_stats(self, table_name: str) -> Callable[[frozenset[str]], tuple[float, float, float]]:
+        """stats(phi) -> (Store(φ), |D(φ)|, Δ(φ)) from table statistics."""
+        tbl = self.tables[table_name]
+        k1 = self.config.k1
+
+        def stats(phi: frozenset[str]):
+            codes, _ = table_lib.combined_codes(tbl, sorted(phi))
+            nd = int(codes.max()) + 1 if len(codes) else 0
+            freqs = table_lib.stratum_frequencies(codes, nd)
+            storage = samp_lib.expected_sample_rows(freqs, k1) * (tbl.row_bytes() + 8)
+            delta = float((freqs < k1).sum())   # §3.2.1 tail-length metric
+            return storage, float(nd), delta
+        return stats
+
+    def build_samples(self, table_name: str, templates: Sequence[QueryTemplate],
+                      storage_budget_fraction: float = 0.5,
+                      change_fraction: float = 1.0,
+                      exact: bool = False) -> opt_lib.Solution:
+        """Offline sample creation (§2.2.1): solve §3.2, build chosen families
+        plus the always-present uniform family."""
+        tbl = self.tables[table_name]
+        stats = self.candidate_stats(table_name)
+        cands = opt_lib.enumerate_candidates(templates, stats,
+                                             self.config.max_strat_cols)
+        deltas, distincts = [], []
+        for t in templates:
+            _, nd, dl = stats(t.columns)
+            deltas.append(dl)
+            distincts.append(nd)
+        wl = opt_lib.Workload(tuple(templates), tuple(deltas), tuple(distincts))
+        budget = storage_budget_fraction * tbl.nbytes
+        existing = frozenset(frozenset(p) for p in self.families[table_name] if p)
+        solver = opt_lib.solve_exact if exact else opt_lib.solve_greedy
+        sol = solver(cands, wl, budget, existing=existing,
+                     change_fraction=change_fraction)
+        self.last_solution = sol
+
+        wanted = {tuple(sorted(c.phi)) for c in sol.chosen}
+        current = {p for p in self.families[table_name] if p}
+        for phi in current - wanted:       # discard (Eq. 5 accounting done in solver)
+            del self.families[table_name][phi]
+            self._striped.pop((table_name, phi), None)
+        for phi in sorted(wanted - current):
+            fam = samp_lib.build_family(tbl, phi, self.config.k1, self.config.c,
+                                        self.config.m, seed=self.config.seed)
+            self.families[table_name][phi] = fam
+        if () not in self.families[table_name]:
+            self.families[table_name][()] = samp_lib.build_uniform_family(
+                tbl, self.config.uniform_fraction, self.config.c,
+                self.config.m, seed=self.config.seed)
+        return sol
+
+    def add_family(self, table_name: str, phi: Sequence[str]) -> None:
+        """Manually add a family (used by tests/benchmarks)."""
+        tbl = self.tables[table_name]
+        phi_t = tuple(sorted(phi))
+        if phi_t == ():
+            fam = samp_lib.build_uniform_family(
+                tbl, self.config.uniform_fraction, self.config.c,
+                self.config.m, seed=self.config.seed)
+        else:
+            fam = samp_lib.build_family(tbl, phi_t, self.config.k1,
+                                        self.config.c, self.config.m,
+                                        seed=self.config.seed)
+        self.families.setdefault(table_name, {})[phi_t] = fam
+
+    # ------------------------------------------------------------- runtime
+    def _n_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    def _striped_for(self, table_name: str, phi: tuple[str, ...]) -> exec_lib.StripedFamily:
+        key = (table_name, phi)
+        if key not in self._striped:
+            fam = self.families[table_name][phi]
+            self._striped[key] = exec_lib.stripe_family(fam, self._n_shards())
+        return self._striped[key]
+
+    def _encode(self, table_name: str):
+        tbl = self.tables[table_name]
+
+        def encode(col: str, value):
+            if "." in col:   # joined dimension attribute (§2.1)
+                dim_name, dim_col = col.split(".", 1)
+                dim = self.tables[dim_name]
+                if dim.schema.column(dim_col).kind is ColumnKind.CATEGORICAL:
+                    return dim.encode_value(dim_col, value)
+                return float(value)
+            if tbl.schema.column(col).kind is ColumnKind.CATEGORICAL:
+                return tbl.encode_value(col, value)
+            return float(value)
+        return encode
+
+    # ------------------------------------------------------------ joins
+    def _resolve_joins(self, table_name: str, q: Query,
+                       phi: tuple[str, ...] | None = None) -> None:
+        """Materialize joined dimension attributes referenced by q as extra
+        columns ("dim.col") on the fact table AND every affected family
+        (§2.1 case ii: dim tables fit in memory; the join is a gather)."""
+        from repro.core import joins as join_lib
+        if not q.joins:
+            return
+        wanted = [c for c in (q.where_group_columns |
+                              ({q.value_column} if q.value_column else set()))
+                  if "." in c]
+        if not wanted:
+            return
+        fact = self.tables[table_name]
+        by_dim = {j.dim_table: j for j in q.joins}
+        for col in wanted:
+            dim_name, dim_col = col.split(".", 1)
+            join = by_dim[dim_name]
+            dim = self.tables[dim_name]
+            mkey = (table_name, dim_name, join.fact_key)
+            if mkey not in self._fk_maps:
+                self._fk_maps[mkey] = join_lib.build_fk_map(fact, dim, join)
+            fk_map = self._fk_maps[mkey]
+            # fact table (exact path)
+            if col not in fact.columns:
+                fact.columns[col] = join_lib.gather_dim_column(
+                    fk_map, dim, dim_col, fact.columns[join.fact_key])
+            # every family of this table (sampled path)
+            for p, fam in self.families[table_name].items():
+                if col not in fam.columns:
+                    fam.columns[col] = join_lib.gather_dim_column(
+                        fk_map, dim, dim_col, fam.columns[join.fact_key])
+                    self._striped.pop((table_name, p), None)
+                    self._programs = {k: v for k, v in self._programs.items()
+                                      if not (k[0] == table_name and k[1] == p)}
+
+    def _column_card(self, table_name: str, col: str) -> int:
+        if "." in col:
+            dim_name, dim_col = col.split(".", 1)
+            return self.tables[dim_name].cardinality(dim_col)
+        return self.tables[table_name].cardinality(col)
+
+    def _decode_col_value(self, table_name: str, col: str, code: int):
+        if "." in col:
+            dim_name, dim_col = col.split(".", 1)
+            return self.tables[dim_name].decode_value(dim_col, code)
+        return self.tables[table_name].decode_value(col, code)
+
+    def _run_at_k(self, table_name: str, q: Query, phi: tuple[str, ...],
+                  k: float) -> tuple[est_lib.GroupedMoments, int, float]:
+        """One fused scan at resolution k via a cached compiled program.
+        Programs are compiled once per (family × query template) — k and
+        predicate constants are traced args (§2.1 template stability)."""
+        tbl = self.tables[table_name]
+        fam = self.families[table_name][phi]
+        striped = self._striped_for(table_name, phi)
+        bound_pred = exec_lib.bind_predicate(q.predicate, self._encode(table_name))
+        struct, vals = exec_lib.pred_structure(bound_pred)
+        group_col = q.group_by[0] if q.group_by else None
+        n_groups = self._column_card(table_name, group_col) if group_col else 1
+        key = (table_name, phi, struct, q.value_column, group_col, n_groups)
+        fn = self._programs.get(key)
+        if fn is None:
+            fn = exec_lib.make_query_fn(
+                striped, struct, q.value_column, group_col, n_groups,
+                mesh=self.mesh, data_axes=self.data_axes,
+                use_pallas=self.config.use_pallas)
+            # warm the compile outside the timed region
+            jax.tree.map(lambda x: x.block_until_ready(),
+                         fn(jnp.float32(k), vals))
+            self._programs[key] = fn
+        t0 = time.perf_counter()
+        mom = fn(jnp.float32(k), vals)
+        mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+        dt = time.perf_counter() - t0
+        return mom, fam.prefix_for_k(k), dt
+
+    def _answer_from_moments(self, q: Query, table_name: str,
+                             phi: tuple[str, ...], k: float,
+                             mom: est_lib.GroupedMoments, rows_read: int,
+                             elapsed: float, confidence: float) -> Answer:
+        tbl = self.tables[table_name]
+        fam = self.families[table_name][phi]
+        if q.agg is AggOp.QUANTILE:
+            est = self._quantile_estimate(q, table_name, phi, k, mom)
+        else:
+            est = est_lib.estimate(q.agg, mom)
+        stderr, lo, hi = est_lib.ci(est, confidence)
+        group_col = q.group_by[0] if q.group_by else None
+        vals = np.asarray(est.value)
+        errs = np.asarray(stderr)
+        los, his = np.asarray(lo), np.asarray(hi)
+        ns = np.asarray(est.n)
+        wsum = np.asarray(mom.wsum)
+        nsel = np.asarray(mom.n)
+        groups = []
+        for g in range(len(vals)):
+            if nsel[g] == 0 and wsum[g] == 0:
+                continue  # missing subgroup (paper §3.1 "subset error")
+            key = ((self._decode_col_value(table_name, group_col, g),)
+                   if group_col else ())
+            exact = bool(abs(nsel[g] - wsum[g]) < 1e-6 * max(wsum[g], 1.0))
+            groups.append(GroupResult(key, float(vals[g]), float(errs[g]),
+                                      float(los[g]), float(his[g]),
+                                      float(nsel[g]), exact))
+        return Answer(q, groups, phi, k, rows_read, tbl.n_rows, elapsed,
+                      confidence)
+
+    def _quantile_estimate(self, q: Query, table_name: str,
+                           phi: tuple[str, ...], k: float,
+                           mom: est_lib.GroupedMoments) -> est_lib.Estimate:
+        """Grouped weighted quantile needs the raw rows (histogram pass)."""
+        tbl = self.tables[table_name]
+        fam = self.families[table_name][phi]
+        bound_pred = exec_lib.bind_predicate(q.predicate, self._encode(table_name))
+        mask = exec_lib.predicate_mask(fam.columns, bound_pred) & (fam.entry_key < k)
+        rates = fam.rate(k)
+        w = mask.astype(jnp.float32) / rates
+        group_col = q.group_by[0] if q.group_by else None
+        n_groups = self._column_card(table_name, group_col) if group_col else 1
+        g = (fam.columns[group_col].astype(jnp.int32) if group_col
+             else jnp.zeros(fam.n_rows, jnp.int32))
+        qv, dens = exec_lib.grouped_quantile(
+            fam.columns[q.value_column], w, g, n_groups, q.quantile)
+        return est_lib.estimate(AggOp.QUANTILE, mom, quantile_value=qv,
+                                quantile_density=dens, q=q.quantile)
+
+    def query(self, q: Query) -> Answer:
+        """Execute with §4.1 family selection + §4.2 ELP resolution choice."""
+        subqueries = rewrite_disjuncts(q)
+        if len(subqueries) > 1:
+            answers = [self.query(sq) for sq in subqueries]
+            return _union_answers(q, answers)
+
+        table_name = q.table
+        self._resolve_joins(table_name, q)
+        fams = self.families[table_name]
+        cols = q.where_group_columns
+        # Family selection (§4.1): joined dim attributes map to their fk
+        # column — a family stratified on the join key serves them (§2.1.i).
+        fk_of = {j.dim_table: j.fact_key for j in q.joins}
+        sel_cols = set()
+        for c in cols:
+            if "." in c:
+                sel_cols.add(fk_of[c.split(".", 1)[0]])
+            else:
+                sel_cols.add(c)
+        cat_cols = frozenset(
+            c for c in sel_cols
+            if self.tables[table_name].schema.column(c).kind is ColumnKind.CATEGORICAL)
+
+        def probe(phi: tuple[str, ...]) -> tuple[float, float]:
+            fam = fams[phi]
+            k_small = min(fam.ks)
+            mom, rows_read, _ = self._run_at_k(table_name, q, phi, k_small)
+            return float(jnp.sum(mom.n)), float(rows_read)
+
+        selres = select_family(cat_cols, fams, probe)
+        phi = selres.phi
+        fam = fams[phi]
+
+        confidence = q.bound.confidence if q.bound else 0.95
+        ks_asc = sorted(fam.ks)
+        k_probe = ks_asc[0]
+
+        # §4.4 ELP reuse: one probe per (family × template × bound); later
+        # instantiations of the template skip straight to the chosen K.
+        struct, _ = exec_lib.pred_structure(
+            exec_lib.bind_predicate(q.predicate, self._encode(table_name)))
+        elp_key = (table_name, phi, struct, q.agg, q.value_column,
+                   q.group_by, repr(q.bound))
+        if self.config.reuse_elp and elp_key in self._elp_cache:
+            k_q = self._elp_cache[elp_key]
+            mom, rows_read, dt = self._run_at_k(table_name, q, phi, k_q)
+            return self._answer_from_moments(q, table_name, phi, k_q, mom,
+                                             rows_read, dt, confidence)
+
+        if isinstance(q.bound, ErrorBound):
+            mom, rows_read, dt = self._run_at_k(table_name, q, phi, k_probe)
+            est = (self._quantile_estimate(q, table_name, phi, k_probe, mom)
+                   if q.agg is AggOp.QUANTILE else est_lib.estimate(q.agg, mom))
+            n_req = np.asarray(est_lib.required_n_for_error(
+                q.agg, est, q.bound.eps, confidence, q.bound.relative))
+            k_q = elp_lib.pick_k_for_error(fam, np.asarray(est.n), n_req, k_probe)
+        elif isinstance(q.bound, TimeBound):
+            probes = elp_lib.run_probes(
+                fam,
+                lambda k: (lambda m, r, t: (float(jnp.sum(m.n)), t))(
+                    *self._run_at_k(table_name, q, phi, k)),
+                n_probes=self.config.probe_resolutions)
+            model = elp_lib.fit_latency([p.rows_read for p in probes],
+                                        [p.elapsed_s for p in probes])
+            self._latency[(table_name, phi)] = model
+            k_q = elp_lib.pick_k_for_time(fam, model, q.bound.seconds)
+        else:
+            k_q = fam.ks[0]  # no bound: most accurate available sample
+
+        self._elp_cache[elp_key] = k_q
+        mom, rows_read, dt = self._run_at_k(table_name, q, phi, k_q)
+        return self._answer_from_moments(q, table_name, phi, k_q, mom,
+                                         rows_read, dt, confidence)
+
+    def exact_query(self, q: Query) -> Answer:
+        """Ground truth: run the aggregation over the FULL table (rate=1),
+        via a cached compiled program (fair timing baseline for E1)."""
+        tbl = self.tables[q.table]
+        self._resolve_joins(q.table, q)
+        bound_pred = exec_lib.bind_predicate(q.predicate, self._encode(q.table))
+        struct, vals = exec_lib.pred_structure(bound_pred)
+        group_col = q.group_by[0] if q.group_by else None
+        n_groups = self._column_card(q.table, group_col) if group_col else 1
+        key = (q.table, struct, q.value_column, group_col, n_groups)
+        fn = self._exact_programs.get(key)
+        if fn is None:
+            cols = tbl.columns
+
+            def build(pred_vals):
+                any_col = next(iter(cols.values()))
+                if struct:
+                    disj = jnp.zeros(any_col.shape, dtype=bool)
+                    for conj_s, conj_v in zip(struct, pred_vals):
+                        m = jnp.ones(any_col.shape, dtype=bool)
+                        for (col, op), val in zip(conj_s, conj_v):
+                            m = m & exec_lib._CMP[op](
+                                cols[col].astype(jnp.float32),
+                                jnp.asarray(val, jnp.float32))
+                        disj = disj | m
+                else:
+                    disj = jnp.ones(any_col.shape, bool)
+                ones_ = jnp.ones(tbl.n_rows, jnp.float32)
+                values_ = (cols[q.value_column].astype(jnp.float32)
+                           if q.value_column else ones_)
+                g_ = (cols[group_col].astype(jnp.int32) if group_col
+                      else jnp.zeros(tbl.n_rows, jnp.int32))
+                return est_lib.grouped_moments(values_, ones_, disj, g_,
+                                               n_groups)
+            fn = jax.jit(build)
+            jax.tree.map(lambda x: x.block_until_ready(), fn(vals))
+            self._exact_programs[key] = fn
+
+        ones = jnp.ones(tbl.n_rows, jnp.float32)
+        mask = exec_lib.predicate_mask(tbl.columns, bound_pred)
+        values = (tbl.columns[q.value_column].astype(jnp.float32)
+                  if q.value_column else ones)
+        g = (tbl.columns[group_col].astype(jnp.int32) if group_col
+             else jnp.zeros(tbl.n_rows, jnp.int32))
+        t0 = time.perf_counter()
+        mom = fn(vals)
+        mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+        if q.agg is AggOp.QUANTILE:
+            qv, dens = exec_lib.grouped_quantile(
+                values, mask.astype(jnp.float32), g, n_groups, q.quantile)
+            est = est_lib.estimate(AggOp.QUANTILE, mom, quantile_value=qv,
+                                   quantile_density=dens, q=q.quantile)
+        else:
+            est = est_lib.estimate(q.agg, mom)
+        est.value.block_until_ready()
+        dt = time.perf_counter() - t0
+        vals = np.asarray(est.value)
+        ns = np.asarray(est.n)
+        groups = []
+        for gidx in range(len(vals)):
+            if ns[gidx] == 0:
+                continue
+            key = ((self._decode_col_value(q.table, group_col, gidx),)
+                   if group_col else ())
+            groups.append(GroupResult(key, float(vals[gidx]), 0.0,
+                                      float(vals[gidx]), float(vals[gidx]),
+                                      float(ns[gidx]), True))
+        return Answer(q, groups, ("<exact>",), float("inf"), tbl.n_rows,
+                      tbl.n_rows, dt, 1.0)
+
+
+def _union_answers(q: Query, answers: list[Answer]) -> Answer:
+    """Combine disjunct sub-answers (§4.1.2): sums/counts add; variances add.
+    (Disjuncts may overlap in general; BlinkDB's rewrite assumes disjoint or
+    inclusion-exclusion handled upstream — we document the disjoint case.)"""
+    by_key: dict[tuple, GroupResult] = {}
+    for a in answers:
+        for g in a.groups:
+            if g.key in by_key:
+                prev = by_key[g.key]
+                var = prev.stderr ** 2 + g.stderr ** 2
+                merged = GroupResult(
+                    g.key, prev.estimate + g.estimate, var ** 0.5, 0.0, 0.0,
+                    prev.n_selected + g.n_selected, prev.exact and g.exact)
+                by_key[g.key] = merged
+            else:
+                by_key[g.key] = g
+    z = est_lib.z_value(answers[0].confidence)
+    groups = []
+    for g in by_key.values():
+        g.ci_low = g.estimate - z * g.stderr
+        g.ci_high = g.estimate + z * g.stderr
+        groups.append(g)
+    return Answer(q, groups, answers[0].sample_phi, answers[0].sample_k,
+                  sum(a.rows_read for a in answers), answers[0].rows_total,
+                  sum(a.elapsed_s for a in answers), answers[0].confidence)

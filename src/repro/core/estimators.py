@@ -1,0 +1,115 @@
+"""Closed-form aggregate estimators with error bars (paper Table 2 + §4.3).
+
+Estimates are Horvitz–Thompson corrected: every sampled row i carries an exact
+inclusion probability rate_i = min(1, K/F_i); HT weight w_i = 1/rate_i. With
+Poisson stratification the HT estimator of a population total is unbiased and
+its variance has the closed form  Var = Σ (1-rate_i)/rate_i² · x_i²  which we
+estimate from the sample itself. For uniform samples (rate ≡ p) this reduces
+to the paper's Table-2 expressions; tests verify both forms agree.
+
+All estimators are fully vectorized over groups (segment reductions over
+dictionary-encoded group codes) and jit-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+from repro.core.types import AggOp
+
+
+def z_value(confidence: float) -> float:
+    """Two-sided normal quantile, e.g. 0.95 -> 1.96."""
+    return float(ndtri(0.5 + confidence / 2.0))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GroupedMoments:
+    """Per-group sufficient statistics from one sample scan.
+
+    Everything downstream (estimates, variances, ELP projection) derives from
+    these five segment-reductions — one fused pass over the scanned prefix.
+    """
+    n: jax.Array           # f32[G] selected rows (unweighted)
+    wsum: jax.Array        # f32[G] Σ w_i                (HT count)
+    wxsum: jax.Array       # f32[G] Σ w_i x_i            (HT sum)
+    wx2sum: jax.Array      # f32[G] Σ w_i x_i²
+    var_count: jax.Array   # f32[G] Σ (1-r_i)/r_i²       (HT count variance)
+    var_sum: jax.Array     # f32[G] Σ (1-r_i)/r_i² x_i   (cross term)
+    var_sum2: jax.Array    # f32[G] Σ (1-r_i)/r_i² x_i²  (HT sum variance)
+
+
+def grouped_moments(values: jax.Array, rates: jax.Array, mask: jax.Array,
+                    group_codes: jax.Array, n_groups: int) -> GroupedMoments:
+    """Segment-reduce the sufficient statistics (pure-jnp reference path;
+    the Pallas kernel in kernels/agg_scan.py computes the same)."""
+    m = mask.astype(jnp.float32)
+    w = m / rates
+    x = values.astype(jnp.float32)
+    g = group_codes
+    vfac = m * (1.0 - rates) / (rates * rates)
+
+    def seg(v):
+        return jax.ops.segment_sum(v, g, num_segments=n_groups)
+
+    return GroupedMoments(
+        n=seg(m), wsum=seg(w), wxsum=seg(w * x), wx2sum=seg(w * x * x),
+        var_count=seg(vfac), var_sum=seg(vfac * x), var_sum2=seg(vfac * x * x))
+
+
+@dataclasses.dataclass
+class Estimate:
+    value: jax.Array    # f32[G] point estimates
+    variance: jax.Array  # f32[G] estimator variance (Table 2 / HT closed form)
+    n: jax.Array        # f32[G] selected sample rows
+
+
+def estimate(agg: AggOp, mom: GroupedMoments, *, quantile_value: jax.Array | None = None,
+             quantile_density: jax.Array | None = None, q: float = 0.5) -> Estimate:
+    """Point estimate + variance per group for a Table-2 aggregate."""
+    eps = 1e-12
+    if agg is AggOp.COUNT:
+        # HT count: Σ 1/r_i ; Var = Σ (1-r)/r².  (Uniform r≡p ⇒ N²c(1-c)/n.)
+        return Estimate(mom.wsum, mom.var_count, mom.n)
+    if agg is AggOp.SUM:
+        return Estimate(mom.wxsum, mom.var_sum2, mom.n)
+    if agg is AggOp.AVG:
+        # Ratio estimator: Σwx / Σw. Delta-method variance:
+        #   Var(Â) ≈ (Var(S) - 2Â Cov(S,C) + Â² Var(C)) / C²
+        c = jnp.maximum(mom.wsum, eps)
+        a = mom.wxsum / c
+        var = (mom.var_sum2 - 2.0 * a * mom.var_sum + a * a * mom.var_count) / (c * c)
+        return Estimate(a, jnp.maximum(var, 0.0), mom.n)
+    if agg is AggOp.QUANTILE:
+        # Table 2: Var = p(1-p) / (n f(x_p)²), with f estimated from the
+        # sample histogram (executor supplies value + density per group).
+        assert quantile_value is not None and quantile_density is not None
+        n = jnp.maximum(mom.n, 1.0)
+        f2 = jnp.maximum(quantile_density, eps) ** 2
+        var = q * (1.0 - q) / (n * f2)
+        return Estimate(quantile_value, var, mom.n)
+    raise ValueError(f"unsupported aggregate {agg}")
+
+
+def required_n_for_error(agg: AggOp, est: Estimate, bound_eps: float,
+                         confidence: float, relative: bool) -> jax.Array:
+    """ELP error-profile projection (paper §4.2): smallest number of selected
+    rows n so the CI half-width meets the bound, using Var ∝ 1/n scaling from
+    the probe estimate."""
+    z = z_value(confidence)
+    target_half = bound_eps * jnp.abs(est.value) if relative else bound_eps
+    target_var = (target_half / z) ** 2
+    cur_n = jnp.maximum(est.n, 1.0)
+    # Var(n) ≈ Var_probe · n_probe / n  ⇒  n_req = n_probe · Var_probe / Var_target
+    return cur_n * est.variance / jnp.maximum(target_var, 1e-30)
+
+
+def ci(est: Estimate, confidence: float) -> tuple[jax.Array, jax.Array, jax.Array]:
+    z = z_value(confidence)
+    stderr = jnp.sqrt(jnp.maximum(est.variance, 0.0))
+    return stderr, est.value - z * stderr, est.value + z * stderr

@@ -1,0 +1,260 @@
+"""Distributed query execution over sample families.
+
+A query executes as ONE fused pass over the prefix S(φ, K) of a materialized
+family: predicate evaluation → HT weighting → grouped segment reduction of the
+sufficient statistics (GroupedMoments). On a mesh the prefix rows are
+round-robin striped over the `data` axis (every shard holds an equal slice of
+*every* prefix — DESIGN.md §2) and the per-shard partials are `psum`'d; on a
+single device the same code runs without the shard_map wrapper.
+
+The per-shard inner loop has two interchangeable implementations:
+  * `ref` — pure jnp (jax.ops.segment_sum), the oracle;
+  * `pallas` — the fused VMEM-tiled scan kernel (kernels/agg_scan.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import estimators as est_lib
+from repro.core.sampling import SampleFamily
+from repro.core.types import AggOp, Atom, CmpOp, Conjunction, Predicate
+
+_CMP = {
+    CmpOp.EQ: jnp.equal, CmpOp.NE: jnp.not_equal,
+    CmpOp.LT: jnp.less, CmpOp.LE: jnp.less_equal,
+    CmpOp.GT: jnp.greater, CmpOp.GE: jnp.greater_equal,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundAtom:
+    """Atom with its value encoded to device-comparable form."""
+    column: str
+    op: CmpOp
+    encoded: float
+
+
+def bind_predicate(pred: Predicate, encode) -> tuple[tuple[BoundAtom, ...], ...]:
+    """Encode predicate constants via `encode(column, value) -> float`."""
+    return tuple(
+        tuple(BoundAtom(a.column, a.op, float(encode(a.column, a.value)))
+              for a in conj.atoms)
+        for conj in pred.disjuncts)
+
+
+def predicate_mask(columns: dict[str, jax.Array],
+                   bound: tuple[tuple[BoundAtom, ...], ...]) -> jax.Array:
+    """Evaluate a DNF predicate over column arrays -> bool[n]."""
+    any_col = next(iter(columns.values()))
+    disj = jnp.zeros(any_col.shape, dtype=bool)
+    for conj in bound:
+        m = jnp.ones(any_col.shape, dtype=bool)
+        for a in conj:
+            col = columns[a.column]
+            m = m & _CMP[a.op](col.astype(jnp.float32), a.encoded)
+        disj = disj | m
+    return disj
+
+
+# ---------------------------------------------------------------------------
+# Single-shard fused pass (reference implementation; Pallas path in kernels/)
+# ---------------------------------------------------------------------------
+
+def scan_moments(columns: dict[str, jax.Array], freq: jax.Array,
+                 bound_pred: tuple[tuple[BoundAtom, ...], ...],
+                 value_col: str | None, group_col: str | None, n_groups: int,
+                 k: float, prefix_mask: jax.Array,
+                 *, use_pallas: bool = False) -> est_lib.GroupedMoments:
+    """One fused scan over (a shard of) a family prefix."""
+    mask = predicate_mask(columns, bound_pred) & prefix_mask
+    rates = jnp.minimum(1.0, k / freq)
+    values = (columns[value_col].astype(jnp.float32)
+              if value_col is not None else jnp.ones_like(freq))
+    gcodes = (columns[group_col].astype(jnp.int32)
+              if group_col is not None else jnp.zeros(freq.shape, jnp.int32))
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.agg_scan(values, rates, mask, gcodes, n_groups)
+    return est_lib.grouped_moments(values, rates, mask, gcodes, n_groups)
+
+
+def _merge_psum(mom: est_lib.GroupedMoments, axes) -> est_lib.GroupedMoments:
+    return jax.tree.map(lambda x: jax.lax.psum(x, axes), mom)
+
+
+# ---------------------------------------------------------------------------
+# Striped (distributed) family layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StripedFamily:
+    """A SampleFamily striped round-robin over data shards.
+
+    Row j of the sorted family lives at shard (j % S), local index (j // S);
+    a prefix of length n touches ceil(n/S) local rows on every shard: perfect
+    load balance for every resolution.
+    """
+    phi: tuple[str, ...]
+    ks: tuple[float, ...]
+    columns: dict[str, jax.Array]   # [S, n_local] (padded)
+    freq: jax.Array                 # f32[S, n_local]
+    entry_key: jax.Array            # f32[S, n_local]
+    valid: jax.Array                # bool[S, n_local] (padding mask)
+    n_rows: int
+    table_rows: int
+    n_shards: int
+
+
+def stripe_family(fam: SampleFamily, n_shards: int) -> StripedFamily:
+    n = fam.n_rows
+    n_local = -(-n // n_shards)
+    pad = n_local * n_shards - n
+
+    def reshape(arr, fill):
+        a = np.asarray(arr)
+        a = np.concatenate([a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
+        return jnp.asarray(a.reshape(n_local, n_shards).T)  # [S, n_local]
+
+    cols = {c: reshape(v, 0) for c, v in fam.columns.items()}
+    freq = reshape(fam.freq, 1.0)
+    ek = reshape(fam.entry_key, np.inf)
+    valid = reshape(np.ones(n, dtype=bool), False)
+    return StripedFamily(fam.phi, fam.ks, cols, freq, ek, valid,
+                         n, fam.table_rows, n_shards)
+
+
+def run_query_striped(striped: StripedFamily, bound_pred, value_col: str | None,
+                      group_col: str | None, n_groups: int, k: float,
+                      mesh: Mesh | None = None, data_axes: tuple[str, ...] = ("data",),
+                      use_pallas: bool = False) -> est_lib.GroupedMoments:
+    """Un-jitted execution (tests / one-off). Production path: make_query_fn."""
+
+    def shard_fn(cols, freq, ek, valid):
+        prefix = valid & (ek < k)
+        return scan_moments(cols, freq, bound_pred, value_col, group_col,
+                            n_groups, k, prefix, use_pallas=use_pallas)
+
+    if mesh is None:
+        mom = jax.vmap(shard_fn)(striped.columns, striped.freq,
+                                 striped.entry_key, striped.valid)
+        return jax.tree.map(lambda x: x.sum(axis=0), mom)
+
+    pspec = P(data_axes)
+    fn = jax.shard_map(
+        lambda c, f, e, v: _merge_psum(
+            jax.tree.map(lambda x: x[0], jax.vmap(shard_fn)(c, f, e, v)),
+            data_axes),
+        mesh=mesh,
+        in_specs=(pspec, pspec, pspec, pspec),
+        out_specs=P(),
+    )
+    return fn(striped.columns, striped.freq, striped.entry_key, striped.valid)
+
+
+def pred_structure(bound: tuple[tuple[BoundAtom, ...], ...]):
+    """Split a bound predicate into (static structure, traced constants):
+    structure = ((column, op), ...) per conjunction; constants = matching
+    nested tuple of floats. Lets ONE jitted query program serve every
+    instantiation of a template (paper §2.1: template-stable workloads)."""
+    struct = tuple(tuple((a.column, a.op) for a in conj) for conj in bound)
+    vals = tuple(tuple(a.encoded for a in conj) for conj in bound)
+    return struct, vals
+
+
+def make_query_fn(striped: StripedFamily, struct, value_col: str | None,
+                  group_col: str | None, n_groups: int,
+                  mesh: Mesh | None = None,
+                  data_axes: tuple[str, ...] = ("data",),
+                  use_pallas: bool = False):
+    """Compile the fused query program once per (family × template).
+    Returns jitted fn(k, pred_vals) -> GroupedMoments; k and the predicate
+    constants are traced, so re-instantiations don't retrace."""
+
+    def eval_pred(cols, pred_vals):
+        any_col = next(iter(cols.values()))
+        if not struct:
+            return jnp.ones(any_col.shape, bool)
+        disj = jnp.zeros(any_col.shape, dtype=bool)
+        for conj_s, conj_v in zip(struct, pred_vals):
+            m = jnp.ones(any_col.shape, dtype=bool)
+            for (col, op), val in zip(conj_s, conj_v):
+                m = m & _CMP[op](cols[col].astype(jnp.float32),
+                                 jnp.asarray(val, jnp.float32))
+            disj = disj | m
+        return disj
+
+    def shard_fn(k, pred_vals, cols, freq, ek, valid):
+        mask = eval_pred(cols, pred_vals) & valid & (ek < k)
+        rates = jnp.minimum(1.0, k / freq)
+        values = (cols[value_col].astype(jnp.float32)
+                  if value_col is not None else jnp.ones_like(freq))
+        gcodes = (cols[group_col].astype(jnp.int32)
+                  if group_col is not None else jnp.zeros(freq.shape, jnp.int32))
+        if use_pallas:
+            from repro.kernels import ops as kops
+            return kops.agg_scan(values, rates, mask, gcodes, n_groups)
+        return est_lib.grouped_moments(values, rates, mask, gcodes, n_groups)
+
+    if mesh is None:
+        def fn(k, pred_vals):
+            mom = jax.vmap(lambda c, f, e, v: shard_fn(k, pred_vals, c, f, e, v)
+                           )(striped.columns, striped.freq,
+                             striped.entry_key, striped.valid)
+            return jax.tree.map(lambda x: x.sum(axis=0), mom)
+        return jax.jit(fn)
+
+    pspec = P(data_axes)
+
+    def fn(k, pred_vals):
+        inner = jax.shard_map(
+            lambda c, f, e, v: _merge_psum(
+                jax.tree.map(lambda x: x[0],
+                             jax.vmap(lambda cc, ff, ee, vv: shard_fn(
+                                 k, pred_vals, cc, ff, ee, vv))(c, f, e, v)),
+                data_axes),
+            mesh=mesh,
+            in_specs=(pspec, pspec, pspec, pspec),
+            out_specs=P(),
+        )
+        return inner(striped.columns, striped.freq, striped.entry_key,
+                     striped.valid)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Grouped weighted quantiles (histogram method, Table 2 variance)
+# ---------------------------------------------------------------------------
+
+def grouped_quantile(values: jax.Array, weights: jax.Array, gcodes: jax.Array,
+                     n_groups: int, q: float, n_bins: int = 256,
+                     lo: float | None = None, hi: float | None = None):
+    """Weighted per-group quantile via a fixed-bin histogram + interpolation.
+    Returns (quantile_value[G], density_at_quantile[G]) for Table-2 variance."""
+    v = values.astype(jnp.float32)
+    lo_ = jnp.asarray(lo if lo is not None else jnp.min(jnp.where(weights > 0, v, jnp.inf)))
+    hi_ = jnp.asarray(hi if hi is not None else jnp.max(jnp.where(weights > 0, v, -jnp.inf)))
+    span = jnp.maximum(hi_ - lo_, 1e-12)
+    bins = jnp.clip(((v - lo_) / span * n_bins).astype(jnp.int32), 0, n_bins - 1)
+    flat = gcodes.astype(jnp.int32) * n_bins + bins
+    hist = jax.ops.segment_sum(weights, flat, num_segments=n_groups * n_bins)
+    hist = hist.reshape(n_groups, n_bins)
+    cum = jnp.cumsum(hist, axis=1)
+    total = jnp.maximum(cum[:, -1:], 1e-12)
+    cdf = cum / total
+    # first bin where cdf >= q
+    idx = jnp.argmax(cdf >= q, axis=1)
+    bin_w = span / n_bins
+    left_edge = lo_ + idx * bin_w
+    prev_cdf = jnp.where(idx > 0, jnp.take_along_axis(cdf, jnp.maximum(idx - 1, 0)[:, None], 1)[:, 0], 0.0)
+    bin_mass = jnp.take_along_axis(cdf, idx[:, None], 1)[:, 0] - prev_cdf
+    frac = jnp.where(bin_mass > 1e-12, (q - prev_cdf) / jnp.maximum(bin_mass, 1e-12), 0.5)
+    qval = left_edge + frac * bin_w
+    density = jnp.take_along_axis(hist, idx[:, None], 1)[:, 0] / (total[:, 0] * bin_w)
+    return qval, density

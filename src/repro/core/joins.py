@@ -1,0 +1,59 @@
+"""Joins (paper §2.1, case ii): a sampled fact table joined to unsampled
+dimension tables that fit in memory.
+
+BlinkDB's common case: one large denormalized fact table (sampled) joined by
+foreign key to small dimension tables (customers, media, locations — never
+sampled). We implement it TPU-natively: the join is a device-side gather —
+`dim_col[fk_map[fact_fk_codes]]` — executed over the family's rows, so every
+stratified/uniform sample family transparently answers queries whose
+predicates or GROUP BY reference dimension attributes. (Case i — joins
+through a stratified sample containing the join key — reduces to the same
+gather applied to the key-stratified family.)
+
+The fk→row mapping is built host-side once per (fact, dim) pair by aligning
+dictionary values (the offline path, like sample creation), then cached.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import table as table_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Join:
+    dim_table: str   # registered dimension table (fits in memory — §2.1)
+    fact_key: str    # categorical fk column on the fact table
+    dim_key: str     # matching key column on the dimension table
+
+
+def build_fk_map(fact: table_lib.Table, dim: table_lib.Table,
+                 join: Join) -> np.ndarray:
+    """fact_fk_code -> dim row index (−1 for dangling keys)."""
+    fact_vals = fact.dictionaries[join.fact_key]
+    dim_codes = np.asarray(dim.columns[join.dim_key])
+    dim_vals = dim.dictionaries[join.dim_key]
+    # dim row index per dim key value
+    val_to_row = {}
+    for row, code in enumerate(dim_codes):
+        val_to_row.setdefault(dim_vals[code], row)
+    out = np.full(len(fact_vals), -1, dtype=np.int32)
+    for code, v in enumerate(fact_vals):
+        out[code] = val_to_row.get(v, -1)
+    return out
+
+
+def gather_dim_column(fk_map: np.ndarray, dim: table_lib.Table,
+                      dim_col: str, fact_fk_codes: jax.Array) -> jax.Array:
+    """Join gather for one dimension attribute over (sampled) fact rows."""
+    rows = jnp.take(jnp.asarray(fk_map), fact_fk_codes, axis=0)
+    safe = jnp.maximum(rows, 0)
+    vals = jnp.take(dim.columns[dim_col], safe, axis=0)
+    # dangling keys -> sentinel (-1 for codes / 0.0 for measures)
+    if dim.columns[dim_col].dtype == jnp.int32:
+        return jnp.where(rows >= 0, vals, -1)
+    return jnp.where(rows >= 0, vals, 0.0)

@@ -1,0 +1,114 @@
+"""Sample maintenance (paper §4.5 + §3.2.3).
+
+Periodically: (1) detect data/workload drift, (2) re-run the §3.2 optimizer
+with the Eq.-5 change budget r, (3) regenerate affected families with fresh
+randomness in a low-priority background task and atomically swap them in.
+
+On a real cluster the regeneration runs as a background jit program on idle
+pod slices; here the scheduler is a thread so the mechanics (atomic swap,
+change budget, drift triggers) are fully testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import sampling as samp_lib
+from repro.core import table as table_lib
+from repro.core.engine import BlinkDB
+from repro.core.types import QueryTemplate
+
+
+def distribution_drift(old_freqs: np.ndarray, new_freqs: np.ndarray) -> float:
+    """Total-variation distance between two stratum-frequency histograms
+    (aligned by truncation/padding). Drift trigger metric."""
+    n = max(len(old_freqs), len(new_freqs))
+    a = np.zeros(n); a[: len(old_freqs)] = old_freqs
+    b = np.zeros(n); b[: len(new_freqs)] = new_freqs
+    pa = a / max(a.sum(), 1.0)
+    pb = b / max(b.sum(), 1.0)
+    return float(0.5 * np.abs(pa - pb).sum())
+
+
+@dataclasses.dataclass
+class MaintenanceConfig:
+    drift_threshold: float = 0.05     # TV distance triggering re-optimization
+    change_fraction: float = 0.3      # Eq. 5 r: ≤30% of sample bytes may churn
+    period_s: float = 86400.0         # paper: daily
+
+
+class SampleMaintainer:
+    """Background maintenance driver for one BlinkDB instance."""
+
+    def __init__(self, db: BlinkDB, table_name: str,
+                 templates: Sequence[QueryTemplate],
+                 config: MaintenanceConfig | None = None):
+        self.db = db
+        self.table_name = table_name
+        self.templates = list(templates)
+        self.config = config or MaintenanceConfig()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.epochs = 0
+
+    # -- drift detection -----------------------------------------------------
+    def check_drift(self, new_table: table_lib.Table) -> dict[tuple[str, ...], float]:
+        """TV drift per existing family between old stats and the new data."""
+        out = {}
+        for phi, fam in self.db.families[self.table_name].items():
+            if not phi:
+                continue
+            codes, _ = table_lib.combined_codes(new_table, phi)
+            nd = int(codes.max()) + 1 if len(codes) else 0
+            new_f = table_lib.stratum_frequencies(codes, nd)
+            out[phi] = distribution_drift(fam.stratum_freqs, new_f)
+        return out
+
+    # -- one maintenance epoch -------------------------------------------------
+    def run_epoch(self, new_table: table_lib.Table | None = None,
+                  new_templates: Sequence[QueryTemplate] | None = None) -> dict:
+        """Apply new data/workload; resample (fresh seed) families whose drift
+        exceeds the threshold; re-run the optimizer under the change budget."""
+        if new_templates is not None:
+            self.templates = list(new_templates)
+        tbl = new_table if new_table is not None else self.db.tables[self.table_name]
+        drift = self.check_drift(tbl) if new_table is not None else {}
+        if new_table is not None:
+            self.db.register_table(self.table_name, new_table)
+            self.db._striped.clear()
+
+        stale = [phi for phi, d in drift.items()
+                 if d > self.config.drift_threshold]
+        self.epochs += 1
+        # Fresh randomness on resample: offline-sampling staleness fix (§2.1).
+        self.db.config.seed = self.db.config.seed + 1
+        sol = self.db.build_samples(
+            self.table_name, self.templates,
+            storage_budget_fraction=0.5,
+            change_fraction=self.config.change_fraction)
+        # Force-regenerate drifted families that survived selection.
+        for phi in stale:
+            if phi in self.db.families[self.table_name]:
+                self.db.add_family(self.table_name, phi)
+        return {"drift": drift, "rebuilt": stale, "objective": sol.objective,
+                "storage": sol.storage_used}
+
+    # -- background thread (low-priority task per §4.5) -----------------------
+    def start(self, period_s: float | None = None) -> None:
+        period = period_s if period_s is not None else self.config.period_s
+
+        def loop():
+            while not self._stop.wait(period):
+                self.run_epoch()
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5.0)

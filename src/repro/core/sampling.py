@@ -1,0 +1,199 @@
+"""Multi-dimensional, multi-resolution stratified sample families (paper §3.1).
+
+TPU-native adaptation (DESIGN.md §2):
+
+A family SFam(φ) is materialized as ONE compacted table whose rows are sorted
+by `entry_key = u * F(x)` where `u ~ U[0,1)` is a per-row random priority and
+`F(x)` the row's stratum frequency on φ. Membership in S(φ, K) is exactly
+`entry_key < K` (u < min(1, K/F)), so:
+
+  * resolutions are nested (paper Fig 3/4) by construction,
+  * S(φ, K) is a *prefix* of the materialized family — a smaller resolution
+    scans strictly fewer bytes (the TPU analogue of Fig 4's HDFS block
+    nesting), and
+  * the per-row inclusion probability rate(row, K) = min(1, K/F) is exact,
+    giving unbiased Horvitz–Thompson estimates (§4.3).
+
+This is Poisson (expected-K) stratification: E[|stratum ∩ S|] = min(F, K).
+The paper's exact-K variant is provided as `stratified_exact_k` (host
+reference) — see DESIGN.md "assumption changes" for why Poisson is the
+distributed-TPU-native choice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import table as table_lib
+from repro.core.types import ColumnKind
+
+
+@dataclasses.dataclass
+class SampleFamily:
+    """Materialized SFam(φ): the largest sample + metadata for all resolutions."""
+    phi: tuple[str, ...]              # stratification columns (sorted)
+    ks: tuple[float, ...]             # resolutions, descending: K_1 > K_1/c > ...
+    columns: dict[str, jax.Array]     # sampled rows, sorted by entry_key
+    freq: jax.Array                   # f32[n] stratum frequency F(x) per row
+    entry_key: jax.Array              # f32[n] = u * F(x), ascending
+    prefix_sizes: tuple[int, ...]     # |S(φ, K_i)| for each K_i (row counts)
+    n_rows: int                       # rows materialized (= prefix_sizes[0])
+    table_rows: int                   # rows in the original table
+    n_distinct: int                   # |D(φ)|
+    stratum_freqs: np.ndarray         # F per distinct value (host, for Δ/stats)
+
+    @property
+    def k1(self) -> float:
+        return self.ks[0]
+
+    def prefix_for_k(self, k: float) -> int:
+        """Rows to scan for resolution cap k (searchsorted on entry_key)."""
+        return int(np.searchsorted(np.asarray(self.entry_key), k, side="left"))
+
+    def rate(self, k: float) -> jax.Array:
+        """Per-row inclusion probability at resolution k (HT weights = 1/rate)."""
+        return jnp.minimum(1.0, k / self.freq)
+
+    def storage_bytes(self, row_bytes: int) -> int:
+        # +8: the f32 freq and entry_key bookkeeping columns.
+        return self.n_rows * (row_bytes + 8)
+
+
+def resolution_caps(k1: float, c: float, m: int) -> tuple[float, ...]:
+    """K_i = K_1 / c^i, i in [0, m) (paper §3.1)."""
+    return tuple(k1 / (c ** i) for i in range(m))
+
+
+def expected_sample_rows(stratum_freqs: np.ndarray, k: float) -> float:
+    """E[|S(φ,K)|] = Σ_x min(F(x), K) — exact for Poisson stratification."""
+    return float(np.minimum(stratum_freqs, k).sum())
+
+
+def build_family(tbl: table_lib.Table, phi: Sequence[str], k1: float,
+                 c: float = 2.0, m: int | None = None, *,
+                 seed: int = 0) -> SampleFamily:
+    """Construct SFam(φ) from a table (offline sample creation, §2.2.1)."""
+    phi = tuple(sorted(phi))
+    for col in phi:
+        if tbl.schema.column(col).kind is not ColumnKind.CATEGORICAL:
+            raise ValueError(f"stratification column {col!r} must be categorical")
+    codes, _ = table_lib.combined_codes(tbl, phi)
+    n_distinct = int(codes.max()) + 1 if len(codes) else 0
+    freqs = table_lib.stratum_frequencies(codes, n_distinct)
+
+    if m is None:
+        m = max(1, int(math.floor(math.log(max(k1, 2.0), c))))
+    ks = resolution_caps(k1, c, m)
+
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.uniform(key, (tbl.n_rows,), dtype=jnp.float32,
+                           minval=1e-7, maxval=1.0)
+    row_freq = jnp.asarray(freqs, dtype=jnp.float32)[jnp.asarray(codes)]
+    entry_key = u * row_freq
+
+    keep = np.asarray(entry_key) < k1
+    order = np.argsort(np.asarray(entry_key)[keep], kind="stable")
+    idx = np.nonzero(keep)[0][order]
+
+    cols = {name: jnp.asarray(np.asarray(arr)[idx]) for name, arr in tbl.columns.items()}
+    fam_freq = jnp.asarray(np.asarray(row_freq)[idx])
+    fam_entry = jnp.asarray(np.asarray(entry_key)[idx])
+    ek = np.asarray(fam_entry)
+    prefixes = tuple(int(np.searchsorted(ek, k, side="left")) for k in ks)
+
+    return SampleFamily(
+        phi=phi, ks=ks, columns=cols, freq=fam_freq, entry_key=fam_entry,
+        prefix_sizes=prefixes, n_rows=int(idx.size), table_rows=tbl.n_rows,
+        n_distinct=n_distinct, stratum_freqs=freqs)
+
+
+def build_uniform_family(tbl: table_lib.Table, fraction: float, c: float = 2.0,
+                         m: int | None = None, *, seed: int = 0) -> SampleFamily:
+    """Uniform family R(p): stratification on φ=∅ — one stratum of size N,
+    K_1 = p·N. rate = K/N = sampling fraction; entry_key = u·N."""
+    n = tbl.n_rows
+    k1 = fraction * n
+    if m is None:
+        m = max(1, int(math.floor(math.log(max(k1, 2.0), c))))
+    ks = resolution_caps(k1, c, m)
+    key = jax.random.PRNGKey(seed ^ 0x5EED)
+    u = np.asarray(jax.random.uniform(key, (n,), dtype=jnp.float32,
+                                      minval=1e-7, maxval=1.0))
+    entry_key = u * n
+    keep = entry_key < k1
+    order = np.argsort(entry_key[keep], kind="stable")
+    idx = np.nonzero(keep)[0][order]
+    cols = {name: jnp.asarray(np.asarray(arr)[idx]) for name, arr in tbl.columns.items()}
+    ek = entry_key[idx]
+    prefixes = tuple(int(np.searchsorted(ek, k, side="left")) for k in ks)
+    return SampleFamily(
+        phi=(), ks=ks, columns=cols,
+        freq=jnp.full((idx.size,), float(n), dtype=jnp.float32),
+        entry_key=jnp.asarray(ek.astype(np.float32)),
+        prefix_sizes=prefixes, n_rows=int(idx.size), table_rows=n,
+        n_distinct=1, stratum_freqs=np.array([n], dtype=np.int64))
+
+
+def stratified_exact_k(tbl: table_lib.Table, phi: Sequence[str], k: int, *,
+                       seed: int = 0) -> dict[str, np.ndarray]:
+    """Paper-faithful exact-K stratified sample (host reference): for every
+    distinct x of φ keep all rows if F(x) <= K else exactly K uniform rows.
+    Returns host columns plus `_rate` (per-row sampling rate, §4.3)."""
+    codes, _ = table_lib.combined_codes(tbl, phi)
+    n_distinct = int(codes.max()) + 1 if len(codes) else 0
+    freqs = table_lib.stratum_frequencies(codes, n_distinct)
+    rng = np.random.default_rng(seed)
+    prio = rng.random(tbl.n_rows)
+    # Rank within stratum by random priority; keep rank < K.
+    order = np.lexsort((prio, codes))
+    ranks = np.empty(tbl.n_rows, dtype=np.int64)
+    seen: dict[int, int] = {}
+    pos = np.zeros(n_distinct, dtype=np.int64)
+    sorted_codes = codes[order]
+    # vectorized rank-within-group over the sorted array
+    boundaries = np.flatnonzero(np.diff(sorted_codes)) + 1
+    starts = np.concatenate([[0], boundaries])
+    group_start = np.repeat(starts, np.diff(np.concatenate([starts, [len(codes)]])))
+    ranks[order] = np.arange(tbl.n_rows) - group_start
+    keep = ranks < k
+    rate = np.minimum(1.0, k / freqs[codes])
+    out = {name: np.asarray(arr)[keep] for name, arr in tbl.columns.items()}
+    out["_rate"] = rate[keep].astype(np.float32)
+    return out
+
+
+def _power_sum(s: float, m: int) -> float:
+    """Σ_{r=1..m} r^{-s}: exact partial sum + Euler–Maclaurin tail (supports
+    m up to 1e9+ without materializing ranks)."""
+    cut = min(m, 1_000_000)
+    r = np.arange(1, cut + 1, dtype=np.float64)
+    total = float((r ** -s).sum())
+    if m > cut:
+        a, b = float(cut + 1), float(m)
+        if abs(s - 1.0) < 1e-12:
+            integral = math.log(b / a)
+        else:
+            integral = (a ** (1 - s) - b ** (1 - s)) / (s - 1)
+        total += integral + 0.5 * (a ** -s + b ** -s) \
+            + s / 12.0 * (a ** (-s - 1) - b ** (-s - 1))
+    return total
+
+
+def zipf_storage_fraction(s: float, k: float, m_values: int) -> float:
+    """Appendix A / Table 5: storage of S(φ,K) as a fraction of the table when
+    φ ~ Zipf(s) with M distinct values and F(x) = M / rank(x)^s.
+
+    (The paper sets the *highest frequency* to M; total table rows are then
+    Σ_r M/r^s.)  Σ min(F(r), K) = K·r* + M·Σ_{r>r*} r^{-s} with
+    r* = #ranks where F ≥ K = floor((M/K)^{1/s})."""
+    m = float(m_values)
+    r_star = int(min(m, math.floor((m / k) ** (1.0 / s))))
+    head = k * r_star
+    tail = m * (_power_sum(s, m_values) - _power_sum(s, r_star)) if r_star < m_values else 0.0
+    total = m * _power_sum(s, m_values)
+    return float((head + tail) / total)

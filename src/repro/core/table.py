@@ -1,0 +1,97 @@
+"""Columnar, dictionary-encoded tables.
+
+Host side: value dictionaries (numpy object arrays) for categorical columns.
+Device side: int32 code / float32 measure arrays, optionally sharded row-wise
+across a mesh `data` axis (BlinkDB's HDFS striping, adapted — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import ColumnKind, ColumnSchema, TableSchema
+
+
+@dataclasses.dataclass
+class Table:
+    schema: TableSchema
+    # column name -> device array: int32 codes (categorical) / f32 (numeric)
+    columns: dict[str, jax.Array]
+    # column name -> numpy array of dictionary values (categoricals only)
+    dictionaries: dict[str, np.ndarray]
+    n_rows: int
+
+    def column_codes(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def cardinality(self, name: str) -> int:
+        return self.schema.column(name).cardinality
+
+    def encode_value(self, name: str, value) -> int:
+        """Host-side: map a raw categorical value to its dictionary code."""
+        d = self.dictionaries[name]
+        idx = np.nonzero(d == value)[0]
+        if idx.size == 0:
+            return -1  # matches no row
+        return int(idx[0])
+
+    def decode_value(self, name: str, code: int):
+        return self.dictionaries[name][code]
+
+    def row_bytes(self) -> int:
+        return 4 * len(self.columns)
+
+    @property
+    def nbytes(self) -> int:
+        return self.row_bytes() * self.n_rows
+
+
+def from_columns(name: str, raw: Mapping[str, np.ndarray],
+                 categorical: Sequence[str] | None = None) -> Table:
+    """Ingest host columns. Columns with non-float dtypes (or listed in
+    `categorical`) are dictionary-encoded; the rest become float32 measures."""
+    categorical = set(categorical or ())
+    n_rows = None
+    schemas, cols, dicts = [], {}, {}
+    for cname, values in raw.items():
+        values = np.asarray(values)
+        if n_rows is None:
+            n_rows = len(values)
+        elif len(values) != n_rows:
+            raise ValueError(f"column {cname}: length {len(values)} != {n_rows}")
+        is_cat = cname in categorical or not np.issubdtype(values.dtype, np.floating)
+        if is_cat:
+            uniq, codes = np.unique(values, return_inverse=True)
+            schemas.append(ColumnSchema(cname, ColumnKind.CATEGORICAL, len(uniq)))
+            cols[cname] = jnp.asarray(codes.astype(np.int32))
+            dicts[cname] = uniq
+        else:
+            schemas.append(ColumnSchema(cname, ColumnKind.NUMERIC))
+            cols[cname] = jnp.asarray(values.astype(np.float32))
+    return Table(TableSchema(name, tuple(schemas)), cols, dicts, int(n_rows or 0))
+
+
+def combined_codes(table: Table, phi: Sequence[str]) -> tuple[np.ndarray, np.ndarray]:
+    """Dense group ids for the value-combinations of column set φ.
+
+    Returns (codes[n_rows] int64 dense in [0, n_distinct), key_matrix
+    [n_distinct, len(phi)] of per-column dictionary codes for decoding).
+    Host-assisted (np.unique) — this runs in the *offline* sample-creation
+    path, mirroring BlinkDB's offline Hive jobs (DESIGN.md §2).
+    """
+    phi = sorted(phi)
+    if not phi:
+        n = table.n_rows
+        return np.zeros(n, dtype=np.int64), np.zeros((1, 0), dtype=np.int32)
+    mats = np.stack([np.asarray(table.columns[c]) for c in phi], axis=1)
+    uniq, inverse = np.unique(mats, axis=0, return_inverse=True)
+    return inverse.astype(np.int64), uniq.astype(np.int32)
+
+
+def stratum_frequencies(codes: np.ndarray, n_distinct: int) -> np.ndarray:
+    """F(φ, T, x): per-stratum row counts."""
+    return np.bincount(codes, minlength=n_distinct).astype(np.int64)

@@ -1,0 +1,189 @@
+"""Core datatypes for the BlinkDB-on-JAX engine.
+
+Columns are columnar, dictionary-encoded for categoricals (TPU-native: int32
+codes on device, value dictionaries on host). Queries are aggregation queries
+with conjunctive/disjunctive predicates, GROUP BY, and an optional error or
+time bound (paper §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+
+class ColumnKind(enum.Enum):
+    CATEGORICAL = "categorical"  # int32 dictionary codes
+    NUMERIC = "numeric"          # float32 measures
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnSchema:
+    name: str
+    kind: ColumnKind
+    # Number of distinct dictionary entries (categoricals only).
+    cardinality: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSchema:
+    name: str
+    columns: tuple[ColumnSchema, ...]
+
+    def __post_init__(self):
+        names = [c.name for c in self.columns]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate column names in {self.name}: {names}")
+
+    def column(self, name: str) -> ColumnSchema:
+        for c in self.columns:
+            if c.name == name:
+                return c
+        raise KeyError(f"no column {name!r} in table {self.name!r}")
+
+    @property
+    def column_names(self) -> tuple[str, ...]:
+        return tuple(c.name for c in self.columns)
+
+
+class CmpOp(enum.Enum):
+    EQ = "=="
+    NE = "!="
+    LT = "<"
+    LE = "<="
+    GT = ">"
+    GE = ">="
+
+
+@dataclasses.dataclass(frozen=True)
+class Atom:
+    """A single comparison predicate: `column <op> value`.
+
+    For categorical columns the value is the *decoded* value; encoding to the
+    dictionary code happens when the predicate is bound to a table.
+    """
+    column: str
+    op: CmpOp
+    value: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Conjunction:
+    """AND of atoms (paper §4.1.1)."""
+    atoms: tuple[Atom, ...] = ()
+
+    @property
+    def columns(self) -> frozenset[str]:
+        return frozenset(a.column for a in self.atoms)
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """Disjunction of conjunctions (DNF — paper §4.1.2 rewrites OR as a
+    union of conjunctive queries)."""
+    disjuncts: tuple[Conjunction, ...] = (Conjunction(),)
+
+    @classmethod
+    def true(cls) -> "Predicate":
+        return cls((Conjunction(),),)
+
+    @classmethod
+    def where(cls, *atoms: Atom) -> "Predicate":
+        return cls((Conjunction(tuple(atoms)),))
+
+    @property
+    def columns(self) -> frozenset[str]:
+        out: frozenset[str] = frozenset()
+        for d in self.disjuncts:
+            out |= d.columns
+        return out
+
+
+class AggOp(enum.Enum):
+    COUNT = "count"
+    SUM = "sum"
+    AVG = "avg"
+    QUANTILE = "quantile"
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorBound:
+    """`ERROR WITHIN eps AT CONFIDENCE conf` (paper §2). eps is relative
+    (fraction of the estimate) when `relative` else absolute."""
+    eps: float
+    confidence: float = 0.95
+    relative: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeBound:
+    """`WITHIN seconds SECONDS` (paper §2)."""
+    seconds: float
+    confidence: float = 0.95
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """An aggregation query: op(value_column) WHERE pred GROUP BY group_by.
+
+    Columns qualified as "dimtable.col" reference joined dimension-table
+    attributes (paper §2.1 joins); `joins` declares the fk relationships.
+    """
+    table: str
+    agg: AggOp
+    value_column: str | None = None  # None valid for COUNT
+    predicate: Predicate = Predicate.true()
+    group_by: tuple[str, ...] = ()
+    quantile: float = 0.5  # for AggOp.QUANTILE
+    bound: ErrorBound | TimeBound | None = None
+    joins: tuple = ()   # tuple[core.joins.Join, ...]
+
+    @property
+    def where_group_columns(self) -> frozenset[str]:
+        """Query template columns: WHERE ∪ GROUP BY (paper's φ^T)."""
+        return self.predicate.columns | frozenset(self.group_by)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryTemplate:
+    """A workload template: the column set of WHERE/GROUP BY clauses plus a
+    normalized weight (paper §3.2.1)."""
+    columns: frozenset[str]
+    weight: float
+
+
+@dataclasses.dataclass
+class GroupResult:
+    key: tuple[Any, ...]          # decoded group-by values
+    estimate: float
+    stderr: float
+    ci_low: float
+    ci_high: float
+    n_selected: float             # sampled rows matching the predicate
+    exact: bool = False           # stratum fully contained in the sample
+
+
+@dataclasses.dataclass
+class Answer:
+    query: Query
+    groups: list[GroupResult]
+    sample_phi: tuple[str, ...]   # family the query ran on
+    sample_k: float               # resolution cap K used
+    rows_read: int                # prefix length scanned
+    rows_total: int               # rows in the original table
+    elapsed_s: float
+    confidence: float
+
+    @property
+    def max_rel_err(self) -> float:
+        errs = [
+            abs(g.stderr / g.estimate) if g.estimate else 0.0
+            for g in self.groups if not g.exact
+        ]
+        return max(errs) if errs else 0.0
+
+
+def as_numpy(x) -> np.ndarray:
+    return np.asarray(x)

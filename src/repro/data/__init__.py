@@ -1,0 +1,1 @@
+from repro.data import synth, tokens  # noqa: F401

@@ -1,0 +1,85 @@
+"""Fault-tolerance supervisor: heartbeats, straggler detection, retry policy.
+
+On a real multi-host deployment every host runs a worker loop; the supervisor
+(or a gang-scheduler sidecar) watches per-step heartbeats. The mechanisms
+here are the production-shaped, unit-testable pieces:
+
+  * `Heartbeat` — per-worker step/timestamp registry,
+  * `StragglerPolicy` — deadline = median step time × factor; flags workers
+    past the deadline (paper-adjacent: BlinkDB's §4.5 low-priority background
+    work and Mantri-style [8] outlier mitigation),
+  * `RetryLoop` — exponential-backoff wrapper that restarts a step function
+    from the latest checkpoint on failure (preemption, OOM, numerical NaN),
+  * `ElasticPlan` — recompute (data-shard → worker) assignment when the
+    worker set changes (elastic scaling: batch stays global-deterministic
+    because the data pipeline slices by shard index — data/tokens.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    n_workers: int
+
+    def __post_init__(self):
+        self.last_step = np.zeros(self.n_workers, dtype=np.int64)
+        self.last_time = np.full(self.n_workers, time.time())
+        self.step_times: list[float] = []
+
+    def beat(self, worker: int, step: int) -> None:
+        now = time.time()
+        if step > self.last_step[worker] and self.last_step[worker] > 0:
+            self.step_times.append(now - self.last_time[worker])
+        self.last_step[worker] = step
+        self.last_time[worker] = now
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    factor: float = 3.0          # deadline = factor × median step time
+    min_deadline_s: float = 1.0
+
+    def stragglers(self, hb: Heartbeat, now: float | None = None) -> list[int]:
+        now = now if now is not None else time.time()
+        if not hb.step_times:
+            return []
+        median = float(np.median(hb.step_times[-100:]))
+        deadline = max(self.factor * median, self.min_deadline_s)
+        return [w for w in range(hb.n_workers)
+                if now - hb.last_time[w] > deadline]
+
+
+@dataclasses.dataclass
+class RetryLoop:
+    max_retries: int = 3
+    backoff_s: float = 0.1
+
+    def run(self, step_fn: Callable[[], object],
+            on_failure: Callable[[Exception, int], None] | None = None):
+        """Run step_fn with restart-on-failure. Raises after max_retries."""
+        err: Exception | None = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                return step_fn()
+            except (FloatingPointError, RuntimeError, ValueError) as e:
+                err = e
+                if on_failure:
+                    on_failure(e, attempt)
+                time.sleep(self.backoff_s * (2 ** attempt))
+        raise RuntimeError(f"step failed after {self.max_retries} retries") from err
+
+
+def elastic_plan(n_shards_data: int, live_workers: list[int]) -> dict[int, list[int]]:
+    """Assign data shards to the live worker set (round-robin)."""
+    if not live_workers:
+        raise ValueError("no live workers")
+    plan: dict[int, list[int]] = {w: [] for w in live_workers}
+    for s in range(n_shards_data):
+        plan[live_workers[s % len(live_workers)]].append(s)
+    return plan

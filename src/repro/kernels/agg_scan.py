@@ -1,0 +1,103 @@
+"""Fused sample-scan aggregation kernel (the paper's hot path, TPU-native).
+
+BlinkDB's runtime cost is dominated by the sample scan: evaluate the
+predicate, HT-weight each row, and segment-reduce seven sufficient statistics
+per group (estimators.GroupedMoments). On a TPU this is an HBM-bandwidth
+problem; the kernel streams each row-block HBM→VMEM exactly once and performs
+the grouped reduction as a one-hot MXU matmul (the TPU-idiomatic replacement
+for scatter-add — DESIGN.md §6):
+
+    stats[8, B]   per-row quantities (mask, w, wx, wx², vfac, vfac·x, vfac·x², pad)
+    onehot[B, GB] (code == group_id) for the current group block
+    out[8, GB]   += stats @ onehot        (MXU)
+
+Grid: (group_blocks, row_blocks) — row axis innermost so each output block
+stays resident in VMEM while every row block streams past it.
+
+Block shapes: B rows (multiple of 128 lanes), GB groups (multiple of 128).
+VMEM footprint ≈ 4 input blocks (4·B·4B) + onehot (B·GB·4B) + out (8·GB·4B);
+defaults (B=2048, GB=512) ≈ 4.3 MB — well under ~16 MB VMEM of TPU v5e.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 2048
+DEFAULT_BLOCK_GROUPS = 512
+N_STATS = 8  # 7 used + 1 pad row for sublane alignment
+
+
+def _agg_scan_kernel(values_ref, rates_ref, mask_ref, codes_ref, out_ref, *,
+                     block_groups: int):
+    gi = pl.program_id(0)   # group-block index (outer)
+    ri = pl.program_id(1)   # row-block index (inner; accumulates into out)
+
+    @pl.when(ri == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v = values_ref[0, :].astype(jnp.float32)
+    r = rates_ref[0, :].astype(jnp.float32)
+    m = mask_ref[0, :].astype(jnp.float32)
+    codes = codes_ref[0, :]
+
+    w = m / r
+    wx = w * v
+    vfac = m * (1.0 - r) / (r * r)
+    vx = vfac * v
+    stats = jnp.stack([
+        m, w, wx, wx * v, vfac, vx, vx * v,
+        jnp.zeros_like(m),                      # pad to N_STATS sublanes
+    ])                                          # [8, B]
+
+    group_base = gi * block_groups
+    gids = group_base + jax.lax.broadcasted_iota(jnp.int32, (1, block_groups), 1)
+    onehot = (codes[:, None] == gids).astype(jnp.float32)   # [B, GB]
+
+    out_ref[...] += jax.lax.dot_general(
+        stats, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # [8, GB]
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "block_rows",
+                                             "block_groups", "interpret"))
+def agg_scan_pallas(values: jax.Array, rates: jax.Array, mask: jax.Array,
+                    group_codes: jax.Array, n_groups: int,
+                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                    block_groups: int = DEFAULT_BLOCK_GROUPS,
+                    interpret: bool = False) -> jax.Array:
+    """Returns f32[7, n_groups] (GroupedMoments field order)."""
+    n = values.shape[0]
+    bg = min(block_groups, max(128, -(-n_groups // 128) * 128))
+    g_pad = -(-n_groups // bg) * bg
+    n_pad = -(-max(n, 1) // block_rows) * block_rows
+
+    def pad(x, fill):
+        return jnp.pad(x, (0, n_pad - n), constant_values=fill)
+
+    v = pad(values.astype(jnp.float32), 0).reshape(-1, block_rows)
+    r = pad(rates.astype(jnp.float32), 1).reshape(-1, block_rows)
+    m = pad(mask.astype(jnp.float32), 0).reshape(-1, block_rows)
+    c = pad(group_codes.astype(jnp.int32), g_pad - 1).reshape(-1, block_rows)
+
+    n_row_blocks = n_pad // block_rows
+    n_group_blocks = g_pad // bg
+
+    out = pl.pallas_call(
+        functools.partial(_agg_scan_kernel, block_groups=bg),
+        grid=(n_group_blocks, n_row_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_rows), lambda gi, ri: (ri, 0)),
+            pl.BlockSpec((1, block_rows), lambda gi, ri: (ri, 0)),
+            pl.BlockSpec((1, block_rows), lambda gi, ri: (ri, 0)),
+            pl.BlockSpec((1, block_rows), lambda gi, ri: (ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((N_STATS, bg), lambda gi, ri: (0, gi)),
+        out_shape=jax.ShapeDtypeStruct((N_STATS, g_pad), jnp.float32),
+        interpret=interpret,
+    )(v, r, m, c)
+    return out[:7, :n_groups]

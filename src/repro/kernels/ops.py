@@ -1,0 +1,31 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel body
+executes in Python for correctness validation; on TPU the same call sites
+compile to Mosaic. `INTERPRET` flips automatically off on TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import GroupedMoments
+from repro.kernels.agg_scan import agg_scan_pallas
+from repro.kernels.weighted_sum import weighted_sum_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def agg_scan(values: jax.Array, rates: jax.Array, mask: jax.Array,
+             group_codes: jax.Array, n_groups: int) -> GroupedMoments:
+    """Fused predicate+HT grouped moments — drop-in replacement for
+    estimators.grouped_moments (executor's use_pallas path)."""
+    out = agg_scan_pallas(values, rates, mask, group_codes, n_groups,
+                          interpret=INTERPRET)
+    return GroupedMoments(n=out[0], wsum=out[1], wxsum=out[2], wx2sum=out[3],
+                          var_count=out[4], var_sum=out[5], var_sum2=out[6])
+
+
+def weighted_sum(values: jax.Array, weights: jax.Array,
+                 mask: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    return weighted_sum_pallas(values, weights, mask, interpret=INTERPRET)

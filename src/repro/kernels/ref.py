@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the semantics; every kernel test asserts allclose against them
+across shape/dtype sweeps. The executor's reference path uses the same
+segment-sum formulation (estimators.grouped_moments) — consistency between
+the three is covered by tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def agg_scan_ref(values: jax.Array, rates: jax.Array, mask: jax.Array,
+                 group_codes: jax.Array, n_groups: int) -> tuple[jax.Array, ...]:
+    """Fused predicate+HT-weighted grouped moments.
+
+    Returns a 7-tuple of f32[n_groups]:
+      (n, wsum, wxsum, wx2sum, var_count, var_sum, var_sum2)
+    matching estimators.GroupedMoments field order.
+    """
+    m = mask.astype(jnp.float32)
+    r = rates.astype(jnp.float32)
+    x = values.astype(jnp.float32)
+    w = m / r
+    vfac = m * (1.0 - r) / (r * r)
+    g = group_codes.astype(jnp.int32)
+
+    def seg(v):
+        return jax.ops.segment_sum(v, g, num_segments=n_groups)
+
+    return (seg(m), seg(w), seg(w * x), seg(w * x * x),
+            seg(vfac), seg(vfac * x), seg(vfac * x * x))
+
+
+def weighted_sum_ref(values: jax.Array, weights: jax.Array,
+                     mask: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked HT-weighted reductions: (Σ w·m, Σ w·m·x, Σ w·m·x²), scalars."""
+    m = mask.astype(jnp.float32)
+    w = weights.astype(jnp.float32) * m
+    x = values.astype(jnp.float32)
+    return w.sum(), (w * x).sum(), (w * x * x).sum()

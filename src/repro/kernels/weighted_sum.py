@@ -1,0 +1,68 @@
+"""HT-weighted masked reduction kernel (non-grouped executor path).
+
+Computes (Σ w·m, Σ w·m·x, Σ w·m·x²) in one HBM pass. Lane-parallel partial
+sums are kept in a VMEM accumulator of shape [8, 128]; the wrapper reduces
+over lanes. Grid over row blocks; block shape [1, B] with B a multiple of
+8·128 so each block folds into the lane accumulator without remainder.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 4096
+_LANES = 128
+_ROWS = 8
+
+
+def _weighted_sum_kernel(values_ref, weights_ref, mask_ref, out_ref):
+    ri = pl.program_id(0)
+
+    @pl.when(ri == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = values_ref[0, :].astype(jnp.float32)
+    w = weights_ref[0, :].astype(jnp.float32) * mask_ref[0, :].astype(jnp.float32)
+
+    def fold(v):  # [B] -> [LANES] partial sums
+        return v.reshape(-1, _LANES).sum(axis=0)
+
+    s0 = fold(w)
+    s1 = fold(w * x)
+    s2 = fold(w * x * x)
+    zero = jnp.zeros((_LANES,), jnp.float32)
+    out_ref[...] += jnp.stack([s0, s1, s2, zero, zero, zero, zero, zero])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def weighted_sum_pallas(values: jax.Array, weights: jax.Array, mask: jax.Array,
+                        block_rows: int = DEFAULT_BLOCK_ROWS,
+                        interpret: bool = False) -> tuple[jax.Array, jax.Array, jax.Array]:
+    n = values.shape[0]
+    n_pad = -(-max(n, 1) // block_rows) * block_rows
+
+    def pad(x, fill):
+        return jnp.pad(x, (0, n_pad - n), constant_values=fill)
+
+    v = pad(values.astype(jnp.float32), 0).reshape(-1, block_rows)
+    w = pad(weights.astype(jnp.float32), 0).reshape(-1, block_rows)
+    m = pad(mask.astype(jnp.float32), 0).reshape(-1, block_rows)
+
+    out = pl.pallas_call(
+        _weighted_sum_kernel,
+        grid=(n_pad // block_rows,),
+        in_specs=[
+            pl.BlockSpec((1, block_rows), lambda ri: (ri, 0)),
+            pl.BlockSpec((1, block_rows), lambda ri: (ri, 0)),
+            pl.BlockSpec((1, block_rows), lambda ri: (ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((_ROWS, _LANES), lambda ri: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((_ROWS, _LANES), jnp.float32),
+        interpret=interpret,
+    )(v, w, m)
+    lane_sums = out.sum(axis=1)
+    return lane_sums[0], lane_sums[1], lane_sums[2]

@@ -1,0 +1,140 @@
+"""Dry-run cell construction: per (arch × shape × mesh) build the step
+function, ShapeDtypeStruct inputs, and in/out shardings — no allocation.
+
+`input_specs(cfg, shape)` is the public stand-in builder (weak-type-correct,
+shardable): tokens/labels for train; request batches + caches for serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.models import model as model_lib
+from repro.sharding import rules as rules_lib
+from repro.train import optim as optim_lib
+from repro.train import step as step_lib
+
+
+def auto_policy(cfg: ModelConfig) -> str:
+    """Dtype policy: models >200B params train with bf16 params + int8
+    moments (the int8-moment trick is what fits 405B on one v5e pod)."""
+    return "lowmem" if cfg.param_count() > 2e11 else "f32"
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        tok_shape = (b, cfg.n_codebooks, s) if cfg.n_codebooks else (b, s)
+        specs = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32),
+                 "labels": jax.ShapeDtypeStruct(tok_shape, i32)}
+    elif shape.kind == "prefill":
+        tok_shape = (b, cfg.n_codebooks, s) if cfg.n_codebooks else (b, s)
+        specs = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+    else:  # decode: one new token against a seq_len cache
+        tok_shape = (b, cfg.n_codebooks, 1) if cfg.n_codebooks else (b, 1)
+        specs = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32),
+                 "pos": jax.ShapeDtypeStruct((), i32)}
+    if cfg.n_vision_tokens:
+        specs["vision"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_vision_tokens, cfg.d_vision), jnp.bfloat16)
+    return specs
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: Any                   # function to jit
+    args_sds: tuple           # ShapeDtypeStructs for .lower()
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple[int, ...]
+    cfg: ModelConfig
+    policy: str
+    mesh: Any = None
+    rules: Any = None
+
+
+def _batch_shardings(specs: dict, mesh: Mesh, rules: rules_lib.ShardingRules):
+    out = {}
+    for k, v in specs.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        spec = rules_lib.logical_to_pspec(axes, v.shape, rules, mesh)             if v.shape else P()
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, multi_pod: bool,
+               policy: str | None = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model_extent = mesh.shape.get("model", 1)
+    attn_dp = (cfg.n_heads % model_extent != 0)
+    moe_ep = bool(cfg.n_experts) and cfg.n_experts % model_extent == 0
+    rules = rules_lib.default_rules(multi_pod=multi_pod, attn_dp=attn_dp,
+                                    moe_ep=moe_ep)
+    policy = policy or auto_policy(cfg)
+    step_cfg = step_lib.StepConfig(policy=policy)
+    opt_cfg = optim_lib.OptConfig()
+
+    sh = step_lib.build_shardings(cfg, mesh, rules, step_cfg, opt_cfg)
+    specs = input_specs(cfg, shape)
+    batch_sh = _batch_shardings(specs, mesh, rules)
+
+    if shape.kind == "train":
+        fn = step_lib.make_train_step(cfg, opt_cfg, step_cfg)
+        opt_sds = jax.eval_shape(
+            functools.partial(optim_lib.init_opt_state,
+                              cfg=step_cfg.opt_config(opt_cfg)),
+            sh["params_sds"])
+        args = (sh["params_sds"], opt_sds, specs)
+        in_sh = (sh["params_sharding"], sh["opt_sharding"], batch_sh)
+        out_sh = (sh["params_sharding"], sh["opt_sharding"], None)
+        donate = (0, 1)
+        wrapped = fn
+    else:
+        cache_dtype = jnp.bfloat16
+        cache_sds = jax.eval_shape(
+            functools.partial(model_lib.init_cache, cfg, shape.global_batch,
+                              shape.seq_len, dtype=cache_dtype))
+        c_axes = model_lib.cache_axes(cfg)
+        cache_sh = rules_lib.tree_shardings(mesh, rules, c_axes, cache_sds)
+
+        if shape.kind == "prefill":
+            base = step_lib.make_prefill_step(cfg, step_cfg)
+
+            def wrapped(params, tokens, caches, vision=None):
+                return base(params, tokens, caches, vision)
+
+            args = (sh["params_sds"], specs["tokens"], cache_sds) + (
+                (specs["vision"],) if "vision" in specs else ())
+            in_sh = (sh["params_sharding"], batch_sh["tokens"], cache_sh) + (
+                (batch_sh["vision"],) if "vision" in specs else ())
+            out_sh = (None, cache_sh)
+            donate = (2,)
+        else:
+            base = step_lib.make_decode_step(cfg, step_cfg)
+
+            def wrapped(params, tokens, caches, pos, vision=None):
+                return base(params, tokens, caches, pos, vision)
+
+            args = (sh["params_sds"], specs["tokens"], cache_sds,
+                    specs["pos"]) + ((specs["vision"],) if "vision" in specs
+                                     else ())
+            in_sh = (sh["params_sharding"], batch_sh["tokens"], cache_sh,
+                     NamedSharding(mesh, P())) + (
+                (batch_sh["vision"],) if "vision" in specs else ())
+            out_sh = (batch_sh["tokens"], cache_sh)
+            donate = (2,)
+
+    return Cell(arch, shape, wrapped, args, in_sh, out_sh, donate, cfg,
+                policy, mesh, rules)

@@ -1,0 +1,452 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), per EXPERIMENTS.md §Roofline:
+
+  compute    = global_FLOPs / (chips × 197e12)          [bf16 MXU peak]
+  memory     = per_device_HBM_bytes / 819e9             [HBM BW]
+  collective = per_device_link_bytes / (n_links × 50e9) [ICI]
+
+Sources:
+  * global_FLOPs — jaxpr walker (`count_flops`): exact loop-trip-aware FLOP
+    count of the step function. (XLA CPU's `cost_analysis()` counts while
+    bodies ONCE — measured in EXPERIMENTS.md §Dry-run notes — so the jaxpr
+    count, which multiplies `scan` bodies by their static lengths, is the
+    faithful number. `cost_analysis()` is reported alongside as cross-check.)
+  * per-device bytes & collectives — parsed from `compiled.as_text()`
+    (post-SPMD-partitioning HLO: shapes are per-device). While-loop bodies
+    are multiplied by trip counts recovered from the loop condition; ops
+    inside fusions are excluded (fusion boundaries ≈ HBM round-trips).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+ICI_LINKS = 4              # 2D torus: 4 links usable per chip
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+# ======================================================================
+# 1. jaxpr FLOP walker (global, loop-trip aware)
+# ======================================================================
+
+_ELEMENTWISE_1 = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "abs", "floor", "sign",
+    "and", "or", "xor", "not", "select_n", "pow", "integer_pow", "rem",
+}
+_ELEMENTWISE_X = {  # transcendental — count a few flops each
+    "exp": 4, "log": 4, "tanh": 6, "logistic": 6, "rsqrt": 2, "sqrt": 2,
+    "erf": 6, "sin": 4, "cos": 4, "cumsum": 1, "cumlogsumexp": 8,
+    "cumprod": 1, "cummax": 1,
+}
+_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+           "reduce_and", "reduce_or", "argmax", "argmin", "reduce_precision"}
+
+
+def _dot_flops(eqn) -> float:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = np.prod([lhs.shape[i] for i in lb], initial=1.0)
+    contract = np.prod([lhs.shape[i] for i in lc], initial=1.0)
+    lfree = np.prod([d for i, d in enumerate(lhs.shape)
+                     if i not in lc and i not in lb], initial=1.0)
+    rfree = np.prod([d for i, d in enumerate(rhs.shape)
+                     if i not in rc and i not in rb], initial=1.0)
+    return 2.0 * batch * contract * lfree * rfree
+
+
+def _out_elems(eqn) -> float:
+    tot = 0.0
+    for ov in eqn.outvars:
+        aval = ov.aval
+        if hasattr(aval, "shape"):
+            tot += float(np.prod(aval.shape, initial=1.0))
+    return tot
+
+
+def _jaxpr_of(obj):
+    import jax.extend.core as jex_core  # jax >= 0.5
+    if hasattr(obj, "jaxpr") and hasattr(obj, "consts"):
+        return obj.jaxpr
+    return obj
+
+
+def count_flops(jaxpr) -> float:
+    """Walk a (Closed)Jaxpr, multiplying scan bodies by their lengths."""
+    jaxpr = _jaxpr_of(jaxpr)
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            total += _dot_flops(eqn)
+        elif name == "scan":
+            inner = count_flops(eqn.params["jaxpr"])
+            total += inner * float(eqn.params["length"])
+        elif name == "while":
+            raise ValueError("while with unknown trip count in step fn; "
+                             "use scan/fori with static bounds")
+        elif name == "cond":
+            # Branch-mean: the only cond in the step fns is the causal
+            # chunk-skip in chunked attention (skip branch ≈ 0 flops), whose
+            # true executed fraction is (nq+1)/(2nq) ∈ [0.5, 0.56] — the
+            # branch mean (0.5 × attend) matches within 6%, while max-branch
+            # overstates causal attention 2× (documented in EXPERIMENTS §3).
+            branches = eqn.params["branches"]
+            costs = [count_flops(b) for b in branches]
+            total += sum(costs) / max(len(costs), 1)
+        elif name in ("pjit", "closed_call", "core_call", "remat_call",
+                      "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "checkpoint", "remat2",
+                      "remat", "custom_partitioning"):
+            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if sub is not None:
+                total += count_flops(sub)
+        elif name in _ELEMENTWISE_1:
+            total += _out_elems(eqn)
+        elif name in _ELEMENTWISE_X:
+            total += _out_elems(eqn) * _ELEMENTWISE_X[name]
+        elif name in _REDUCE:
+            for iv in eqn.invars:
+                if hasattr(iv.aval, "shape"):
+                    total += float(np.prod(iv.aval.shape, initial=1.0))
+                    break
+        else:
+            sub = eqn.params.get("jaxpr") if hasattr(eqn, "params") else None
+            if sub is not None and hasattr(_jaxpr_of(sub), "eqns"):
+                total += count_flops(sub)
+    return total
+
+
+def step_flops(fn, *args_sds) -> float:
+    jaxpr = jax.make_jaxpr(fn)(*args_sds)
+    return count_flops(jaxpr)
+
+
+# ======================================================================
+# 2. Compiled-HLO parser (per-device bytes, collectives, while trips)
+# ======================================================================
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# `%name = <type...> opcode(operands...), attrs` — opcode is the first
+# lowercase identifier directly followed by '(' after the '='.
+_OP_SPLIT_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\s([a-z][a-z0-9\-_]*)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= float(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class HloOp:
+    name: str
+    opcode: str
+    out_bytes: float
+    operands: list[str]
+    line: str
+
+    @property
+    def trip_count(self) -> float:
+        """`known_trip_count` from backend_config (XLA annotates rolled
+        loops); falls back to the largest constant in the line."""
+        m = _TRIP_RE.search(self.line)
+        if m:
+            return float(m.group(1))
+        return 1.0
+
+    @property
+    def body(self) -> str | None:
+        m = _BODY_RE.search(self.line)
+        return m.group(1) if m else None
+
+    @property
+    def branches(self) -> list[str]:
+        m = _BRANCHES_RE.search(self.line)
+        if not m:
+            return []
+        return [b.strip().lstrip("%") for b in m.group(1).split(",")]
+
+
+@dataclasses.dataclass
+class HloComputation:
+    name: str
+    ops: dict[str, HloOp]
+    is_fusion: bool = False
+
+
+def parse_hlo(text: str) -> dict[str, HloComputation]:
+    comps: dict[str, HloComputation] = {}
+    cur: HloComputation | None = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and ("{" in line):
+            cur = HloComputation(m.group(1), {},
+                                 is_fusion="fused" in m.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_SPLIT_RE.match(line)
+        if not om:
+            continue
+        name, rhs = om.groups()
+        oc = _OPCODE_RE.search(" " + rhs)
+        if not oc:
+            continue
+        opcode = oc.group(1)
+        type_str = rhs[: oc.start()]
+        rest = rhs[oc.end():]
+        # operands: %names inside the first paren group
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = re.findall(r"%([\w.\-]+)", rest[:end])
+        cur.ops[name] = HloOp(name, opcode, type_bytes(type_str),
+                              operands, line.strip())
+    return comps
+
+
+@dataclasses.dataclass
+class HloSummary:
+    hbm_bytes: float                  # per-device kernel-boundary traffic
+    collective_bytes: dict[str, float]  # opcode -> per-device bytes (in+out)/2…
+    collective_detail: list[dict]
+    while_trips: dict[str, float]
+
+
+def summarize_hlo(text: str) -> HloSummary:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    coll: dict[str, float] = {o: 0.0 for o in COLLECTIVE_OPS}
+    detail: list[dict] = []
+    trips: dict[str, float] = {}
+
+    def comp_cost(comp: HloComputation, mult: float, seen: tuple) -> float:
+        if comp.name in seen:
+            return 0.0
+        traffic = 0.0
+        for op in comp.ops.values():
+            if op.opcode == "while":
+                body = op.body
+                if body and body in comps:
+                    t = op.trip_count
+                    trips[body] = t
+                    traffic += comp_cost(comps[body], mult * t,
+                                         seen + (comp.name,))
+                continue
+            if op.opcode == "conditional":
+                branches = [comps[c] for c in op.branches if c in comps]
+                if branches:
+                    traffic += max(comp_cost(b, mult, seen + (comp.name,))
+                                   for b in branches)
+                continue
+            if op.opcode in ("parameter", "constant", "get-tuple-element",
+                             "tuple", "bitcast", "after-all"):
+                continue
+            for c in COLLECTIVE_OPS:
+                if op.opcode in (c, c + "-start"):
+                    b = op.out_bytes * mult
+                    coll[c] += b
+                    detail.append({"op": c, "bytes_out": op.out_bytes,
+                                   "mult": mult, "line": op.line[:160]})
+                    break
+            # kernel-boundary HBM traffic: output + operand bytes
+            opd_bytes = sum(comp.ops[o].out_bytes for o in op.operands
+                            if o in comp.ops)
+            traffic += (op.out_bytes + opd_bytes) * mult
+        return traffic
+
+    hbm = comp_cost(entry, 1.0, ())
+    return HloSummary(hbm, coll, detail, trips)
+
+
+# ======================================================================
+# 3. Three-term roofline
+# ======================================================================
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    global_flops: float
+    hlo_flops_raw: float          # cost_analysis (loop bodies single-counted)
+    per_device_hbm_bytes: float
+    collective_bytes: dict[str, float]
+    model_flops: float            # 6·N·D (dense) / 6·N_active·D (MoE)
+
+    @property
+    def t_compute(self) -> float:
+        return self.global_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.per_device_hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        total = sum(self.collective_bytes.values())
+        return total / (ICI_LINKS * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def usefulness(self) -> float:
+        return self.model_flops / max(self.global_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs throughput achievable at the dominant term vs peak."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_bound <= 0:
+            return 0.0
+        achieved = self.model_flops / t_bound / (self.chips * PEAK_FLOPS)
+        return achieved
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "global_flops": self.global_flops,
+            "hlo_flops_raw": self.hlo_flops_raw,
+            "per_device_hbm_bytes": self.per_device_hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "usefulness": self.usefulness,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                    n_new: int = 1) -> float:
+    """6·N·D for train; 2·N_active per generated/processed token for serve."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n_active * seq_len * global_batch
+    if shape_kind == "prefill":
+        return 2.0 * n_active * seq_len * global_batch
+    return 2.0 * n_active * n_new * global_batch   # decode
+
+
+def analytic_memory_bytes(cfg, shape_kind: str, seq_len: int,
+                          global_batch: int, policy: str,
+                          mesh_shape: dict, attn_dp: bool = False) -> float:
+    """Per-device HBM traffic under TPU fusion assumptions (flash attention
+    keeps score blocks in VMEM; elementwise chains fuse into producer
+    matmuls). The HLO-parsed number from the CPU backend is an UNFUSED upper
+    bound; this is the fusion-aware estimate the roofline memory term uses —
+    methodology note in EXPERIMENTS.md §Roofline."""
+    data = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    model = mesh_shape.get("model", 1)
+    # attn_dp archs run their mixers batch-sharded over (data × model):
+    # activation traffic per device drops by the model extent for those
+    # tensors (~2/3 of the per-layer working set).
+    act_scale = (1.0 / 3.0 + 2.0 / 3.0 / model) if attn_dp else 1.0
+    p_total = cfg.param_count()
+    b_param = 2.0 if policy == "lowmem" else 4.0
+    b_act = 2.0
+    d = cfg.d_model
+    v_shard = cfg.vocab_size / model
+    b_local = max(global_batch / data, 1.0)
+
+    # big activation-sized tensors per layer that hit HBM (q,k,v,out,
+    # mlp h/g, residuals, norms) — flash keeps S×S blocks in VMEM.
+    act_tensors = 12.0
+
+    if shape_kind == "train":
+        # params: sharded storage P/(data·model); per pass each device reads
+        # a full model-shard (P/model) via FSDP all-gather (+ write of the
+        # gathered copy). fwd + remat-fwd + bwd = 3 passes.
+        param_traffic = 3 * 2 * (p_total / model) * b_param
+        # optimizer: grads write + m/v read/write + param read/write on the
+        # fully sharded slice
+        mom = 2.0 if policy == "lowmem" else 8.0   # int8 m+v vs f32 m+v
+        opt_traffic = (p_total / (data * model)) * (4 + 2 * mom + 2 * b_param)
+        acts = (cfg.n_layers * act_tensors * b_local * seq_len * d * b_act
+                * 2.5) * act_scale  # fwd + bwd (+remat re-reads)
+        logits = 3 * b_local * seq_len * v_shard * 4.0
+        return param_traffic + opt_traffic + acts + logits
+    if shape_kind == "prefill":
+        param_traffic = (p_total / model) * b_param
+        acts = cfg.n_layers * act_tensors * b_local * seq_len * d * b_act \
+            * act_scale
+        cache_write = _cache_bytes(cfg, b_local, seq_len, model)
+        return param_traffic + acts + cache_write
+    # decode: read all (model-shard) params once + read the full cache.
+    param_traffic = (p_total / model) * b_param
+    cache_rw = _cache_bytes(cfg, b_local, seq_len, model)
+    acts = cfg.n_layers * act_tensors * b_local * 1 * d * b_act
+    return param_traffic + cache_rw + acts
+
+
+def _cache_bytes(cfg, b_local: float, seq_len: int, model: int) -> float:
+    """KV/state cache bytes per device (bf16), honoring seq/model sharding."""
+    total = 0.0
+    n_rep = cfg.n_layers // len(cfg.pattern)
+    for spec in cfg.pattern:
+        if spec.mixer == "attn":
+            kv_div = model if cfg.n_kv_heads % model == 0 else 1
+            seq_div = 1 if kv_div > 1 else (model if seq_len % model == 0 else 1)
+            total += (2 * b_local * cfg.n_kv_heads * seq_len * cfg.head_dim
+                      * 2.0 / (kv_div * seq_div)) * n_rep
+        elif spec.mixer == "mamba":
+            di = cfg.mamba_expand * cfg.d_model
+            total += (b_local * di * cfg.mamba_d_state * 4.0 / model) * n_rep
+        elif spec.mixer in ("mlstm", "slstm"):
+            di = int(cfg.xlstm_proj_factor * cfg.d_model)
+            dh = di // cfg.n_heads
+            total += (b_local * cfg.n_heads * dh * dh * 4.0) * n_rep
+    return total

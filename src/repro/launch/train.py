@@ -1,0 +1,90 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+        --steps 200 --batch 8 --seq 128 --reduced --ckpt-dir /tmp/ckpt
+
+On this CPU container `--reduced` (smoke dims) or a small custom model is
+the realistic setting; on a TPU pod the same launcher runs the full configs
+under `make_production_mesh()` (jax.distributed.initialize is called when
+JAX_COORDINATOR is set — each host runs this same binary).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import DataConfig, SyntheticTokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as model_lib
+from repro.sharding import rules as rules_lib
+from repro.train import optim as optim_lib
+from repro.train import step as step_lib
+from repro.train.loop import LoopConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--policy", default="f32", choices=["f32", "lowmem"])
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (TPU pod); default: host-device mesh")
+    ap.add_argument("--resume", action="store_true", default=True)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()  # multi-host wiring on a real pod
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, q_chunk=min(cfg.q_chunk, args.seq),
+                              k_chunk=min(cfg.k_chunk, args.seq),
+                              mamba_chunk=min(cfg.mamba_chunk, args.seq))
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    rules = rules_lib.default_rules(
+        attn_dp=cfg.n_heads % mesh.shape.get("model", 1) != 0)
+
+    step_cfg = step_lib.StepConfig(policy=args.policy)
+    opt_cfg = optim_lib.OptConfig(lr=args.lr, warmup_steps=20,
+                                  decay_steps=max(args.steps, 100))
+
+    key = jax.random.PRNGKey(args.seed)
+    params, axes = model_lib.init_params(cfg, key, step_cfg.param_dtype)
+    opt_state = optim_lib.init_opt_state(params, step_cfg.opt_config(opt_cfg))
+
+    step_fn = step_lib.make_train_step(cfg, opt_cfg, step_cfg)
+    with rules_lib.activate(mesh, rules):
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        data_cfg = DataConfig(cfg.vocab_size, args.seq, args.batch,
+                              seed=args.seed)
+        stream = SyntheticTokenStream(data_cfg)
+        loop_cfg = LoopConfig(total_steps=args.steps,
+                              ckpt_every=args.ckpt_every,
+                              ckpt_dir=args.ckpt_dir)
+        params, opt_state, telemetry = train(
+            jitted, params, opt_state, stream, loop_cfg, resume=args.resume)
+
+    losses = [r["loss"] for r in telemetry.records]
+    print(f"[train] done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

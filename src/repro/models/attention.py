@@ -1,0 +1,230 @@
+"""GQA attention: chunked-causal (flash-style online softmax) for train and
+prefill, cache-based single-token path for decode, optional cross-attention.
+
+Memory: the chunked path never materializes the S×S score matrix — working
+set is O(q_chunk × k_chunk) per (batch, head), which is what lets 32k prefill
+lower with sane per-device memory in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamFactory, apply_rope, rope_cos_sin, split_tree
+from repro.sharding.rules import constrain as shd
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+
+
+def init_attention(pf: ParamFactory, dims: AttnDims):
+    d, h, kv, dh = dims.d_model, dims.n_heads, dims.n_kv, dims.d_head
+    tree = {
+        "wq": pf.dense((d, h, dh), ("embed", "q_heads", "head")),
+        "wk": pf.dense((d, kv, dh), ("embed", "kv_heads", "head")),
+        "wv": pf.dense((d, kv, dh), ("embed", "kv_heads", "head")),
+        "wo": pf.dense((h, dh, d), ("q_heads", "head", "embed"),
+                       scale=1.0 / (h * dh) ** 0.5),
+    }
+    if dims.qkv_bias:
+        tree["bq"] = pf.zeros((h, dh), ("q_heads", "head"))
+        tree["bk"] = pf.zeros((kv, dh), ("kv_heads", "head"))
+        tree["bv"] = pf.zeros((kv, dh), ("kv_heads", "head"))
+    return split_tree(tree)
+
+
+def _project_qkv(p, x, dims: AttnDims, positions):
+    """x [B,S,D] -> q [B,H,S,dh], k/v [B,KV,S,dh] with RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)[None, :, None, :]
+        k = k + p["bk"].astype(x.dtype)[None, :, None, :]
+        v = v + p["bv"].astype(x.dtype)[None, :, None, :]
+    cos, sin = rope_cos_sin(positions, dims.d_head, dims.rope_theta)
+    q = apply_rope(q, cos[:, None], sin[:, None])
+    k = apply_rope(k, cos[:, None], sin[:, None])
+    q = shd(q, ("attn_batch", "q_heads", None, "head"))
+    k = shd(k, ("attn_batch", "kv_heads", None, "head"))
+    v = shd(v, ("attn_batch", "kv_heads", None, "head"))
+    return q, k, v
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             q_chunk: int = 512, k_chunk: int = 1024) -> jax.Array:
+    """Online-softmax causal attention.
+
+    q [B,H,S,dh], k/v [B,KV,S,dh] with H = G·KV (GQA). Returns [B,H,S,dh].
+    Scans q chunks (outer, lax.map) and kv chunks (inner, lax.scan) carrying
+    (acc, row_max, row_sum). Fully-masked kv chunks are skipped via
+    lax.cond so causal work is ~S²/2 not S².
+    """
+    b, h, s, dh = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    q_chunk = min(q_chunk, s)
+    k_chunk = min(k_chunk, s)
+    assert s % q_chunk == 0 and s % k_chunk == 0
+    nq, nk = s // q_chunk, s // k_chunk
+    scale = dh ** -0.5
+
+    qc = q.reshape(b, kvh, g, nq, q_chunk, dh)
+    kc = k.reshape(b, kvh, nk, k_chunk, dh)
+    vc = v.reshape(b, kvh, nk, k_chunk, dh)
+
+    def per_q_chunk(qi):
+        qblk = jax.lax.dynamic_index_in_dim(qc, qi, axis=3, keepdims=False)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def inner(carry, kj):
+            acc, mx, sm = carry
+            kblk = jax.lax.dynamic_index_in_dim(kc, kj, axis=2, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vc, kj, axis=2, keepdims=False)
+            k_pos = kj * k_chunk + jnp.arange(k_chunk)
+
+            def attend(_):
+                s_ = jnp.einsum("bkgqd,bkcd->bkgqc", qblk, kblk) * scale
+                causal = q_pos[:, None] >= k_pos[None, :]
+                s_ = jnp.where(causal[None, None, None], s_, NEG_INF)
+                new_mx = jnp.maximum(mx, s_.max(axis=-1))
+                p = jnp.exp(s_ - new_mx[..., None])
+                corr = jnp.exp(mx - new_mx)
+                new_sm = sm * corr + p.sum(axis=-1)
+                new_acc = acc * corr[..., None] + jnp.einsum(
+                    "bkgqc,bkcd->bkgqd", p.astype(vblk.dtype), vblk)
+                return new_acc, new_mx, new_sm
+
+            # Skip chunks entirely in the future of this q chunk.
+            needed = (kj * k_chunk) <= (qi * q_chunk + q_chunk - 1)
+            return jax.lax.cond(needed, attend, lambda _: (acc, mx, sm),
+                                operand=None), None
+
+        acc0 = jnp.zeros((b, kvh, g, q_chunk, dh), jnp.float32)
+        mx0 = jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32)
+        sm0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        (acc, mx, sm), _ = jax.lax.scan(inner, (acc0, mx0, sm0),
+                                        jnp.arange(nk))
+        return acc / jnp.maximum(sm, 1e-30)[..., None]
+
+    out = jax.lax.map(per_q_chunk, jnp.arange(nq))          # [nq,B,KV,G,qc,dh]
+    out = jnp.moveaxis(out, 0, 3)                            # [B,KV,G,nq,qc,dh]
+    out = out.reshape(b, h, s, dh).astype(q.dtype)
+    return shd(out, ("attn_batch", "q_heads", None, "head"))
+
+
+def attention_train(p, x, dims: AttnDims, q_chunk: int = 512,
+                    k_chunk: int = 1024):
+    """Full-sequence causal self-attention (train / prefill forward)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :].repeat(b, 0)
+    q, k, v = _project_qkv(p, x, dims, positions)
+    out = chunked_causal_attention(q, k, v, q_chunk, k_chunk)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shd(y, ("attn_batch", None, None))
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, KV, S_max, dh]
+    v: jax.Array  # [B, KV, S_max, dh]
+
+
+def init_kv_cache(batch: int, dims: AttnDims, max_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, dims.n_kv, max_len, dims.d_head)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def kv_cache_axes() -> KVCache:
+    ax = ("batch", "kv_heads", "seq", "head")
+    return KVCache(ax, ax)
+
+
+def attention_prefill(p, x, dims: AttnDims, cache: KVCache,
+                      q_chunk: int = 512, k_chunk: int = 1024):
+    """Prefill: run train-style attention AND write the KV cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :].repeat(b, 0)
+    q, k, v = _project_qkv(p, x, dims, positions)
+    out = chunked_causal_attention(q, k, v, q_chunk, k_chunk)
+    new_cache = KVCache(
+        jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), 0, axis=2),
+        jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), 0, axis=2))
+    y = shd(jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype)),
+            ("attn_batch", None, None))
+    return y, new_cache
+
+
+def attention_decode(p, x, dims: AttnDims, cache: KVCache, pos: jax.Array):
+    """Single-token decode: x [B,1,D], pos scalar int32 (current index)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, dims, positions)       # q [B,H,1,dh]
+    new_cache = KVCache(
+        jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                            pos, axis=2),
+        jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                            pos, axis=2))
+    kvh = dims.n_kv
+    g = dims.n_heads // kvh
+    qg = q.reshape(b, kvh, g, dims.d_head)              # squeeze S=1
+    kk = new_cache.k.astype(jnp.float32)
+    vv = new_cache.v.astype(jnp.float32)
+    s_ = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32), kk)
+    s_ = s_ * dims.d_head ** -0.5
+    valid = jnp.arange(kk.shape[2])[None, None, None, :] <= pos
+    s_ = jnp.where(valid, s_, NEG_INF)
+    w = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, vv)
+    out = out.reshape(b, 1, dims.n_heads, dims.d_head).astype(x.dtype)
+    y = shd(jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)),
+            ("attn_batch", None, None))
+    return y, new_cache
+
+
+# --------------------------------------------------------------- cross-attn
+
+def init_cross_attention(pf: ParamFactory, dims: AttnDims, d_source: int):
+    d, h, kv, dh = dims.d_model, dims.n_heads, dims.n_kv, dims.d_head
+    tree = {
+        "wq": pf.dense((d, h, dh), ("embed", "q_heads", "head")),
+        "wk": pf.dense((d_source, kv, dh), ("vision_embed", "kv_heads", "head")),
+        "wv": pf.dense((d_source, kv, dh), ("vision_embed", "kv_heads", "head")),
+        "wo": pf.dense((h, dh, d), ("q_heads", "head", "embed"),
+                       scale=1.0 / (h * dh) ** 0.5),
+        "gate": pf.zeros((), (None,)),  # tanh-gated residual (scalar axes marker)
+    }
+    return split_tree(tree)
+
+
+def cross_attention(p, x, source, dims: AttnDims):
+    """x [B,S,D] attends to source [B,T,Ds] (no causal mask, no RoPE)."""
+    b, s, _ = x.shape
+    kvh = dims.n_kv
+    g = dims.n_heads // kvh
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bhtk", source.astype(x.dtype), p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bhtk", source.astype(x.dtype), p["wv"].astype(x.dtype))
+    qg = q.reshape(b, kvh, g, s, dims.d_head)
+    s_ = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * dims.d_head ** -0.5
+    w = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    out = out.reshape(b, dims.n_heads, s, dims.d_head).astype(x.dtype)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return jnp.tanh(p["gate"].astype(x.dtype)) * y

@@ -1,0 +1,104 @@
+"""Shared model building blocks: param factory with logical-axis tracking,
+RMSNorm, rotary embeddings, initializers.
+
+Params are nested dicts of jax arrays. Alongside every params tree we build a
+structurally identical `axes` tree whose leaves are tuples of *logical axis
+names* (e.g. ("embed", "q_heads", "head")); sharding/rules.py maps logical
+axes to mesh axes to produce NamedShardings for pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+Axes = dict
+
+
+class ParamFactory:
+    """Creates params and records their logical axes in lockstep."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+
+    def next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def dense(self, shape: tuple[int, ...], axes: tuple[str, ...],
+              scale: float | None = None) -> tuple[jax.Array, tuple[str, ...]]:
+        assert len(shape) == len(axes), (shape, axes)
+        fan_in = shape[0]
+        s = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        w = jax.random.normal(self.next_key(), shape, self.dtype) * s
+        return w, axes
+
+    def zeros(self, shape, axes):
+        return jnp.zeros(shape, self.dtype), axes
+
+    def ones(self, shape, axes):
+        return jnp.ones(shape, self.dtype), axes
+
+    def embedding(self, vocab: int, d: int) -> tuple[jax.Array, tuple[str, str]]:
+        w = jax.random.normal(self.next_key(), (vocab, d), self.dtype) * 0.02
+        return w, ("vocab", "embed")
+
+
+def split_tree(pairs):
+    """{name: (param, axes)} (possibly nested) -> (params_tree, axes_tree)."""
+    params, axes = {}, {}
+    for name, val in pairs.items():
+        if isinstance(val, dict):
+            p, a = split_tree(val)
+        else:
+            p, a = val
+        params[name], axes[name] = p, a
+    return params, axes
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def init_rms(pf: ParamFactory, d: int):
+    return pf.ones((d,), ("embed",))
+
+
+# ----------------------------------------------------------------- rotary
+
+def rope_cos_sin(positions: jax.Array, d_head: int,
+                 theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [...,] -> cos/sin [..., d_head//2] (f32)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, D]; cos/sin broadcastable [..., S, D/2] (half-split rotary)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> jax.Array:
+    """Mean CE over all positions (f32 logsumexp), with optional z-loss for
+    logit drift control at scale."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - ll).mean()
+    if z_loss:
+        loss = loss + z_loss * (lse ** 2).mean()
+    return loss

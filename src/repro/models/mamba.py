@@ -1,0 +1,162 @@
+"""Mamba (S6) selective state-space mixer.
+
+Train/prefill: chunked parallel form — `lax.scan` over sequence chunks
+carrying the SSM state, `associative_scan` within each chunk. Working set is
+O(B · L_chunk · d_inner · d_state) per chunk with d_inner sharded over the
+`model` axis, which is what makes jamba's 4k/32k shapes lower with bounded
+memory. Decode: O(1) recurrent step on (conv_state, ssm_state).
+
+Discretization (zero-order hold, as in the paper):
+  h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t ;  y_t = C_t h_t + D x_t
+with A diagonal (d_inner × d_state), Δ_t = softplus(dt_proj(x) + dt_bias).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamFactory, split_tree
+from repro.sharding.rules import constrain as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    expand: int = 2
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int | None = None   # default ceil(d_model/16)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank if self.dt_rank is not None else -(-self.d_model // 16)
+
+
+def init_mamba(pf: ParamFactory, dims: MambaDims):
+    d, di, n, r = dims.d_model, dims.d_inner, dims.d_state, dims.rank
+    a_init = jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1)))
+    return split_tree({
+        "in_proj": pf.dense((d, 2 * di), ("embed", "mlp")),
+        "conv_w": pf.dense((dims.d_conv, di), ("conv", "mlp"), scale=0.5),
+        "conv_b": pf.zeros((di,), ("mlp",)),
+        "x_proj": pf.dense((di, r + 2 * n), ("mlp", "ssm_in")),
+        "dt_proj": pf.dense((r, di), ("ssm_rank", "mlp")),
+        "dt_bias": (jnp.zeros((di,), pf.dtype) + jnp.log(jnp.expm1(0.01)),
+                    ("mlp",)),
+        "a_log": (a_init.astype(pf.dtype), ("mlp", "ssm_state")),
+        "d_skip": pf.ones((di,), ("mlp",)),
+        "out_proj": pf.dense((di, d), ("mlp", "embed")),
+    })
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # [B, d_conv-1, d_inner] rolling conv inputs
+    ssm: jax.Array    # [B, d_inner, d_state]
+
+
+def init_mamba_state(batch: int, dims: MambaDims, dtype=jnp.float32) -> MambaState:
+    return MambaState(
+        jnp.zeros((batch, dims.d_conv - 1, dims.d_inner), dtype),
+        jnp.zeros((batch, dims.d_inner, dims.d_state), dtype))
+
+
+def mamba_state_axes() -> MambaState:
+    return MambaState(("batch", None, "mlp"), ("batch", "mlp", "ssm_state"))
+
+
+def _ssm_params(p, xz, dims: MambaDims):
+    """xz [B,L,di] (post-conv, post-silu) -> Δ [B,L,di], B̃/C̃ [B,L,n]."""
+    n, r = dims.d_state, dims.rank
+    proj = jnp.einsum("bld,dk->blk", xz, p["x_proj"].astype(xz.dtype))
+    dt, b_, c_ = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jnp.einsum("blr,rd->bld", dt, p["dt_proj"].astype(xz.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    return dt, b_.astype(jnp.float32), c_.astype(jnp.float32)
+
+
+def _chunk_scan(h0, dt, b_, c_, x, a):
+    """One chunk: h0 [B,di,n]; dt/x [B,L,di]; b_/c_ [B,L,n]; a [di,n].
+    Returns (y [B,L,di], h_last)."""
+    da = jnp.exp(dt[..., None] * a[None, None])              # [B,L,di,n]
+    dbx = dt[..., None] * b_[:, :, None, :] * x[..., None]   # [B,L,di,n]
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    acc_a, acc_b = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    h = acc_a * h0[:, None] + acc_b                          # [B,L,di,n]
+    y = jnp.einsum("bldn,bln->bld", h, c_)
+    return y, h[:, -1]
+
+
+def mamba_forward(p, x, dims: MambaDims, chunk: int = 256):
+    """Train/prefill parallel form. x [B,S,D] -> (y [B,S,D], final MambaState)."""
+    b, s, d = x.shape
+    di = dims.d_inner
+    xz = shd(jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype)),
+             ("batch", None, "mlp"))
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    # Depthwise causal conv over time (kernel d_conv).
+    pad = dims.d_conv - 1
+    xp = jnp.pad(xs, ((0, 0), (pad, 0), (0, 0)))
+    xc = sum(xp[:, i:i + s, :] * p["conv_w"].astype(x.dtype)[i][None, None]
+             for i in range(dims.d_conv))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))
+
+    dt, b_, c_ = _ssm_params(p, xc, dims)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xcf = xc.astype(jnp.float32)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nchunks = s // chunk
+
+    def step(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 1)
+        y, h_next = _chunk_scan(h, sl(dt), sl(b_), sl(c_), sl(xcf), a)
+        return h_next, y
+
+    h0 = shd(jnp.zeros((b, di, dims.d_state), jnp.float32),
+             ("batch", "mlp", None))
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(nchunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di).astype(x.dtype)
+    y = y + xcf.astype(x.dtype) * p["d_skip"].astype(x.dtype)[None, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    state = MambaState(xp[:, -pad:, :].astype(jnp.float32) if pad else
+                       jnp.zeros((b, 0, di), jnp.float32), h_last)
+    return out, state
+
+
+def mamba_decode(p, x, dims: MambaDims, state: MambaState):
+    """Single-token recurrent step. x [B,1,D] -> (y [B,1,D], new state)."""
+    b = x.shape[0]
+    di = dims.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xs, z = jnp.split(xz, 2, axis=-1)          # [B,1,di]
+
+    window = jnp.concatenate([state.conv.astype(x.dtype), xs], axis=1)  # [B,d_conv,di]
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(x.dtype))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))[:, None]          # [B,1,di]
+
+    dt, b_, c_ = _ssm_params(p, xc, dims)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0, :, None] * a[None])                # [B,di,n]
+    dbx = dt[:, 0, :, None] * b_[:, 0, None, :] * xc.astype(jnp.float32)[:, 0, :, None]
+    h = state.ssm * da + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_[:, 0])[:, None]       # [B,1,di]
+    y = y.astype(x.dtype) + xc * p["d_skip"].astype(x.dtype)[None, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, MambaState(window[:, 1:].astype(jnp.float32), h)

@@ -1,0 +1,23 @@
+"""SwiGLU MLP (dense channel mixer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamFactory, split_tree
+from repro.sharding.rules import constrain as shd
+
+
+def init_mlp(pf: ParamFactory, d_model: int, d_ff: int):
+    return split_tree({
+        "wi": pf.dense((d_model, d_ff), ("embed", "mlp")),
+        "wg": pf.dense((d_model, d_ff), ("embed", "mlp")),
+        "wo": pf.dense((d_ff, d_model), ("mlp", "embed")),
+    })
+
+
+def apply_mlp(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+    h = shd(jax.nn.silu(g) * h, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))

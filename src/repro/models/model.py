@@ -1,0 +1,332 @@
+"""Unified decoder LM over a repeating layer pattern.
+
+Per-period weights are stacked over repeats and the stack is `lax.scan`'d, so
+HLO size is independent of depth (llama-405b's 126 layers lower as one scan).
+Modes:
+  * train   — full-sequence forward, CE loss (+ MoE aux), no caches
+  * prefill — full-sequence forward + cache build (serve_prefill)
+  * decode  — one-token step against caches (serve_step)
+
+Caches are per-pattern-position NamedTuples with a leading `layers` (repeat)
+axis so they ride the same scan as the weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import (ParamFactory, cross_entropy, init_rms,
+                                 rms_norm, split_tree)
+from repro.sharding.rules import constrain as shd, is_axes_leaf
+
+
+# ------------------------------------------------------------ dims helpers
+
+def attn_dims(cfg: ModelConfig) -> attn_lib.AttnDims:
+    return attn_lib.AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.head_dim, cfg.qkv_bias, cfg.rope_theta)
+
+
+def moe_dims(cfg: ModelConfig) -> moe_lib.MoEDims:
+    return moe_lib.MoEDims(cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                           cfg.n_experts, cfg.top_k, cfg.capacity_factor,
+                           cfg.moe_dispatch)
+
+
+def mamba_dims(cfg: ModelConfig) -> mamba_lib.MambaDims:
+    return mamba_lib.MambaDims(cfg.d_model, cfg.mamba_expand,
+                               cfg.mamba_d_state, cfg.mamba_d_conv)
+
+
+def xlstm_dims(cfg: ModelConfig) -> xlstm_lib.XLSTMDims:
+    return xlstm_lib.XLSTMDims(cfg.d_model, cfg.n_heads,
+                               cfg.xlstm_proj_factor)
+
+
+# ------------------------------------------------------------ layer init
+
+def _init_layer(pf: ParamFactory, spec: LayerSpec, cfg: ModelConfig):
+    tree: dict[str, Any] = {"norm1": init_rms(pf, cfg.d_model)}
+    if spec.mixer == "attn":
+        tree["attn"] = init_attention_pair(pf, cfg)
+    elif spec.mixer == "xattn":
+        tree["xattn"] = attn_lib.init_cross_attention(pf, attn_dims(cfg),
+                                                      cfg.d_model)
+    elif spec.mixer == "mamba":
+        tree["mamba"] = mamba_lib.init_mamba(pf, mamba_dims(cfg))
+    elif spec.mixer == "mlstm":
+        tree["mlstm"] = xlstm_lib.init_mlstm(pf, xlstm_dims(cfg))
+    elif spec.mixer == "slstm":
+        tree["slstm"] = xlstm_lib.init_slstm(pf, xlstm_dims(cfg))
+    else:
+        raise ValueError(spec.mixer)
+    if spec.channel == "mlp":
+        tree["norm2"] = init_rms(pf, cfg.d_model)
+        tree["mlp"] = mlp_lib.init_mlp(pf, cfg.d_model, cfg.d_ff)
+    elif spec.channel == "moe":
+        tree["norm2"] = init_rms(pf, cfg.d_model)
+        tree["moe"] = moe_lib.init_moe(pf, moe_dims(cfg))
+    elif spec.channel != "none":
+        raise ValueError(spec.channel)
+    return split_tree(tree)
+
+
+def init_attention_pair(pf: ParamFactory, cfg: ModelConfig):
+    return attn_lib.init_attention(pf, attn_dims(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    """Returns (params, axes): nested dicts; layer leaves stacked [R, ...]."""
+    pf = ParamFactory(key, dtype)
+    r = cfg.n_repeats
+
+    if cfg.n_codebooks:
+        embed = (jax.random.normal(pf.next_key(),
+                                   (cfg.n_codebooks, cfg.vocab_size, cfg.d_model),
+                                   dtype) * 0.02,
+                 ("codebooks", "vocab", "embed"))
+        head = pf.dense((cfg.n_codebooks, cfg.d_model, cfg.vocab_size),
+                        ("codebooks", "embed", "vocab"))
+    else:
+        embed = pf.embedding(cfg.vocab_size, cfg.d_model)
+        head = pf.dense((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+
+    top: dict[str, Any] = {"embed": embed, "final_norm": init_rms(pf, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        top["lm_head"] = head
+    if cfg.n_vision_tokens:
+        top["vision_proj"] = pf.dense((cfg.d_vision, cfg.d_model),
+                                      ("vision_embed", "embed"))
+
+    layers_p, layers_a = [], []
+    for spec in cfg.pattern:
+        def one(k):
+            sub = ParamFactory(k, dtype)
+            return _init_layer(sub, spec, cfg)[0]
+        keys = jax.random.split(pf.next_key(), r)
+        stacked = jax.vmap(one)(keys)
+        _, ax = _init_layer(ParamFactory(pf.next_key(), dtype), spec, cfg)
+        ax = jax.tree.map(lambda a: ("layers",) + a, ax, is_leaf=is_axes_leaf)
+        layers_p.append(stacked)
+        layers_a.append(ax)
+
+    params, axes = split_tree(top)
+    params["layers"] = tuple(layers_p)
+    axes["layers"] = tuple(layers_a)
+    return params, axes
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    """(ShapeDtypeStruct tree, axes tree) without allocating (dry-run path).
+    Axes are plain Python data, captured out-of-band from the abstract trace."""
+    box = {}
+
+    def fn(key):
+        p, a = init_params(cfg, key, dtype)
+        box["axes"] = a
+        return p
+
+    sds = jax.eval_shape(fn, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sds, box["axes"]
+
+
+# ------------------------------------------------------------ caches
+
+def init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                     max_len: int, dtype=jnp.bfloat16):
+    if spec.mixer == "attn":
+        return attn_lib.init_kv_cache(batch, attn_dims(cfg), max_len, dtype)
+    if spec.mixer == "mamba":
+        return mamba_lib.init_mamba_state(batch, mamba_dims(cfg))
+    if spec.mixer == "mlstm":
+        return xlstm_lib.init_mlstm_state(batch, xlstm_dims(cfg))
+    if spec.mixer == "slstm":
+        return xlstm_lib.init_slstm_state(batch, xlstm_dims(cfg))
+    return ()   # xattn: source is static, no cache
+
+
+def layer_cache_axes(spec: LayerSpec):
+    if spec.mixer == "attn":
+        return attn_lib.kv_cache_axes()
+    if spec.mixer == "mamba":
+        return mamba_lib.mamba_state_axes()
+    if spec.mixer == "mlstm":
+        return xlstm_lib.mlstm_state_axes()
+    if spec.mixer == "slstm":
+        return xlstm_lib.slstm_state_axes()
+    return ()
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Tuple over pattern positions; leaves stacked [R, ...]."""
+    r = cfg.n_repeats
+    out = []
+    for spec in cfg.pattern:
+        c = init_layer_cache(spec, cfg, batch, max_len, dtype)
+        out.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (r,) + a.shape), c))
+    return tuple(out)
+
+
+def cache_axes(cfg: ModelConfig):
+    out = []
+    for spec in cfg.pattern:
+        ax = layer_cache_axes(spec)
+        out.append(jax.tree.map(lambda a: ("layers",) + a, ax,
+                                is_leaf=is_axes_leaf))
+    return tuple(out)
+
+
+# ------------------------------------------------------------ layer apply
+
+def apply_layer(spec: LayerSpec, p, x, cfg: ModelConfig, mode: str,
+                cache=None, pos=None, vision=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_cache = cache
+    if spec.mixer in ("attn", "mlstm", "slstm"):
+        # Batch-DP mixers: reshard the mixer input once (all-to-all) so all
+        # internal einsums share the attn_batch layout (no per-block comms).
+        h = shd(h, ("attn_batch", None, None))
+    if spec.mixer == "attn":
+        if mode == "train":
+            y = attn_lib.attention_train(p["attn"], h, attn_dims(cfg),
+                                         cfg.q_chunk, cfg.k_chunk)
+        elif mode == "prefill":
+            y, new_cache = attn_lib.attention_prefill(
+                p["attn"], h, attn_dims(cfg), cache, cfg.q_chunk, cfg.k_chunk)
+        else:
+            y, new_cache = attn_lib.attention_decode(
+                p["attn"], h, attn_dims(cfg), cache, pos)
+    elif spec.mixer == "xattn":
+        y = attn_lib.cross_attention(p["xattn"], h, vision, attn_dims(cfg))
+    elif spec.mixer == "mamba":
+        if mode == "decode":
+            y, new_cache = mamba_lib.mamba_decode(p["mamba"], h,
+                                                  mamba_dims(cfg), cache)
+        else:
+            y, st = mamba_lib.mamba_forward(p["mamba"], h, mamba_dims(cfg),
+                                            cfg.mamba_chunk)
+            new_cache = st if mode == "prefill" else cache
+    elif spec.mixer == "mlstm":
+        if mode == "decode":
+            y, new_cache = xlstm_lib.mlstm_decode(p["mlstm"], h,
+                                                  xlstm_dims(cfg), cache)
+        else:
+            y, st = xlstm_lib.mlstm_forward(p["mlstm"], h, xlstm_dims(cfg))
+            new_cache = st if mode == "prefill" else cache
+    elif spec.mixer == "slstm":
+        if mode == "decode":
+            y, new_cache = xlstm_lib.slstm_decode(p["slstm"], h,
+                                                  xlstm_dims(cfg), cache)
+        else:
+            y, st = xlstm_lib.slstm_forward(p["slstm"], h, xlstm_dims(cfg))
+            new_cache = st if mode == "prefill" else cache
+    x = shd(x + y, ("batch", None, None))
+
+    if spec.channel == "mlp":
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp_lib.apply_mlp(p["mlp"], h2)
+    elif spec.channel == "moe":
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        y2, aux = moe_lib.apply_moe(p["moe"], h2, moe_dims(cfg))
+        x = x + y2
+    x = shd(x, ("batch", None, None))
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------ model fwd
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    emb = params["embed"]
+    if cfg.n_codebooks:
+        # tokens [B, K, S]: sum codebook embeddings
+        parts = [jnp.take(emb[k], tokens[:, k], axis=0)
+                 for k in range(cfg.n_codebooks)]
+        return functools.reduce(jnp.add, parts)
+    return jnp.take(emb, tokens, axis=0)
+
+
+def output_logits(params, cfg: ModelConfig, x):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.n_codebooks:
+        if cfg.tie_embeddings:
+            return jnp.einsum("bsd,kvd->bksv", x, head)
+        return jnp.einsum("bsd,kdv->bksv", x, head.astype(x.dtype))
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, head.astype(x.dtype))
+    return jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+
+
+def forward(params, cfg: ModelConfig, tokens, mode: str = "train",
+            caches=None, pos=None, vision=None, compute_dtype=jnp.bfloat16,
+            remat: bool = True):
+    """tokens int32 [B,S] ([B,K,S] audio). Returns (logits, new_caches, aux)."""
+    x = embed_tokens(params, cfg, tokens).astype(compute_dtype)
+    x = shd(x, ("batch", None, None))
+    if vision is not None and "vision_proj" in params:
+        vision = jnp.einsum("btd,de->bte", vision.astype(compute_dtype),
+                            params["vision_proj"].astype(compute_dtype))
+
+    n_pos = len(cfg.pattern)
+    have_cache = caches is not None
+
+    def body(x_aux, slices):
+        x, aux_acc = x_aux
+        layer_ps = slices[0]
+        cache_slice = slices[1] if have_cache else (None,) * n_pos
+        new_caches = []
+        for i, spec in enumerate(cfg.pattern):
+            c_in = cache_slice[i] if have_cache else None
+            x, c_out, aux = apply_layer(spec, layer_ps[i], x, cfg, mode,
+                                        c_in, pos, vision)
+            new_caches.append(c_out if c_out is not None else ())
+        return (x, aux_acc + aux), tuple(new_caches)
+
+    scan_body = jax.checkpoint(body) if (remat and mode == "train") else body
+    xs = (params["layers"], caches) if have_cache else (params["layers"],)
+    (x, aux), new_caches = jax.lax.scan(scan_body,
+                                        (x, jnp.zeros((), jnp.float32)), xs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = output_logits(params, cfg, x)
+    return logits, (new_caches if have_cache else None), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, compute_dtype=jnp.bfloat16,
+            remat: bool = True, aux_weight: float = 0.01):
+    logits, _, aux = forward(params, cfg, batch["tokens"], "train",
+                             vision=batch.get("vision"),
+                             compute_dtype=compute_dtype, remat=remat)
+    ce = cross_entropy(logits, batch["labels"])
+    return ce + aux_weight * aux / max(cfg.n_layers, 1), {"ce": ce, "aux": aux}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, pos,
+                vision=None, compute_dtype=jnp.bfloat16):
+    """One serve step: tokens [B,1] ([B,K,1] audio) at position `pos`.
+    Returns (next_tokens, new_caches)."""
+    logits, new_caches, _ = forward(params, cfg, tokens, "decode",
+                                    caches=caches, pos=pos, vision=vision,
+                                    compute_dtype=compute_dtype, remat=False)
+    nxt = jnp.argmax(logits[..., -1, :] if not cfg.n_codebooks
+                     else logits[:, :, -1, :], axis=-1).astype(jnp.int32)
+    return nxt[..., None], new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, caches, vision=None,
+            compute_dtype=jnp.bfloat16):
+    logits, new_caches, _ = forward(params, cfg, tokens, "prefill",
+                                    caches=caches, vision=vision,
+                                    compute_dtype=compute_dtype, remat=False)
+    return logits, new_caches

@@ -1,0 +1,208 @@
+"""Top-k routed Mixture-of-Experts with capacity-bounded sort-based dispatch.
+
+Expert-parallel design (DESIGN.md §5): expert weights are stacked [E, ...]
+and sharded over the `model` mesh axis; tokens live on `data` shards. The
+dispatch is expressed as gather/scatter into a per-expert buffer [E, C, D]
+with static capacity C — GSPMD turns the data→expert movement into
+collectives on the model axis. Token slot assignment within an expert is
+computed with a sort-based rank (no [T, E, C] one-hot tensor is ever
+materialized; peak extra memory is the [E, C, D] buffer).
+
+Load-balancing auxiliary loss follows Switch/Mixtral: E · Σ_e f_e · p_e.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamFactory, split_tree
+from repro.sharding.rules import constrain as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    d_model: int
+    d_ff: int          # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # "grouped": per-sequence local dispatch + explicit expert reshard
+    #   (all-to-all on the model axis) — EXPERIMENTS.md §Perf iteration 1.
+    # "global": single global buffer (baseline; GSPMD turns the sharded
+    #   scatter into a full-buffer all-reduce — measured 64 GB/layer on
+    #   granite — kept for the before/after record).
+    dispatch: str = "grouped"
+
+
+def init_moe(pf: ParamFactory, dims: MoEDims):
+    d, f, e = dims.d_model, dims.d_ff, dims.n_experts
+    return split_tree({
+        "router": pf.dense((d, e), ("embed", "experts"), scale=0.02),
+        "wi": pf.dense((e, d, f), ("experts", "embed", "mlp")),
+        "wg": pf.dense((e, d, f), ("experts", "embed", "mlp")),
+        "wo": pf.dense((e, f, d), ("experts", "mlp", "embed")),
+    })
+
+
+def apply_moe(p, x, dims: MoEDims):
+    """x [B,S,D] -> (y [B,S,D], aux_loss scalar)."""
+    if dims.dispatch == "grouped":
+        return apply_moe_grouped(p, x, dims)
+    return apply_moe_global(p, x, dims)
+
+
+@jax.custom_vjp
+def bf16_grad(x):
+    """Identity whose cotangent is rounded through bf16 (gradient
+    compression hook). §Perf iteration 3 applied this at the EP exchange,
+    hypothesizing XLA would hoist the convert past the all-gather and halve
+    the boundary bytes — REFUTED on the CPU XLA backend (convert stays on
+    the producer side; gathered bytes unchanged), so it is not applied by
+    default. Kept as the documented hook for TPU, where the
+    collective-combiner pass does hoist converts."""
+    return x
+
+
+def _bf16_grad_fwd(x):
+    return x, None
+
+
+def _bf16_grad_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype),)
+
+
+bf16_grad.defvjp(_bf16_grad_fwd, _bf16_grad_bwd)
+
+
+def _route(p, xt, dims: MoEDims):
+    """xt [T,D] -> (gate_w [T,k], gate_idx [T,k], aux scalar)."""
+    e, k = dims.n_experts, dims.top_k
+    t = xt.shape[0]
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(xt.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)               # [T,k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    ones = jnp.zeros((t, e), jnp.float32).at[
+        jnp.arange(t)[:, None], gate_idx].set(1.0)
+    frac = ones.mean(0)
+    aux = e * jnp.sum(frac * probs.mean(0))
+    return gate_w, gate_idx, aux
+
+
+def _rank_in_expert(flat_expert: jax.Array, e: int) -> jax.Array:
+    """Slot index of each (token,k) assignment within its expert's buffer."""
+    n = flat_expert.shape[0]
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_e = flat_expert[order]
+    first_pos = jnp.full((e,), n, jnp.int32).at[sorted_e].min(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    rank_sorted = jnp.arange(n) - first_pos[sorted_e]
+    return jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+
+
+def apply_moe_grouped(p, x, dims: MoEDims):
+    """Per-sequence dispatch: routing, ranking and scatter are LOCAL to each
+    sequence (vmap over batch — batch is data-sharded, so no cross-shard
+    scatter reduction). The [B, E, C, D] buffer is then constrained to
+    (batch→data, experts→model): GSPMD emits exactly one all-to-all each way
+    on the model axis — the canonical EP exchange. When E doesn't divide the
+    model axis (granite's 40 on 16) the constraint falls back to replicated
+    experts: expert weights are gathered instead of token slots crossing
+    shards (the right tradeoff for small expert weights)."""
+    b, s, d = x.shape
+    e, k = dims.n_experts, dims.top_k
+    capacity = min(int(dims.capacity_factor * s * k / e) + 1, s * k)
+
+    gate_w, gate_idx, aux = _route(p, x.reshape(b * s, d), dims)
+    gate_w = gate_w.reshape(b, s, k)
+    gate_idx = gate_idx.reshape(b, s, k)
+
+    def dispatch_one(xs, gw, gi):
+        """xs [S,D]; gw/gi [S,k] -> (buf [E,C,D], keep, rank, flat idx)."""
+        flat_e = gi.reshape(-1)                       # [S*k]
+        flat_tok = jnp.repeat(jnp.arange(s), k)
+        rank = _rank_in_expert(flat_e, e)
+        keep = rank < capacity
+        safe_rank = jnp.where(keep, rank, capacity - 1)
+        buf = jnp.zeros((e, capacity, d), xs.dtype)
+        buf = buf.at[flat_e, safe_rank].add(
+            jnp.where(keep[:, None], xs[flat_tok], 0).astype(xs.dtype))
+        return buf, (flat_e, flat_tok, safe_rank, keep)
+
+    buf, meta = jax.vmap(dispatch_one)(x, gate_w, gate_idx)   # [B,E,C,D]
+    buf = shd(buf, ("batch", "experts", None, None))          # EP all-to-all
+
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(x.dtype))
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(x.dtype))
+    o = jnp.einsum("becf,efd->becd",
+                   shd(jax.nn.silu(g) * h, ("batch", "experts", None, "mlp")),
+                   p["wo"].astype(x.dtype))
+    # Return exchange: experts back to token-local layout. NOTE (§Perf
+    # iterations 2a/2b, both REFUTED): constraining this boundary to a
+    # (data×model) batch layout — alone or with gates/metadata pinned too —
+    # made GSPMD reshard the [S·k, D] combine-gather intermediates instead
+    # (tx 19s → 108s → 375s). GSPMD's scatter/gather partitioning only keeps
+    # the combine local when it follows the token-data layout, so the
+    # backward of this boundary costs one full-E buffer all-gather per layer.
+    # Driving that out needs a manual shard_map EP exchange (future work).
+    o = shd(o, ("batch", None, None, None))
+
+    def combine_one(ob, gwb, m):
+        flat_e, flat_tok, safe_rank, keep = m
+        gathered = ob[flat_e, safe_rank]                      # [S*k, D]
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        wts = gwb.reshape(-1)[:, None].astype(ob.dtype)
+        return jnp.zeros((s, d), ob.dtype).at[flat_tok].add(gathered * wts)
+
+    y = jax.vmap(combine_one)(o, gate_w, meta)
+    return y.reshape(b, s, d), aux
+
+
+def apply_moe_global(p, x, dims: MoEDims):
+    """Baseline single-global-buffer dispatch (kept for §Perf before/after)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = dims.n_experts, dims.top_k
+
+    gate_w, gate_idx, aux = _route(p, xt, dims)
+
+    capacity = int(dims.capacity_factor * t * k / e) + 1
+    capacity = min(capacity, t)
+
+    # Slot ranking: sort the T·k assignments by expert; rank within runs.
+    flat_expert = gate_idx.reshape(-1)                       # [T*k]
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_w.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_e = flat_expert[order]
+    # rank within each expert run = position - first-position-of-expert
+    first_pos = jnp.full((e,), t * k, jnp.int32).at[sorted_e].min(
+        jnp.arange(t * k, dtype=jnp.int32), mode="drop")
+    rank_sorted = jnp.arange(t * k) - first_pos[sorted_e]
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    keep = rank < capacity                                   # dropped beyond C
+
+    # Scatter tokens into per-expert buffers [E, C, D].
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    safe_rank = jnp.where(keep, rank, capacity - 1)
+    buf = buf.at[flat_expert, safe_rank].add(
+        jnp.where(keep[:, None], xt[flat_token], 0).astype(x.dtype))
+    buf = shd(buf, ("experts", None, None))
+
+    # Expert FFN (stacked einsum over the expert axis — model-parallel).
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(x.dtype))
+    o = jnp.einsum("ecf,efd->ecd", shd(jax.nn.silu(g) * h, ("experts", None, "mlp")),
+                   p["wo"].astype(x.dtype))
+    o = shd(o, ("experts", None, None))
+
+    # Combine back: gather each kept slot's output, weight, and sum over k.
+    gathered = o[flat_expert, safe_rank]                     # [T*k, D]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = jnp.zeros((t, d), x.dtype).at[flat_token].add(
+        gathered * flat_gate[:, None].astype(x.dtype))
+    return y.reshape(b, s, d), aux

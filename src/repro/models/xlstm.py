@@ -1,0 +1,241 @@
+"""xLSTM mixers: mLSTM (matrix memory, exponentially gated) and sLSTM
+(scalar memory with block-diagonal recurrence), per arXiv:2405.04517.
+
+Both use exponential gating with the max-state stabilizer m_t. Train/prefill
+runs a `lax.scan` over time (hidden state is O(1) per step, so 500k-token
+decode is trivially sub-quadratic — this arch runs the long_500k shape).
+Head dims are sharded over the `model` axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamFactory, split_tree
+from repro.sharding.rules import constrain as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMDims:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0     # mLSTM up-projection factor
+    conv_kernel: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def d_head(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ------------------------------------------------------------------ mLSTM
+
+def init_mlstm(pf: ParamFactory, dims: XLSTMDims):
+    d, di, h, dh = dims.d_model, dims.d_inner, dims.n_heads, dims.d_head
+    return split_tree({
+        "up_proj": pf.dense((d, 2 * di), ("embed", "mlp")),
+        "conv_w": pf.dense((dims.conv_kernel, di), ("conv", "mlp"), scale=0.5),
+        "conv_b": pf.zeros((di,), ("mlp",)),
+        "wq": pf.dense((di, h, dh), ("mlp", "q_heads", "head")),
+        "wk": pf.dense((di, h, dh), ("mlp", "q_heads", "head")),
+        "wv": pf.dense((di, h, dh), ("mlp", "q_heads", "head")),
+        "w_i": pf.dense((di, h), ("mlp", "q_heads"), scale=0.02),
+        "w_f": pf.dense((di, h), ("mlp", "q_heads"), scale=0.02),
+        "b_i": pf.zeros((h,), ("q_heads",)),
+        "b_f": (jnp.full((h,), 3.0, pf.dtype), ("q_heads",)),  # long memory init
+        "ln_scale": pf.ones((h, dh), ("q_heads", "head")),
+        "down_proj": pf.dense((di, d), ("mlp", "embed")),
+    })
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # [B, H, dh, dh] matrix memory
+    n: jax.Array   # [B, H, dh]    normalizer
+    m: jax.Array   # [B, H]        stabilizer (log-space max)
+    conv: jax.Array  # [B, k-1, di]
+
+
+def init_mlstm_state(batch: int, dims: XLSTMDims, dtype=jnp.float32) -> MLSTMState:
+    h, dh = dims.n_heads, dims.d_head
+    return MLSTMState(
+        jnp.zeros((batch, h, dh, dh), dtype),
+        jnp.zeros((batch, h, dh), dtype),
+        jnp.full((batch, h), -1e30, dtype),
+        jnp.zeros((batch, dims.conv_kernel - 1, dims.d_inner), dtype))
+
+
+def mlstm_state_axes() -> MLSTMState:
+    return MLSTMState(("batch", "q_heads", "head", None),
+                      ("batch", "q_heads", "head"),
+                      ("batch", "q_heads"),
+                      ("batch", None, "mlp"))
+
+
+def _mlstm_cell(state: MLSTMState, qkvif):
+    """One timestep. q/k/v [B,H,dh]; i/f pre-activations [B,H]."""
+    q, k, v, ig, fg = qkvif
+    c, n, m, conv = state
+    dh = q.shape[-1]
+    log_f = -jax.nn.softplus(-fg)             # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, ig)
+    i_ = jnp.exp(ig - m_new)
+    f_ = jnp.exp(log_f + m - m_new)
+    kn = k * (dh ** -0.5)
+    c_new = f_[..., None, None] * c + i_[..., None, None] * (
+        kn[..., :, None] * v[..., None, :])
+    n_new = f_[..., None] * n + i_[..., None] * kn
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)),
+                        jnp.exp(-m_new))
+    hval = jnp.einsum("bhde,bhd->bhe", c_new, q) / denom[..., None]
+    return MLSTMState(c_new, n_new, m_new, conv), hval
+
+
+def _causal_conv(p, xs, dims: XLSTMDims, conv_state=None):
+    pad = dims.conv_kernel - 1
+    if conv_state is None:
+        xp = jnp.pad(xs, ((0, 0), (pad, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(xs.dtype), xs], axis=1)
+    s = xs.shape[1]
+    out = sum(xp[:, i:i + s, :] * p["conv_w"].astype(xs.dtype)[i][None, None]
+              for i in range(dims.conv_kernel))
+    return jax.nn.silu(out + p["conv_b"].astype(xs.dtype)), xp[:, -pad:, :]
+
+
+def _mlstm_qkvif(p, xc, xs, dims: XLSTMDims):
+    q = shd(jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(xc.dtype)),
+            ("attn_batch", None, "q_heads", "head"))
+    k = shd(jnp.einsum("bsd,dhk->bshk", xc, p["wk"].astype(xc.dtype)),
+            ("attn_batch", None, "q_heads", "head"))
+    v = shd(jnp.einsum("bsd,dhk->bshk", xs, p["wv"].astype(xc.dtype)),
+            ("attn_batch", None, "q_heads", "head"))
+    ig = jnp.einsum("bsd,dh->bsh", xc, p["w_i"].astype(xc.dtype)) + p["b_i"]
+    fg = jnp.einsum("bsd,dh->bsh", xc, p["w_f"].astype(xc.dtype)) + p["b_f"]
+    f32 = lambda t: t.astype(jnp.float32)
+    return f32(q), f32(k), f32(v), f32(ig), f32(fg)
+
+
+def mlstm_forward(p, x, dims: XLSTMDims):
+    """x [B,S,D] -> (y, final state). Sequential scan over time."""
+    b, s, d = x.shape
+    up = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(x.dtype))
+    xs, z = jnp.split(up, 2, axis=-1)
+    xc, conv_tail = _causal_conv(p, xs, dims)
+    q, k, v, ig, fg = _mlstm_qkvif(p, xc, xs, dims)
+
+    state0 = init_mlstm_state(b, dims)
+    tseq = lambda t: jnp.moveaxis(t, 1, 0)    # scan over time axis
+    state, hs = jax.lax.scan(
+        _mlstm_cell, state0._replace(conv=state0.conv),
+        (tseq(q), tseq(k), tseq(v), tseq(ig), tseq(fg)))
+    hs = jnp.moveaxis(hs, 0, 1)               # [B,S,H,dh]
+    hs = hs * p["ln_scale"].astype(hs.dtype)[None, None]
+    hs = hs.reshape(b, s, dims.d_inner).astype(x.dtype)
+    y = hs * jax.nn.silu(z)
+    out = shd(jnp.einsum("bse,ed->bsd", y, p["down_proj"].astype(x.dtype)),
+              ("attn_batch", None, None))
+    return out, state._replace(conv=conv_tail.astype(jnp.float32))
+
+
+def mlstm_decode(p, x, dims: XLSTMDims, state: MLSTMState):
+    b = x.shape[0]
+    up = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(x.dtype))
+    xs, z = jnp.split(up, 2, axis=-1)
+    xc, conv_tail = _causal_conv(p, xs, dims, conv_state=state.conv)
+    q, k, v, ig, fg = _mlstm_qkvif(p, xc, xs, dims)
+    sq = lambda t: t[:, 0]
+    new_state, hval = _mlstm_cell(state, (sq(q), sq(k), sq(v), sq(ig), sq(fg)))
+    hval = hval * p["ln_scale"].astype(hval.dtype)[None]
+    hs = hval.reshape(b, 1, dims.d_inner).astype(x.dtype)
+    y = hs * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["down_proj"].astype(x.dtype))
+    return out, new_state._replace(conv=conv_tail.astype(jnp.float32))
+
+
+# ------------------------------------------------------------------ sLSTM
+
+def init_slstm(pf: ParamFactory, dims: XLSTMDims):
+    d, h = dims.d_model, dims.n_heads
+    dh = d // h
+    gates = {}
+    for g in ("i", "f", "z", "o"):
+        gates[f"w_{g}"] = pf.dense((d, h, dh), ("embed", "q_heads", "head"))
+        gates[f"r_{g}"] = pf.dense((h, dh, dh), ("q_heads", "head", None),
+                                   scale=0.02)
+        gates[f"b_{g}"] = (jnp.full((h, dh), 1.0 if g == "f" else 0.0, pf.dtype),
+                           ("q_heads", "head"))
+    gates["out_proj"] = pf.dense((d, d), ("embed", "embed2"))
+    return split_tree(gates)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # [B, H, dh]
+    n: jax.Array   # [B, H, dh]
+    h: jax.Array   # [B, H, dh]
+    m: jax.Array   # [B, H, dh]
+
+
+def init_slstm_state(batch: int, dims: XLSTMDims, dtype=jnp.float32) -> SLSTMState:
+    h, dh = dims.n_heads, dims.d_model // dims.n_heads
+    z = lambda: jnp.zeros((batch, h, dh), dtype)
+    return SLSTMState(z(), z(), z(), jnp.full((batch, h, dh), -1e30, dtype))
+
+
+def slstm_state_axes() -> SLSTMState:
+    ax = ("batch", "q_heads", "head")
+    return SLSTMState(ax, ax, ax, ax)
+
+
+def _slstm_cell(p, state: SLSTMState, xg):
+    """xg: dict of per-gate inputs [B,H,dh] (pre-recurrent)."""
+    c, n, hprev, m = state
+    rec = lambda g: jnp.einsum("bhd,hde->bhe", hprev,
+                               p[f"r_{g}"].astype(jnp.float32))
+    i_pre = xg["i"] + rec("i")
+    f_pre = xg["f"] + rec("f")
+    z_ = jnp.tanh(xg["z"] + rec("z"))
+    o_ = jax.nn.sigmoid(xg["o"] + rec("o"))
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_ = jnp.exp(i_pre - m_new)
+    f_ = jnp.exp(log_f + m - m_new)
+    c_new = f_ * c + i_ * z_
+    n_new = f_ * n + i_
+    h_new = o_ * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_gate_inputs(p, x, dims: XLSTMDims):
+    out = {}
+    for g in ("i", "f", "z", "o"):
+        v = jnp.einsum("bsd,dhk->bshk", x, p[f"w_{g}"].astype(x.dtype))
+        out[g] = (v + p[f"b_{g}"].astype(x.dtype)[None, None]).astype(jnp.float32)
+    return out
+
+
+def slstm_forward(p, x, dims: XLSTMDims):
+    b, s, d = x.shape
+    xg = _slstm_gate_inputs(p, x, dims)
+    state0 = init_slstm_state(b, dims)
+    tseq = lambda t: jnp.moveaxis(t, 1, 0)
+    state, hs = jax.lax.scan(
+        lambda st, g: _slstm_cell(p, st, g), state0,
+        {k: tseq(v) for k, v in xg.items()})
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    out = shd(jnp.einsum("bsd,de->bse", hs, p["out_proj"].astype(x.dtype)),
+              ("attn_batch", None, None))
+    return out, state
+
+
+def slstm_decode(p, x, dims: XLSTMDims, state: SLSTMState):
+    b = x.shape[0]
+    xg = _slstm_gate_inputs(p, x, dims)
+    new_state, h = _slstm_cell(p, state, {k: v[:, 0] for k, v in xg.items()})
+    hs = h.reshape(b, 1, -1).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", hs, p["out_proj"].astype(x.dtype)), new_state

@@ -1,0 +1,148 @@
+"""Logical-axis → mesh-axis sharding rules (DP/FSDP/TP/EP/SP).
+
+Every param/cache leaf carries a tuple of logical axis names (models/common
+ParamFactory). `logical_to_pspec` maps them to a PartitionSpec under a rule
+table, enforcing (a) no mesh axis used twice in one spec and (b) divisibility
+of the dim by the mesh-axis extent (falls back to replication otherwise —
+e.g. kv_heads=8 on a 16-way model axis stays replicated and the KV cache
+shards over `seq` instead: sequence-parallel decode).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+MeshAxes = tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes, or None)."""
+    mapping: dict[str, Any]
+
+    def get(self, name: str):
+        return self.mapping.get(name)
+
+
+def default_rules(multi_pod: bool = False, fsdp: bool = True,
+                  attn_dp: bool = False, moe_ep: bool = True) -> ShardingRules:
+    """attn_dp: batch-parallel attention over (data × model) — the right
+    config when q_heads doesn't divide the model axis (e.g. qwen2's 12 heads
+    on a 16-way axis). Sharding d_head instead would all-reduce every score
+    block (measured: 896 × 400MB/step on qwen2 — EXPERIMENTS.md §Dry-run)."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    attn_batch = batch + ("model",) if attn_dp else batch
+    # moe_batch: combine-side batch axis — includes `model` when experts are
+    # EP-sharded so the return exchange is an all-to-all (model axis moves
+    # experts→batch) instead of a full-buffer all-gather (§Perf iteration 2).
+    moe_batch = batch + ("model",) if moe_ep else batch
+    return ShardingRules({
+        # data / FSDP axes
+        "batch": batch,
+        "attn_batch": attn_batch,   # attention activations only
+        "moe_batch": moe_batch,
+        "embed": "data" if fsdp else None,   # FSDP within pod (DESIGN.md §5)
+        # tensor/expert parallel axes
+        "vocab": "model",
+        "q_heads": None if attn_dp else "model",
+        "kv_heads": None if attn_dp else "model",
+        "mlp": "model",
+        "experts": "model",
+        "head": None,        # never shard d_head (contraction dim of scores)
+        "seq": "model",      # KV-cache sequence sharding (decode SP)
+        # replicated
+        "layers": None, "conv": None, "ssm_state": None, "ssm_in": None,
+        "ssm_rank": None, "codebooks": None, "vision_embed": None,
+        "embed2": None,
+    })
+
+
+def logical_to_pspec(axes: tuple, shape: tuple[int, ...], rules: ShardingRules,
+                     mesh: Mesh) -> P:
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        mesh_axes = rules.get(name) if name else None
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        chosen = []
+        extent = 1
+        for ax in mesh_axes:
+            if ax in used or ax not in mesh.shape:
+                continue
+            if dim % (extent * mesh.shape[ax]) == 0:
+                chosen.append(ax)
+                extent *= mesh.shape[ax]
+        if chosen:
+            used.update(chosen)
+            out.append(tuple(chosen) if len(chosen) > 1 else chosen[0])
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes annotation: non-empty plain tuple of str/None (NamedTuple
+    containers like KVCache are NOT leaves)."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields") and len(x) > 0
+            and all(isinstance(e, (str, type(None))) for e in x))
+
+
+_is_axes_leaf = is_axes_leaf
+
+
+def tree_shardings(mesh: Mesh, rules: ShardingRules, axes_tree, shape_tree):
+    """(axes tree, ShapeDtypeStruct/array tree) -> NamedSharding tree."""
+    def one(axes, arr):
+        spec = logical_to_pspec(axes, arr.shape, rules, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, axes_tree, shape_tree, is_leaf=_is_axes_leaf)
+
+
+def tree_pspecs(mesh: Mesh, rules: ShardingRules, axes_tree, shape_tree):
+    def one(axes, arr):
+        return logical_to_pspec(axes, arr.shape, rules, mesh)
+    return jax.tree.map(one, axes_tree, shape_tree, is_leaf=_is_axes_leaf)
+
+
+# ------------------------------------------------------ activation context
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: ShardingRules):
+    """Enable with_sharding_constraint hints inside model code."""
+    prev = getattr(_CTX, "v", None)
+    _CTX.v = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.v = prev
+
+
+def constrain(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    """Annotate an activation with logical axes; no-op outside `activate`."""
+    ctx = getattr(_CTX, "v", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_pspec(logical_axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_pspec(rules: ShardingRules, ndim: int) -> P:
+    b = rules.get("batch")
+    return P(b, *([None] * (ndim - 1)))

@@ -1,0 +1,156 @@
+"""AdamW with optional int8 block-quantized moments + cosine schedule.
+
+The int8 moment store (per-128-block absmax scales) is the framework's
+distributed-optimization memory trick: it cuts optimizer-state HBM by 4×
+(what lets llama3-405b train on a single 256-chip v5e pod — see
+EXPERIMENTS.md §Dry-run). Quantization error is re-absorbed every step
+because moments are dequantized, updated with the fresh gradient, and
+re-quantized (block absmax keeps relative error ~1/254 per block).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 200
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    update_clip: float = 3.0     # per-element |m̂/√v̂| trust bound (Adafactor-style)
+    moments_dtype: str = "f32"   # "f32" | "int8"
+    quant_block: int = 128
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+# ----------------------------------------------------- int8 block quant
+
+def _pad_to(x: jax.Array, block: int) -> tuple[jax.Array, int]:
+    n = x.shape[-1]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, n
+
+
+def quantize_i8(x: jax.Array, block: int) -> tuple[jax.Array, jax.Array]:
+    xp, n = _pad_to(x, block)
+    xb = xp.reshape(*xp.shape[:-1], -1, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(xb / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return q.reshape(xp.shape)[..., :x.shape[-1]], scale[..., 0]
+
+
+def dequantize_i8(q: jax.Array, scale: jax.Array, block: int) -> jax.Array:
+    qp, n = _pad_to(q, block)
+    qb = qp.reshape(*qp.shape[:-1], -1, block).astype(jnp.float32)
+    x = qb * scale[..., None]
+    return x.reshape(qp.shape)[..., :q.shape[-1]]
+
+
+# ----------------------------------------------------- state containers
+
+def init_opt_state(params, cfg: OptConfig):
+    if cfg.moments_dtype == "int8":
+        def mk(p):
+            q, s = quantize_i8(jnp.zeros(p.shape, jnp.float32), cfg.quant_block)
+            return {"q": q, "scale": s}
+        zeros = jax.tree.map(mk, params)
+        # v is stored in sqrt-space (see adamw_update): linear-absmax int8 of
+        # raw v collapses small second moments to zero inside a block, which
+        # explodes m/√v — measured divergence in tests/test_substrate.py.
+        return {"m": zeros,
+                "v": jax.tree.map(mk, params),
+                "step": jnp.zeros((), jnp.int32)}
+    z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, z),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_axes(axes_tree, cfg: OptConfig):
+    """Logical axes for the optimizer state (mirrors params; int8 scales drop
+    the last axis)."""
+    def leaf(a):
+        if cfg.moments_dtype == "int8":
+            return {"q": a, "scale": a[:-1] + (None,) if a else a}
+        return a
+    from repro.sharding.rules import is_axes_leaf
+    moments = jax.tree.map(leaf, axes_tree, is_leaf=is_axes_leaf)
+    return {"m": moments, "v": moments, "step": (None,)}  # scalar marker
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale_clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def load(leaf, sqrt_space=False):
+        if cfg.moments_dtype == "int8":
+            x = dequantize_i8(leaf["q"], leaf["scale"], cfg.quant_block)
+            return x * x if sqrt_space else x
+        return leaf
+
+    def store(x, sqrt_space=False):
+        if cfg.moments_dtype == "int8":
+            x = jnp.sqrt(x) if sqrt_space else x
+            q, s = quantize_i8(x, cfg.quant_block)
+            return {"q": q, "scale": s}
+        return x
+
+    is_moment_leaf = (lambda x: isinstance(x, dict) and "q" in x) \
+        if cfg.moments_dtype == "int8" else None
+
+    def upd(p, g, m_leaf, v_leaf):
+        g = g.astype(jnp.float32) * scale_clip
+        m = b1 * load(m_leaf) + (1 - b1) * g
+        v = b2 * load(v_leaf, sqrt_space=True) + (1 - b2) * g * g
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        # Per-element trust bound: quantized v can undershoot for tiny
+        # entries; bounding |update| keeps those elements signSGD-like.
+        update = jnp.clip(update, -cfg.update_clip, cfg.update_clip)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return new_p, store(m), store(v, sqrt_space=True)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"]) \
+        if is_moment_leaf else jax.tree.leaves(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"]) \
+        if is_moment_leaf else jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,172 @@
+"""Multi-device behaviour via subprocesses (XLA_FLAGS device-count override
+must be set before jax import, so each case runs in a fresh interpreter —
+conftest/pyproject never set it globally)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_blinkdb_sharded_query_matches_single_device():
+    """The shard_map executor over an 8-device data mesh returns the same
+    moments as the single-device vmap path."""
+    run_py("""
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import (AggOp, Atom, BlinkDB, CmpOp, EngineConfig,
+                            ErrorBound, Query, Predicate)
+    from repro.core import table as table_lib
+    from repro.data import synth
+
+    assert jax.device_count() == 8
+    tbl = table_lib.from_columns("s", synth.sessions_table(40_000, seed=2))
+    q = Query("s", AggOp.AVG, value_column="SessionTime", group_by=("OS",),
+              bound=ErrorBound(0.1, 0.95))
+
+    results = {}
+    for name, mesh in [("single", None),
+                       ("mesh8", jax.make_mesh((8,), ("data",)))]:
+        db = BlinkDB(EngineConfig(k1=800.0, m=3, seed=3), mesh=mesh)
+        db.register_table("s", tbl)
+        db.add_family("s", ("OS",))
+        db.add_family("s", ())
+        ans = db.query(q)
+        results[name] = {g.key: g.estimate for g in ans.groups}
+    assert results["single"].keys() == results["mesh8"].keys()
+    for k in results["single"]:
+        np.testing.assert_allclose(results["single"][k], results["mesh8"][k],
+                                   rtol=1e-3)
+    print("OK")
+    """)
+
+
+def test_train_step_dp_tp_mesh_runs_and_matches():
+    """One real train step on a 2x4 (data, model) mesh: loss matches the
+    single-device step bitwise-closely, params update."""
+    run_py("""
+    import dataclasses
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.sharding import rules as rules_lib
+    from repro.train import optim as optim_lib
+    from repro.train import step as step_lib
+
+    jax.config.update("jax_default_matmul_precision", "float32")
+    cfg = get_config("qwen2-1.5b").reduced()
+    cfg = dataclasses.replace(cfg, vocab_size=64, d_ff=64)
+    params, axes = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = optim_lib.OptConfig(lr=1e-2, warmup_steps=1, decay_steps=10)
+    opt = optim_lib.init_opt_state(params, opt_cfg)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, 64, (8, 16)).astype(np.int32)),
+        "labels": jnp.asarray(rng.integers(0, 64, (8, 16)).astype(np.int32)),
+    }
+    step_cfg = step_lib.StepConfig(remat=False)
+    fn = step_lib.make_train_step(cfg, opt_cfg, step_cfg)
+
+    p1, o1, m1 = jax.jit(fn)(params, opt, batch)   # single device
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rules = rules_lib.default_rules(attn_dp=True)
+    sh = step_lib.build_shardings(cfg, mesh, rules, step_cfg, opt_cfg)
+    p_sh = jax.device_put(params, sh["params_sharding"])
+    o_sh = jax.device_put(opt, sh["opt_sharding"])
+    with rules_lib.activate(mesh, rules):
+        p2, o2, m2 = jax.jit(fn)(p_sh, o_sh, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=5e-3)
+    np.testing.assert_allclose(float(m1["grad_norm"]), float(m2["grad_norm"]),
+                               rtol=2e-2)
+    # Behavioural check (Adam at step1 is signSGD: bitwise param comparison
+    # is meaningless under bf16 reduction-order changes): training on the
+    # mesh must reduce the loss over a few repeated steps.
+    with rules_lib.activate(mesh, rules):
+        jfn = jax.jit(fn, donate_argnums=(0, 1))
+        losses = [float(m2["loss"])]
+        for _ in range(4):
+            p2, o2, m2 = jfn(p2, o2, batch)
+            losses.append(float(m2["loss"]))
+    assert losses[-1] < losses[0], f"mesh training diverged {losses}"
+    print("OK")
+    """)
+
+
+def test_elastic_checkpoint_reshard():
+    """Save on a 4-shard layout, restore onto 8 shards (elastic restart)."""
+    run_py("""
+    import tempfile
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint.ckpt import CheckpointManager
+
+    state = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    mesh4 = jax.make_mesh((4,), ("data",))
+    sharded = jax.device_put(state["w"], NamedSharding(mesh4, P("data")))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        mgr.save(1, {"w": sharded})
+        mesh8 = jax.make_mesh((8,), ("data",))
+        target = NamedSharding(mesh8, P("data"))
+        step, restored = mgr.restore({"w": state["w"]},
+                                     shardings={"w": target})
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(state["w"]))
+        assert restored["w"].sharding.num_devices == 8
+    print("OK")
+    """)
+
+
+def test_decode_step_sharded_cache():
+    """Decode with a KV cache sharded over a (2,2) mesh stays correct."""
+    run_py("""
+    import dataclasses
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.cells import build_cell
+    from repro.models import model as model_lib
+    from repro.sharding import rules as rules_lib
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    params, axes = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    b, max_len = 4, 32
+    caches = model_lib.init_cache(cfg, b, max_len, dtype=jnp.float32)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    ref_next, _ = model_lib.decode_step(params, cfg, tok, caches,
+                                        jnp.int32(0),
+                                        compute_dtype=jnp.float32)
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    rules = rules_lib.default_rules(attn_dp=True)
+    c_axes = model_lib.cache_axes(cfg)
+    cache_sh = rules_lib.tree_shardings(mesh, rules, c_axes, caches)
+    caches2 = jax.tree.map(jax.device_put, caches, cache_sh)
+    with rules_lib.activate(mesh, rules):
+        got_next, _ = jax.jit(
+            lambda p, t, c: model_lib.decode_step(p, cfg, t, c, jnp.int32(0),
+                                                  compute_dtype=jnp.float32)
+        )(params, tok, caches2)
+    np.testing.assert_array_equal(np.asarray(ref_next), np.asarray(got_next))
+    print("OK")
+    """, devices=4)

@@ -1,0 +1,156 @@
+"""End-to-end engine behaviour: the paper's §2 example queries with error and
+time bounds, family selection, disjunction rewrite, quantiles, exact path."""
+import numpy as np
+import pytest
+
+from repro.core import (AggOp, Atom, BlinkDB, CmpOp, Conjunction, EngineConfig,
+                        ErrorBound, Predicate, Query, QueryTemplate, TimeBound)
+from repro.core import table as table_lib
+from repro.data import synth
+
+
+@pytest.fixture(scope="module")
+def db():
+    tbl = table_lib.from_columns("sessions", synth.sessions_table(120_000, seed=5))
+    db = BlinkDB(EngineConfig(k1=2000.0, c=2.0, m=4, uniform_fraction=0.3))
+    db.register_table("sessions", tbl)
+    templates = [
+        QueryTemplate(frozenset({"City"}), 0.30),
+        QueryTemplate(frozenset({"Genre", "City"}), 0.25),
+        QueryTemplate(frozenset({"OS", "URL"}), 0.25),
+        QueryTemplate(frozenset({"Genre"}), 0.20),
+    ]
+    db.build_samples("sessions", templates, storage_budget_fraction=0.5)
+    return db
+
+
+def test_samples_built_within_budget(db):
+    tbl = db.tables["sessions"]
+    fams = db.families["sessions"]
+    assert () in fams, "uniform family always present"
+    strat = {p: f for p, f in fams.items() if p}
+    assert strat, "optimizer must choose at least one stratified family"
+    total = sum(f.storage_bytes(tbl.row_bytes()) for f in strat.values())
+    assert total <= 0.5 * tbl.nbytes * 1.05
+
+
+def test_paper_example_count_groupby_error_bound(db):
+    """§2: SELECT COUNT(*) WHERE Genre='g03' GROUP BY OS ERROR WITHIN 10%."""
+    q = Query("sessions", AggOp.COUNT,
+              predicate=Predicate.where(Atom("Genre", CmpOp.EQ, "g03")),
+              group_by=("OS",), bound=ErrorBound(0.10, 0.95))
+    ans = db.query(q)
+    exact = db.exact_query(q)
+    exact_by_key = {g.key: g.estimate for g in exact.groups}
+    assert len(ans.groups) >= len(exact_by_key) - 1  # subgroup coverage
+    for g in ans.groups:
+        truth = exact_by_key.get(g.key)
+        if truth is None or g.exact:
+            continue
+        rel = abs(g.estimate - truth) / truth
+        assert rel < 0.25, f"{g.key}: rel err {rel:.3f}"
+        # CI sanity: stderr positive, CI ordered
+        assert g.ci_low <= g.estimate <= g.ci_high
+    assert ans.rows_read < db.tables["sessions"].n_rows
+
+
+def test_avg_with_error_bound_meets_bound(db):
+    q = Query("sessions", AggOp.AVG, value_column="SessionTime",
+              group_by=("OS",), bound=ErrorBound(0.05, 0.95))
+    ans = db.query(q)
+    exact = {g.key: g.estimate for g in db.exact_query(q).groups}
+    hit = 0
+    for g in ans.groups:
+        truth = exact[g.key]
+        if abs(g.estimate - truth) / truth <= 0.05:
+            hit += 1
+    assert hit >= len(ans.groups) - 1, "95% of groups within the 5% bound"
+
+
+def test_time_bound_reads_fewer_rows(db):
+    q_fast = Query("sessions", AggOp.AVG, value_column="SessionTime",
+                   group_by=("City",), bound=TimeBound(0.003))
+    q_slow = Query("sessions", AggOp.AVG, value_column="SessionTime",
+                   group_by=("City",), bound=TimeBound(10.0))
+    a_fast = db.query(q_fast)
+    a_slow = db.query(q_slow)
+    assert a_fast.rows_read <= a_slow.rows_read
+
+
+def test_family_selection_superset_rule(db):
+    """Query on City must use a stratified family whose φ ⊇ {City} if the
+    optimizer built one; otherwise whatever probing chose is recorded."""
+    q = Query("sessions", AggOp.COUNT,
+              predicate=Predicate.where(Atom("City", CmpOp.EQ, "city000")),
+              bound=ErrorBound(0.1))
+    ans = db.query(q)
+    fams = db.families["sessions"]
+    supersets = [p for p in fams if p and "City" in p]
+    if supersets:
+        assert "City" in ans.sample_phi
+
+
+def test_rare_group_present_with_stratified_absent_in_uniform(db):
+    """Paper's core claim: stratified samples avoid missing subgroups."""
+    tbl = db.tables["sessions"]
+    city_codes = np.asarray(tbl.columns["City"])
+    counts = np.bincount(city_codes, minlength=tbl.cardinality("City"))
+    rare_code = int(np.argsort(counts)[np.searchsorted(np.sort(counts), 1, side="left")])
+    # pick the rarest city that still exists
+    present = np.nonzero(counts > 0)[0]
+    rare_code = int(present[np.argmin(counts[present])])
+    rare_city = tbl.decode_value("City", rare_code)
+    q = Query("sessions", AggOp.COUNT,
+              predicate=Predicate.where(Atom("City", CmpOp.EQ, rare_city)),
+              bound=ErrorBound(0.2))
+    ans = db.query(q)
+    assert ans.groups and ans.groups[0].estimate > 0
+    if "City" in ans.sample_phi and counts[rare_code] <= db.config.k1:
+        # stratum under the cap → contained entirely → exact
+        assert abs(ans.groups[0].estimate - counts[rare_code]) < 1e-3
+
+
+def test_disjunctive_predicate_union(db):
+    pred = Predicate((
+        Conjunction((Atom("OS", CmpOp.EQ, "os0"),)),
+        Conjunction((Atom("OS", CmpOp.EQ, "os1"),)),
+    ))
+    q = Query("sessions", AggOp.COUNT, predicate=pred, bound=ErrorBound(0.1))
+    ans = db.query(q)
+    exact = db.exact_query(q)
+    # exact path evaluates the DNF directly (disjoint disjuncts here)
+    truth = sum(g.estimate for g in exact.groups)
+    got = sum(g.estimate for g in ans.groups)
+    assert abs(got - truth) / truth < 0.15
+
+
+def test_quantile_estimate(db):
+    q = Query("sessions", AggOp.QUANTILE, value_column="SessionTime",
+              quantile=0.5, bound=ErrorBound(0.10, 0.95))
+    ans = db.query(q)
+    exact = db.exact_query(q)
+    truth = exact.groups[0].estimate
+    got = ans.groups[0].estimate
+    assert abs(got - truth) / truth < 0.12
+    assert ans.groups[0].stderr > 0
+
+
+def test_sum_unbiased_across_seeds():
+    """Rebuild samples with different seeds: SUM estimates scatter around the
+    truth (offline-sampling §2.1 story)."""
+    tbl = table_lib.from_columns("s", synth.sessions_table(40_000, seed=9))
+    q = Query("s", AggOp.SUM, value_column="SessionTime",
+              predicate=Predicate.where(Atom("OS", CmpOp.EQ, "os1")))
+    ests = []
+    truth = None
+    for seed in range(6):
+        db = BlinkDB(EngineConfig(k1=800.0, c=2.0, m=3, seed=seed))
+        db.register_table("s", tbl)
+        db.add_family("s", ("OS",))
+        db.add_family("s", ())
+        ans = db.query(Query(**{**q.__dict__, "bound": ErrorBound(0.05)}))
+        ests.append(sum(g.estimate for g in ans.groups))
+        if truth is None:
+            truth = sum(g.estimate for g in db.exact_query(q).groups)
+    rel = abs(np.mean(ests) - truth) / truth
+    assert rel < 0.03, f"mean over seeds deviates {rel:.3f}"

@@ -1,0 +1,97 @@
+"""Extra engine coverage: probe-based family selection end-to-end, grouped
+quantiles, absolute error bounds, TimeBound latency model reuse, Answer API."""
+import numpy as np
+import pytest
+
+from repro.core import (AggOp, Atom, BlinkDB, CmpOp, EngineConfig, ErrorBound,
+                        Predicate, Query, QueryTemplate, TimeBound)
+from repro.core import table as table_lib
+from repro.data import synth
+
+
+@pytest.fixture(scope="module")
+def db():
+    tbl = table_lib.from_columns("s", synth.sessions_table(60_000, seed=21))
+    db = BlinkDB(EngineConfig(k1=1000.0, m=3, seed=2))
+    db.register_table("s", tbl)
+    db.add_family("s", ("City",))
+    db.add_family("s", ("OS",))
+    db.add_family("s", ())
+    return db
+
+
+def test_probe_selection_when_no_superset(db):
+    """Query on Genre (no stratified superset) must fall back to probing and
+    still produce a bound-respecting answer."""
+    q = Query("s", AggOp.COUNT,
+              predicate=Predicate.where(Atom("Genre", CmpOp.EQ, "genre01")),
+              bound=ErrorBound(0.15, 0.95))
+    ans = db.query(q)
+    exact = db.exact_query(q)
+    truth = exact.groups[0].estimate
+    assert abs(ans.groups[0].estimate - truth) / truth < 0.2
+
+
+def test_absolute_error_bound(db):
+    q = Query("s", AggOp.AVG, "SessionTime", group_by=("OS",),
+              bound=ErrorBound(2.0, 0.95, relative=False))
+    ans = db.query(q)
+    exact = {g.key: g.estimate for g in db.exact_query(q).groups}
+    hit = sum(1 for g in ans.groups
+              if abs(g.estimate - exact[g.key]) <= 2.5)
+    assert hit >= len(ans.groups) - 1
+
+
+def test_grouped_quantile(db):
+    q = Query("s", AggOp.QUANTILE, "SessionTime", quantile=0.5,
+              group_by=("OS",), bound=ErrorBound(0.15, 0.95))
+    ans = db.query(q)
+    exact = {g.key: g.estimate for g in db.exact_query(q).groups}
+    errs = [abs(g.estimate - exact[g.key]) / exact[g.key]
+            for g in ans.groups if g.key in exact]
+    assert np.median(errs) < 0.15
+
+
+def test_timebound_latency_model_cached(db):
+    q = Query("s", AggOp.AVG, "SessionTime", group_by=("City",),
+              bound=TimeBound(0.05))
+    db.query(q)
+    assert any(key[0] == "s" for key in db._latency), \
+        "latency model fitted and cached for the family"
+
+
+def test_answer_api_fields(db):
+    q = Query("s", AggOp.COUNT, group_by=("OS",), bound=ErrorBound(0.1))
+    ans = db.query(q)
+    assert ans.rows_total == db.tables["s"].n_rows
+    assert 0 < ans.rows_read <= ans.rows_total
+    assert ans.confidence == 0.95
+    assert ans.max_rel_err >= 0
+    for g in ans.groups:
+        assert g.ci_low <= g.estimate <= g.ci_high
+
+
+def test_no_bound_uses_largest_sample(db):
+    q = Query("s", AggOp.COUNT, group_by=("OS",))
+    ans = db.query(q)
+    fam = db.families["s"][ans.sample_phi]
+    assert ans.sample_k == fam.ks[0], "no bound -> most accurate resolution"
+
+
+def test_musicgen_serve_multicodebook():
+    """Serving path with 4 codebook streams (audio backbone stub)."""
+    import dataclasses
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.serve.engine import ServeConfig, ServeEngine
+    cfg = get_config("musicgen-large").reduced()
+    cfg = dataclasses.replace(cfg, q_chunk=8, k_chunk=8)
+    params, _ = model_lib.init_params(cfg, jax.random.PRNGKey(3))
+    engine = ServeEngine(cfg, params, ServeConfig(batch=2))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (2, cfg.n_codebooks, 8)).astype(np.int32)
+    out = engine.generate(prompts, n_new=4)
+    assert out.shape == (2, cfg.n_codebooks, 12)
+    np.testing.assert_array_equal(out[..., :8], prompts)

@@ -1,0 +1,139 @@
+"""Table-2 estimator correctness: unbiasedness, variance calibration, CI
+coverage (paper §4.3 + Table 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimators as est_lib
+from repro.core.types import AggOp
+
+
+def _moments(values, rates, mask, groups, n_groups):
+    return est_lib.grouped_moments(
+        jnp.asarray(values), jnp.asarray(rates), jnp.asarray(mask),
+        jnp.asarray(groups), n_groups)
+
+
+def test_z_value():
+    assert abs(est_lib.z_value(0.95) - 1.95996) < 1e-3
+    assert abs(est_lib.z_value(0.99) - 2.57583) < 1e-3
+
+
+def test_full_sample_is_exact():
+    """rate = 1 everywhere → estimates are exact, variance 0."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(10, 3, 1000).astype(np.float32)
+    g = rng.integers(0, 4, 1000)
+    mom = _moments(x, np.ones(1000), np.ones(1000, bool), g, 4)
+    for agg, truth in [
+        (AggOp.COUNT, np.bincount(g, minlength=4)),
+        (AggOp.SUM, np.bincount(g, weights=x, minlength=4)),
+        (AggOp.AVG, np.bincount(g, weights=x, minlength=4) / np.bincount(g, minlength=4)),
+    ]:
+        est = est_lib.estimate(agg, mom)
+        np.testing.assert_allclose(np.asarray(est.value), truth, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(est.variance), 0.0, atol=1e-3)
+
+
+@pytest.mark.parametrize("agg", [AggOp.COUNT, AggOp.SUM, AggOp.AVG])
+def test_unbiased_and_ci_coverage(agg):
+    """Monte Carlo over resamplings: HT estimates are unbiased and the 95% CI
+    covers the truth at >= ~95% (the paper's §2 contract)."""
+    rng = np.random.default_rng(42)
+    n = 4000
+    x = rng.gamma(2.0, 5.0, n).astype(np.float32)
+    g = (rng.random(n) < 0.3).astype(np.int32)  # 2 groups
+    freq = np.where(g == 0, (g == 0).sum(), (g == 1).sum()).astype(np.float32)
+    k = 400.0
+    rates = np.minimum(1.0, k / freq)
+    truth = {
+        AggOp.COUNT: np.bincount(g, minlength=2).astype(np.float64),
+        AggOp.SUM: np.bincount(g, weights=x, minlength=2),
+    }
+    truth[AggOp.AVG] = truth[AggOp.SUM] / truth[AggOp.COUNT]
+
+    trials = 400
+    ests = np.zeros((trials, 2))
+    cover = np.zeros((trials, 2), dtype=bool)
+    for t in range(trials):
+        u = rng.random(n)
+        mask = u < rates  # Poisson stratified sample on g
+        mom = _moments(x, rates, mask, g, 2)
+        est = est_lib.estimate(agg, mom)
+        stderr, lo, hi = est_lib.ci(est, 0.95)
+        v = np.asarray(est.value)
+        ests[t] = v
+        cover[t] = (np.asarray(lo) <= truth[agg]) & (truth[agg] <= np.asarray(hi))
+    bias = np.abs(ests.mean(0) - truth[agg]) / np.abs(truth[agg])
+    assert np.all(bias < 0.02), f"bias {bias}"
+    coverage = cover.mean(0)
+    assert np.all(coverage > 0.90), f"coverage {coverage}"
+
+
+def test_variance_scales_inverse_n():
+    """Table 2: Var ∝ 1/n — doubling the cap halves the variance estimate."""
+    rng = np.random.default_rng(7)
+    n = 20_000
+    x = rng.normal(50, 10, n).astype(np.float32)
+    g = np.zeros(n, dtype=np.int32)
+    freq = np.full(n, n, dtype=np.float32)
+    vs = []
+    for k in [500.0, 1000.0, 2000.0]:
+        rates = np.minimum(1.0, k / freq)
+        mask = rng.random(n) < rates
+        mom = _moments(x, rates, mask, g, 1)
+        est = est_lib.estimate(AggOp.SUM, mom)
+        vs.append(float(est.variance[0]))
+    assert 1.5 < vs[0] / vs[1] < 2.6
+    assert 1.5 < vs[1] / vs[2] < 2.6
+
+
+def test_required_n_projection():
+    """ELP error profile: projected n meets the bound when re-run at that n."""
+    rng = np.random.default_rng(3)
+    n = 100_000
+    x = rng.gamma(3.0, 2.0, n).astype(np.float32)
+    g = np.zeros(n, dtype=np.int32)
+    freq = np.full(n, n, dtype=np.float32)
+    k_probe = 500.0
+    rates = np.minimum(1.0, k_probe / freq)
+    mask = rng.random(n) < rates
+    mom = _moments(x, rates, mask, g, 1)
+    est = est_lib.estimate(AggOp.AVG, mom)
+    n_req = float(est_lib.required_n_for_error(AggOp.AVG, est, 0.01, 0.95, True)[0])
+    assert n_req > float(est.n[0]), "1% bound needs more than the 500-row probe"
+    # Re-run with a cap that yields ~n_req selected rows; check the bound.
+    k2 = n_req * 1.05
+    rates2 = np.minimum(1.0, k2 / freq)
+    mask2 = rng.random(n) < rates2
+    mom2 = _moments(x, rates2, mask2, g, 1)
+    est2 = est_lib.estimate(AggOp.AVG, mom2)
+    stderr, lo, hi = est_lib.ci(est2, 0.95)
+    half = float(np.asarray(stderr)[0]) * est_lib.z_value(0.95)
+    assert half <= 0.013 * float(est2.value[0]), "projection met the 1% bound"
+
+
+def test_uniform_reduces_to_table2_count():
+    """Uniform rate p: the HT (Poisson-design) count variance is exactly
+    n_sel·(1-p)/p², and relates to Table 2's fixed-n SRS form N²c(1-c)/n by
+    the design factor (1-p)/(1-c) — they agree in the small-selectivity limit
+    (DESIGN.md 'assumption changes')."""
+    rng = np.random.default_rng(11)
+    n, p, c = 50_000, 0.05, 0.02  # small selectivity: designs agree
+    sel_pred = rng.random(n) < c
+    mask_sample = rng.random(n) < p
+    mask = sel_pred & mask_sample
+    rates = np.full(n, p, dtype=np.float32)
+    mom = _moments(np.ones(n, np.float32), rates, mask, np.zeros(n, np.int32), 1)
+    est = est_lib.estimate(AggOp.COUNT, mom)
+    ht = float(est.variance[0])
+    # exact Poisson-design closed form
+    np.testing.assert_allclose(ht, mask.sum() * (1 - p) / p ** 2, rtol=1e-5)
+    # Table-2 SRS form matches within the (1-p)/(1-c) design factor
+    n_sample = mask_sample.sum()
+    c_hat = mask.sum() / n_sample
+    table2 = (n ** 2) * c_hat * (1 - c_hat) / n_sample
+    ratio = ht / table2
+    expect_ratio = (1 - p) / (1 - c_hat)
+    assert abs(ratio - expect_ratio) / expect_ratio < 0.10, (ratio, expect_ratio)

@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) on the system's statistical invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import estimators as est_lib
+from repro.core import sampling as samp_lib
+from repro.core import table as table_lib
+from repro.core.optimizer import Candidate, Workload, solve_greedy
+from repro.core.types import AggOp, QueryTemplate
+from repro.train import optim as optim_lib
+
+
+@st.composite
+def small_table(draw):
+    n = draw(st.integers(200, 2000))
+    card = draw(st.integers(2, 30))
+    skew = draw(st.floats(0.0, 2.0))
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    p = np.arange(1, card + 1, dtype=np.float64) ** -(skew + 0.01)
+    p /= p.sum()
+    key = rng.choice(card, size=n, p=p).astype(np.int32)
+    x = rng.gamma(2.0, 3.0, n).astype(np.float32)
+    return table_lib.from_columns(
+        "t", {"key": key.astype(str), "x": x}), seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(small_table(), st.floats(5.0, 200.0))
+def test_family_invariants(tbl_seed, k1):
+    """For ANY table and cap: nesting holds, rates are valid probabilities,
+    expected-rows formula matches the histogram."""
+    tbl, seed = tbl_seed
+    fam = samp_lib.build_family(tbl, ("key",), k1=k1, c=2.0, m=3, seed=seed)
+    ek = np.asarray(fam.entry_key)
+    assert np.all(np.diff(ek) >= 0)
+    assert fam.prefix_sizes[0] == fam.n_rows
+    assert list(fam.prefix_sizes) == sorted(fam.prefix_sizes, reverse=True)
+    for k in fam.ks:
+        r = np.asarray(fam.rate(k))
+        assert np.all((r > 0) & (r <= 1.0))
+    expect = samp_lib.expected_sample_rows(fam.stratum_freqs, k1)
+    assert fam.n_rows <= tbl.n_rows
+    assert abs(fam.n_rows - expect) <= 6 * np.sqrt(expect) + 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(small_table())
+def test_ht_estimates_bounded_and_exact_when_full(tbl_seed):
+    """HT estimate of a total never exceeds what rates allow, and equals the
+    exact total when every stratum is below the cap (rate=1 everywhere)."""
+    tbl, seed = tbl_seed
+    big_k = float(tbl.n_rows + 1)
+    fam = samp_lib.build_family(tbl, ("key",), k1=big_k, m=1, seed=seed)
+    mom = est_lib.grouped_moments(
+        fam.columns["x"], fam.rate(big_k),
+        jnp.ones(fam.n_rows, bool),
+        jnp.zeros(fam.n_rows, jnp.int32), 1)
+    est = est_lib.estimate(AggOp.SUM, mom)
+    truth = float(np.asarray(tbl.columns["x"]).sum())
+    np.testing.assert_allclose(float(est.value[0]), truth, rtol=1e-3)
+    np.testing.assert_allclose(float(est.variance[0]), 0.0, atol=truth * 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.floats(0.05, 0.95))
+def test_count_variance_decreases_with_rate(seed, p_low):
+    """Higher sampling rate => lower estimated variance (same data)."""
+    rng = np.random.default_rng(seed)
+    n = 3000
+    x = jnp.ones(n)
+    g = jnp.zeros(n, jnp.int32)
+    p_high = min(p_low * 2, 1.0)
+    vs = []
+    for p in (p_low, p_high):
+        mask = jnp.asarray(rng.random(n) < p)
+        rates = jnp.full((n,), p, jnp.float32)
+        mom = est_lib.grouped_moments(x, rates, mask, g, 1)
+        vs.append(float(est_lib.estimate(AggOp.COUNT, mom).variance[0]))
+    assert vs[1] <= vs[0] * 1.5 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.floats(1, 100), st.floats(1, 300),
+                          st.floats(0, 200)), min_size=2, max_size=10),
+       st.floats(50, 500))
+def test_optimizer_never_exceeds_budget(items, budget):
+    """Greedy solution is always budget-feasible and objective-monotone in
+    the budget."""
+    cands = [Candidate(frozenset({f"c{i}"}), s, nd, dl)
+             for i, (s, nd, dl) in enumerate(items)]
+    wl = Workload(
+        tuple(QueryTemplate(frozenset({f"c{i}"}), 1.0 / len(items))
+              for i in range(len(items))),
+        tuple(dl for _, _, dl in items),
+        tuple(nd for _, nd, _ in items))
+    sol1 = solve_greedy(cands, wl, budget)
+    sol2 = solve_greedy(cands, wl, budget * 2)
+    assert sol1.storage_used <= budget + 1e-6
+    assert sol2.storage_used <= 2 * budget + 1e-6
+    assert sol2.objective >= sol1.objective - 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(2, 300))
+def test_int8_moment_roundtrip(seed, nd, last):
+    """Block-quantized moments reconstruct within absmax/127 per block."""
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 5, nd - 1)) + (last,)
+    x = jnp.asarray(rng.normal(0, 0.1, shape).astype(np.float32))
+    q, s = optim_lib.quantize_i8(x, 128)
+    back = optim_lib.dequantize_i8(q, s, 128)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.asarray(jnp.max(jnp.abs(x))) / 127.0 + 1e-7
+    assert err.max() <= bound * 1.01
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_data_stream_deterministic_and_elastic(seed):
+    """Any (shard, n_shards) slicing reproduces the same global batch."""
+    from repro.data.tokens import DataConfig, SyntheticTokenStream
+    cfg = DataConfig(vocab_size=256, seq_len=16, global_batch=8, seed=seed)
+    full = SyntheticTokenStream(cfg, 0, 1).next_batch()
+    parts = [SyntheticTokenStream(cfg, i, 4).next_batch() for i in range(4)]
+    merged = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(full["tokens"], merged)

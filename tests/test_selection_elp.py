@@ -1,0 +1,92 @@
+"""§4.1 family selection rules, §4.2 latency profiles, §4.5 maintenance."""
+import numpy as np
+
+from repro.core import elp as elp_lib
+from repro.core import table as table_lib
+from repro.core.engine import BlinkDB, EngineConfig
+from repro.core.maintenance import (MaintenanceConfig, SampleMaintainer,
+                                    distribution_drift)
+from repro.core.selection import rewrite_disjuncts, select_family
+from repro.core.types import (AggOp, Atom, CmpOp, Conjunction, ErrorBound,
+                              Predicate, Query, QueryTemplate)
+from repro.data import synth
+
+
+def test_superset_selection_smallest_columnset():
+    fams = {(): 0, ("city",): 1, ("city", "os"): 2, ("city", "os", "url"): 3}
+    r = select_family(frozenset({"city"}), fams)
+    assert r.phi == ("city",) and r.reason == "superset"
+    r = select_family(frozenset({"city", "os"}), fams)
+    assert r.phi == ("city", "os")
+
+
+def test_probe_fallback_highest_ratio():
+    fams = {(): 0, ("city",): 1, ("os",): 2}
+    ratios = {(): (5, 100), ("city",): (60, 100), ("os",): (20, 100)}
+    r = select_family(frozenset({"genre"}), fams, probe=lambda p: ratios[p])
+    assert r.reason == "probe" and r.phi == ("city",)
+
+
+def test_rewrite_disjuncts():
+    pred = Predicate((
+        Conjunction((Atom("a", CmpOp.EQ, 1),)),
+        Conjunction((Atom("b", CmpOp.EQ, 2),)),
+    ))
+    q = Query("t", AggOp.COUNT, predicate=pred)
+    subs = rewrite_disjuncts(q)
+    assert len(subs) == 2
+    assert all(len(s.predicate.disjuncts) == 1 for s in subs)
+
+
+def test_latency_model_fit_and_inversion():
+    rows = [1000, 2000, 4000, 8000]
+    times = [0.011, 0.021, 0.041, 0.081]  # a=1e-5, b=1e-3
+    m = elp_lib.fit_latency(rows, times)
+    assert abs(m.a - 1e-5) < 2e-6
+    assert m.max_rows_within(0.041) >= 3500
+    assert m.predict(4000) <= 0.05
+
+
+def test_drift_metric():
+    a = np.array([100, 100, 100])
+    assert distribution_drift(a, a) < 1e-9
+    b = np.array([300, 0, 0])
+    assert distribution_drift(a, b) > 0.5
+
+
+def test_maintenance_epoch_rebuilds_on_drift():
+    tbl1 = table_lib.from_columns("s", synth.sessions_table(30_000, seed=1,
+                                                            city_s=1.4))
+    db = BlinkDB(EngineConfig(k1=500.0, c=2.0, m=3))
+    db.register_table("s", tbl1)
+    templates = [QueryTemplate(frozenset({"City"}), 0.7),
+                 QueryTemplate(frozenset({"OS"}), 0.3)]
+    db.build_samples("s", templates, storage_budget_fraction=0.5)
+    maint = SampleMaintainer(db, "s", templates,
+                             MaintenanceConfig(drift_threshold=0.05,
+                                               change_fraction=1.0))
+    # New data with a very different City distribution → drift fires.
+    tbl2 = table_lib.from_columns("s", synth.sessions_table(30_000, seed=77,
+                                                            city_s=0.3))
+    report = maint.run_epoch(new_table=tbl2)
+    if ("City",) in report["drift"]:
+        assert report["drift"][("City",)] > 0.05
+    assert maint.epochs == 1
+    # Engine still answers queries after the swap.
+    ans = db.query(Query("s", AggOp.COUNT, group_by=("OS",),
+                         bound=ErrorBound(0.2)))
+    assert ans.groups
+
+
+def test_maintenance_background_thread():
+    tbl = table_lib.from_columns("s", synth.sessions_table(10_000, seed=2))
+    db = BlinkDB(EngineConfig(k1=300.0, m=2))
+    db.register_table("s", tbl)
+    templates = [QueryTemplate(frozenset({"City"}), 1.0)]
+    db.build_samples("s", templates, storage_budget_fraction=0.5)
+    maint = SampleMaintainer(db, "s", templates)
+    maint.start(period_s=0.2)
+    import time
+    time.sleep(0.7)
+    maint.stop()
+    assert maint.epochs >= 1, "background task ran at least one epoch"
