@@ -1,0 +1,16 @@
+"""sys.path setup shared by the standalone benchmark entry points.
+
+Importing this module makes both `benchmarks.*` (repo root) and `repro.*`
+(src/) importable regardless of how the script was invoked:
+
+    python benchmarks/run.py            # script mode, no PYTHONPATH
+    python -m benchmarks.run            # module mode
+    PYTHONPATH=src python ...           # already set up: no-op
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

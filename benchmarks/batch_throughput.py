@@ -1,0 +1,134 @@
+"""Batched shared-scan throughput: query_batch vs sequential query().
+
+The paper's runtime cost is the family-prefix scan; `BlinkDB.query_batch`
+amortizes ONE scan over every same-template query in the batch. This
+benchmark measures queries/sec and HBM-bytes-per-query for batch sizes
+1→64 against N sequential `query()` calls on the same warm engine (ref
+path on CPU; the Pallas path benchmarks the same call sites on TPU), and
+verifies the batched estimates match the sequential ones to ≤ 1e-5
+relative error. Emits BENCH_batch.json for cross-PR perf tracking.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+try:
+    from benchmarks import _bootstrap  # noqa: F401  (module mode)
+except ImportError:
+    import _bootstrap  # noqa: F401  (script mode: benchmarks/ is sys.path[0])
+
+from repro.core import AggOp, Atom, CmpOp, ErrorBound, Predicate, Query
+
+from benchmarks import common
+
+BATCH_SIZES = (1, 2, 4, 8, 16, 32, 64)
+REL_TOL = 1e-5
+
+
+def _queries(db, n: int) -> list[Query]:
+    """n instantiations of ONE template: COUNT WHERE City == c_i (§2.1
+    template-stable workload — the shared-scan sweet spot)."""
+    cities = db.tables["sessions"].dictionaries["City"]
+    return [
+        Query("sessions", AggOp.COUNT,
+              predicate=Predicate.where(
+                  Atom("City", CmpOp.EQ, cities[i % len(cities)])),
+              bound=ErrorBound(0.1))
+        for i in range(n)
+    ]
+
+
+def _check_equivalence(seq, bat) -> float:
+    worst = 0.0
+    for a, b in zip(seq, bat):
+        ka = {g.key: g.estimate for g in a.groups}
+        kb = {g.key: g.estimate for g in b.groups}
+        assert ka.keys() == kb.keys(), "batched answer lost groups"
+        for key, va in ka.items():
+            denom = max(abs(va), 1e-12)
+            worst = max(worst, abs(va - kb[key]) / denom)
+    if worst > REL_TOL:
+        raise AssertionError(
+            f"batched estimates diverge from sequential: rel err {worst:.2e}")
+    return worst
+
+
+def run(n_rows: int = 400_000, batch_sizes=BATCH_SIZES,
+        use_pallas: bool = False, repeat: int = 3,
+        json_path: str | None = None) -> list[dict]:
+    db = common.conviva_db(n_rows=n_rows, use_pallas=use_pallas)
+    # Guarantee a superset family for the City template so §4.1 selection
+    # never probes: both paths run exactly one scan per query (sequential)
+    # vs one shared scan per batch — the comparison the ISSUE targets.
+    if ("City",) not in db.families["sessions"]:
+        db.add_family("sessions", ("City",))
+
+    # Warm everything timing should exclude: family striping, the sequential
+    # program + ELP cache (one template), and the batched program per padded
+    # batch size.
+    warm_ans = db.query(_queries(db, 1)[0])
+    for b in batch_sizes:
+        db.query_batch(_queries(db, b))
+
+    prefix_rows = warm_ans.rows_read  # all queries share template ⇒ same K
+    # columns the scan touches: City (predicate) + freq + entry_key, f32 each
+    scan_bytes = prefix_rows * 3 * 4
+
+    rows = []
+    for b in batch_sizes:
+        qs = _queries(db, b)
+        seq, t_seq = common.time_call(
+            lambda: [db.query(q) for q in qs], repeat=repeat)
+        bat, t_bat = common.time_call(
+            lambda: db.query_batch(qs), repeat=repeat)
+        worst = _check_equivalence(seq, bat)
+        qps_seq = b / t_seq
+        qps_bat = b / t_bat
+        rows.append({
+            "name": f"batch_throughput_b{b}",
+            "us_per_call": t_bat / b * 1e6,
+            "derived": (f"qps_batch={qps_bat:.1f} qps_seq={qps_seq:.1f} "
+                        f"speedup={qps_bat / qps_seq:.2f}x "
+                        f"bytes/q={scan_bytes / b:.0f} rel_err={worst:.1e}"),
+            "batch_size": b,
+            "qps_batched": qps_bat,
+            "qps_sequential": qps_seq,
+            "speedup": qps_bat / qps_seq,
+            "scan_bytes_per_query_batched": scan_bytes / b,
+            "scan_bytes_per_query_sequential": scan_bytes,
+            "prefix_rows": prefix_rows,
+            "max_rel_err_vs_sequential": worst,
+            "n_rows": n_rows,
+            "use_pallas": use_pallas,
+        })
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_batch.json")
+    ap.add_argument("--n-rows", type=int, default=400_000)
+    ap.add_argument("--quick", action="store_true",
+                    help="small data + batch sizes (CI smoke)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="benchmark the Pallas scan path (TPU; interpret on CPU)")
+    args = ap.parse_args()
+    kw = dict(use_pallas=args.pallas, json_path=args.json)
+    if args.quick:
+        kw.update(n_rows=60_000, batch_sizes=(1, 4, 16), repeat=1)
+    else:
+        kw.update(n_rows=args.n_rows)
+    rows = run(**kw)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,11 @@ import json
 import sys
 import traceback
 
+try:
+    from benchmarks import _bootstrap  # noqa: F401  (module mode)
+except ImportError:
+    import _bootstrap  # noqa: F401  (script mode: benchmarks/ is sys.path[0])
+
 SUITES = [
     ("table5", "benchmarks.table5_storage"),
     ("fig6ab", "benchmarks.fig6ab_budget"),
@@ -17,6 +22,7 @@ SUITES = [
     ("fig8ab", "benchmarks.fig8_bounds"),
     ("fig8c", "benchmarks.fig8c_scaling"),
     ("kernel", "benchmarks.kernel_perf"),
+    ("batch", "benchmarks.batch_throughput"),
     ("roofline", "benchmarks.roofline_report"),
 ]
 

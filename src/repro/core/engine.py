@@ -44,6 +44,30 @@ class EngineConfig:
     seed: int = 0
 
 
+# Largest Q per fused scan invocation. Pallas: the Qp·B VMEM terms scale
+# linearly with Q (docs/BATCHING.md budget math targets Qp=64 ≈ 8 MB of
+# ~16 MB/core). Ref path: the vmapped scan materializes O(Q·n) intermediates,
+# so unbounded Q risks device OOM on big prefixes. Bigger groups run as
+# chunked back-to-back scans, each still 64-way amortized.
+_MAX_SCAN_BATCH = 64
+
+
+@dataclasses.dataclass
+class _BatchJob:
+    """One conjunctive subquery's slot in a batched execution plan."""
+    parent: int                   # index of the originating query
+    order: int                    # disjunct order within the parent
+    q: Query
+    table: str
+    phi: tuple[str, ...]
+    struct: tuple                 # predicate template (pred_structure)
+    consts: tuple[float, ...]     # predicate constants, flat_atoms order
+    elp_key: tuple
+    scan_key: tuple               # (table, phi, struct, value, group, G)
+    confidence: float
+    k: float | None = None        # resolved resolution cap
+
+
 class BlinkDB:
     def __init__(self, config: EngineConfig | None = None, mesh=None,
                  data_axes: tuple[str, ...] = ("data",)):
@@ -56,15 +80,51 @@ class BlinkDB:
         self._striped: dict[tuple[str, tuple[str, ...]], exec_lib.StripedFamily] = {}
         self._latency: dict[tuple[str, tuple[str, ...]], elp_lib.LatencyModel] = {}
         self._programs: dict = {}     # (table, phi, template) -> compiled fn
+        self._batched_programs: dict = {}   # (scan key, Q_padded) -> compiled fn
+        self._quantile_programs: dict = {}  # (table, phi, template) -> jitted fn
         self._exact_programs: dict = {}
-        self._elp_cache: dict = {}    # (template, bound) -> chosen K (§4.4)
+        # (table, phi, struct, agg, value_col, group_by, repr(bound)) -> K
+        # (§4.4; invalidation matches positionally on the (table, phi) prefix)
+        self._elp_cache: dict = {}
         self._fk_maps: dict = {}      # (fact, dim, fk) -> np fk->row map
         self.last_solution: opt_lib.Solution | None = None
 
     # ------------------------------------------------------------- offline
     def register_table(self, name: str, tbl: table_lib.Table) -> None:
+        if name in self.tables and self.tables[name] is not tbl:
+            # Re-registration (e.g. maintenance ingesting new data): every
+            # cache derived from the old table's columns is stale.
+            self._invalidate_table(name)
         self.tables[name] = tbl
         self.families.setdefault(name, {})
+
+    def _invalidate_table(self, name: str) -> None:
+        for cache in (self._striped, self._latency, self._programs,
+                      self._batched_programs, self._quantile_programs,
+                      self._exact_programs, self._elp_cache):
+            for k in [k for k in cache if k[0] == name]:
+                del cache[k]
+        for k in [k for k in self._fk_maps if name in k[:2]]:
+            del self._fk_maps[k]
+        # If `name` served as a dimension, fact tables and their families
+        # hold gathered "name.col" columns whose codes reference the OLD
+        # dictionary — strip them so _resolve_joins regathers on next use.
+        prefix = name + "."
+        for fact_name, fact in self.tables.items():
+            stale_cols = [c for c in fact.columns if c.startswith(prefix)]
+            for c in stale_cols:
+                del fact.columns[c]
+            if stale_cols:
+                for k in [k for k in self._exact_programs
+                          if k[0] == fact_name]:
+                    del self._exact_programs[k]
+            for p, fam in self.families.get(fact_name, {}).items():
+                fam_stale = [c for c in fam.columns if c.startswith(prefix)]
+                for c in fam_stale:
+                    del fam.columns[c]
+                if fam_stale:
+                    self._striped.pop((fact_name, p), None)
+                    self._drop_programs(fact_name, p)
 
     def candidate_stats(self, table_name: str) -> Callable[[frozenset[str]], tuple[float, float, float]]:
         """stats(phi) -> (Store(φ), |D(φ)|, Δ(φ)) from table statistics."""
@@ -108,6 +168,7 @@ class BlinkDB:
         for phi in current - wanted:       # discard (Eq. 5 accounting done in solver)
             del self.families[table_name][phi]
             self._striped.pop((table_name, phi), None)
+            self._drop_programs(table_name, phi)
         for phi in sorted(wanted - current):
             fam = samp_lib.build_family(tbl, phi, self.config.k1, self.config.c,
                                         self.config.m, seed=self.config.seed)
@@ -131,6 +192,9 @@ class BlinkDB:
                                         self.config.c, self.config.m,
                                         seed=self.config.seed)
         self.families.setdefault(table_name, {})[phi_t] = fam
+        # Replacing a family orphans anything compiled against its columns.
+        self._striped.pop((table_name, phi_t), None)
+        self._drop_programs(table_name, phi_t)
 
     # ------------------------------------------------------------- runtime
     def _n_shards(self) -> int:
@@ -194,8 +258,19 @@ class BlinkDB:
                     fam.columns[col] = join_lib.gather_dim_column(
                         fk_map, dim, dim_col, fam.columns[join.fact_key])
                     self._striped.pop((table_name, p), None)
-                    self._programs = {k: v for k, v in self._programs.items()
-                                      if not (k[0] == table_name and k[1] == p)}
+                    self._drop_programs(table_name, p)
+
+    def _drop_programs(self, table_name: str, phi: tuple[str, ...]) -> None:
+        """Invalidate everything calibrated against a (table, family)'s
+        columns (family rebuilt, dropped, or join-widened): compiled
+        programs, plus ELP resolutions and the latency model — a K chosen
+        for the old sample need not meet the bound on the new one."""
+        for cache in (self._programs, self._batched_programs,
+                      self._quantile_programs, self._elp_cache,
+                      self._latency):
+            stale = [k for k in cache if k[0] == table_name and k[1] == phi]
+            for k in stale:
+                del cache[k]
 
     def _column_card(self, table_name: str, col: str) -> int:
         if "." in col:
@@ -224,13 +299,13 @@ class BlinkDB:
         key = (table_name, phi, struct, q.value_column, group_col, n_groups)
         fn = self._programs.get(key)
         if fn is None:
-            fn = exec_lib.make_query_fn(
+            jfn = exec_lib.make_query_fn(
                 striped, struct, q.value_column, group_col, n_groups,
                 mesh=self.mesh, data_axes=self.data_axes,
                 use_pallas=self.config.use_pallas)
-            # warm the compile outside the timed region
-            jax.tree.map(lambda x: x.block_until_ready(),
-                         fn(jnp.float32(k), vals))
+            # AOT-compile (no execution) so the cold path runs the query
+            # exactly once: the timed call below both warms and answers.
+            fn = jfn.lower(jnp.float32(k), vals).compile()
             self._programs[key] = fn
         t0 = time.perf_counter()
         mom = fn(jnp.float32(k), vals)
@@ -272,21 +347,60 @@ class BlinkDB:
     def _quantile_estimate(self, q: Query, table_name: str,
                            phi: tuple[str, ...], k: float,
                            mom: est_lib.GroupedMoments) -> est_lib.Estimate:
-        """Grouped weighted quantile needs the raw rows (histogram pass)."""
-        tbl = self.tables[table_name]
+        """Grouped weighted quantile needs the raw rows (histogram pass).
+        The pass is jitted and cached per (family × template) — k, the
+        predicate constants, and the quantile level are traced args, so every
+        re-instantiation (and every ELP probe) reuses one compiled program."""
         fam = self.families[table_name][phi]
         bound_pred = exec_lib.bind_predicate(q.predicate, self._encode(table_name))
-        mask = exec_lib.predicate_mask(fam.columns, bound_pred) & (fam.entry_key < k)
-        rates = fam.rate(k)
-        w = mask.astype(jnp.float32) / rates
+        struct, vals = exec_lib.pred_structure(bound_pred)
         group_col = q.group_by[0] if q.group_by else None
         n_groups = self._column_card(table_name, group_col) if group_col else 1
-        g = (fam.columns[group_col].astype(jnp.int32) if group_col
-             else jnp.zeros(fam.n_rows, jnp.int32))
-        qv, dens = exec_lib.grouped_quantile(
-            fam.columns[q.value_column], w, g, n_groups, q.quantile)
+        key = (table_name, phi, struct, q.value_column, group_col, n_groups)
+        fn = self._quantile_programs.get(key)
+        if fn is None:
+            cols, ek, freq = fam.columns, fam.entry_key, fam.freq
+            n_rows, value_col = fam.n_rows, q.value_column
+
+            def build(k_, pred_vals, level):
+                mask = exec_lib.eval_pred(struct, cols, pred_vals) & (ek < k_)
+                w = mask.astype(jnp.float32) / jnp.minimum(1.0, k_ / freq)
+                g = (cols[group_col].astype(jnp.int32) if group_col
+                     else jnp.zeros(n_rows, jnp.int32))
+                return exec_lib.grouped_quantile(
+                    cols[value_col], w, g, n_groups, level)
+            fn = jax.jit(build)
+            self._quantile_programs[key] = fn
+        qv, dens = fn(jnp.float32(k), vals, jnp.float32(q.quantile))
         return est_lib.estimate(AggOp.QUANTILE, mom, quantile_value=qv,
                                 quantile_density=dens, q=q.quantile)
+
+    def _selection_cat_cols(self, table_name: str, q: Query) -> frozenset[str]:
+        """Family selection columns (§4.1): joined dim attributes map to their
+        fk column — a family stratified on the join key serves them (§2.1.i)."""
+        fk_of = {j.dim_table: j.fact_key for j in q.joins}
+        sel_cols = set()
+        for c in q.where_group_columns:
+            if "." in c:
+                sel_cols.add(fk_of[c.split(".", 1)[0]])
+            else:
+                sel_cols.add(c)
+        return frozenset(
+            c for c in sel_cols
+            if self.tables[table_name].schema.column(c).kind is ColumnKind.CATEGORICAL)
+
+    def _select_phi(self, table_name: str, q: Query) -> tuple[str, ...]:
+        """§4.1 runtime family selection (superset rule, else probe)."""
+        fams = self.families[table_name]
+        cat_cols = self._selection_cat_cols(table_name, q)
+
+        def probe(phi: tuple[str, ...]) -> tuple[float, float]:
+            fam = fams[phi]
+            k_small = min(fam.ks)
+            mom, rows_read, _ = self._run_at_k(table_name, q, phi, k_small)
+            return float(jnp.sum(mom.n)), float(rows_read)
+
+        return select_family(cat_cols, fams, probe).phi
 
     def query(self, q: Query) -> Answer:
         """Execute with §4.1 family selection + §4.2 ELP resolution choice."""
@@ -298,28 +412,7 @@ class BlinkDB:
         table_name = q.table
         self._resolve_joins(table_name, q)
         fams = self.families[table_name]
-        cols = q.where_group_columns
-        # Family selection (§4.1): joined dim attributes map to their fk
-        # column — a family stratified on the join key serves them (§2.1.i).
-        fk_of = {j.dim_table: j.fact_key for j in q.joins}
-        sel_cols = set()
-        for c in cols:
-            if "." in c:
-                sel_cols.add(fk_of[c.split(".", 1)[0]])
-            else:
-                sel_cols.add(c)
-        cat_cols = frozenset(
-            c for c in sel_cols
-            if self.tables[table_name].schema.column(c).kind is ColumnKind.CATEGORICAL)
-
-        def probe(phi: tuple[str, ...]) -> tuple[float, float]:
-            fam = fams[phi]
-            k_small = min(fam.ks)
-            mom, rows_read, _ = self._run_at_k(table_name, q, phi, k_small)
-            return float(jnp.sum(mom.n)), float(rows_read)
-
-        selres = select_family(cat_cols, fams, probe)
-        phi = selres.phi
+        phi = self._select_phi(table_name, q)
         fam = fams[phi]
 
         confidence = q.bound.confidence if q.bound else 0.95
@@ -346,15 +439,7 @@ class BlinkDB:
                 q.agg, est, q.bound.eps, confidence, q.bound.relative))
             k_q = elp_lib.pick_k_for_error(fam, np.asarray(est.n), n_req, k_probe)
         elif isinstance(q.bound, TimeBound):
-            probes = elp_lib.run_probes(
-                fam,
-                lambda k: (lambda m, r, t: (float(jnp.sum(m.n)), t))(
-                    *self._run_at_k(table_name, q, phi, k)),
-                n_probes=self.config.probe_resolutions)
-            model = elp_lib.fit_latency([p.rows_read for p in probes],
-                                        [p.elapsed_s for p in probes])
-            self._latency[(table_name, phi)] = model
-            k_q = elp_lib.pick_k_for_time(fam, model, q.bound.seconds)
+            k_q = self._pick_k_for_time(table_name, q, phi)
         else:
             k_q = fam.ks[0]  # no bound: most accurate available sample
 
@@ -362,6 +447,186 @@ class BlinkDB:
         mom, rows_read, dt = self._run_at_k(table_name, q, phi, k_q)
         return self._answer_from_moments(q, table_name, phi, k_q, mom,
                                          rows_read, dt, confidence)
+
+    def _pick_k_for_time(self, table_name: str, q: Query,
+                         phi: tuple[str, ...]) -> float:
+        """§4.2 latency profile: calibrate t(rows) on the smallest
+        resolutions, then pick the largest K inside the bound. Shared by
+        query() and query_batch() (timing probes are inherently sequential)."""
+        fam = self.families[table_name][phi]
+        probes = elp_lib.run_probes(
+            fam,
+            lambda k: (lambda m, r, t: (float(jnp.sum(m.n)), t))(
+                *self._run_at_k(table_name, q, phi, k)),
+            n_probes=self.config.probe_resolutions)
+        model = elp_lib.fit_latency([p.rows_read for p in probes],
+                                    [p.elapsed_s for p in probes])
+        self._latency[(table_name, phi)] = model
+        return elp_lib.pick_k_for_time(fam, model, q.bound.seconds)
+
+    # ------------------------------------------------- batched shared scans
+    def _plan_batch_job(self, parent: int, order: int, q: Query,
+                        sel_cache: dict) -> "_BatchJob":
+        """Resolve joins + family selection for one conjunctive subquery.
+        Selection decisions are amortized across the batch: one probe per
+        distinct (table, selection-column-set), shared by every query that
+        maps to it (the batched analogue of §4.1)."""
+        table_name = q.table
+        self._resolve_joins(table_name, q)
+        cat_cols = self._selection_cat_cols(table_name, q)
+        struct, vals = exec_lib.pred_structure(
+            exec_lib.bind_predicate(q.predicate, self._encode(table_name)))
+        consts = exec_lib.flatten_pred_vals(vals)
+        # Selection is deterministic given (columns, template, constants) —
+        # probe-based choices depend on the constants' selectivity, so they
+        # amortize only across identical instantiations; superset choices
+        # (the template-stable hot case) never probe at all.
+        skey = (table_name, cat_cols, struct, consts)
+        phi = sel_cache.get(skey)
+        if phi is None:
+            phi = self._select_phi(table_name, q)
+            sel_cache[skey] = phi
+        group_col = q.group_by[0] if q.group_by else None
+        n_groups = self._column_card(table_name, group_col) if group_col else 1
+        return _BatchJob(
+            parent=parent, order=order, q=q, table=table_name, phi=phi,
+            struct=struct, consts=consts,
+            elp_key=(table_name, phi, struct, q.agg, q.value_column,
+                     q.group_by, repr(q.bound)),
+            scan_key=(table_name, phi, struct, q.value_column, group_col,
+                      n_groups),
+            confidence=q.bound.confidence if q.bound else 0.95)
+
+    def _run_batched(self, scan_key, ks: Sequence[float],
+                     consts_list: Sequence[tuple[float, ...]]
+                     ) -> tuple[est_lib.GroupedMoments, float]:
+        """One fused multi-query scan over a family prefix. The batch is
+        padded to the next power of two so the per-(family × template) AOT
+        program cache sees O(log Q) distinct shapes, not one per batch size."""
+        table_name, phi, struct, value_col, group_col, n_groups = scan_key
+        striped = self._striped_for(table_name, phi)
+        n_q = len(ks)
+        if n_q > _MAX_SCAN_BATCH:
+            moms, total_dt = [], 0.0
+            for i in range(0, n_q, _MAX_SCAN_BATCH):
+                m, d = self._run_batched(scan_key,
+                                         ks[i:i + _MAX_SCAN_BATCH],
+                                         consts_list[i:i + _MAX_SCAN_BATCH])
+                moms.append(m)
+                total_dt += d
+            return (jax.tree.map(lambda *xs: jnp.concatenate(xs), *moms),
+                    total_dt)
+        q_pad = 1 << max(0, n_q - 1).bit_length()
+        n_atoms = len(exec_lib.flat_atoms(struct))
+        ks_arr = np.asarray(list(ks) + [ks[0]] * (q_pad - n_q), np.float32)
+        consts = np.asarray(
+            [list(c) for c in consts_list] +
+            [list(consts_list[0])] * (q_pad - n_q),
+            np.float32).reshape(q_pad, n_atoms)
+        ks_dev, consts_dev = jnp.asarray(ks_arr), jnp.asarray(consts)
+        pkey = scan_key + (q_pad,)
+        fn = self._batched_programs.get(pkey)
+        if fn is None:
+            jfn = exec_lib.make_batched_query_fn(
+                striped, struct, value_col, group_col, n_groups,
+                mesh=self.mesh, data_axes=self.data_axes,
+                use_pallas=self.config.use_pallas)
+            fn = jfn.lower(ks_dev, consts_dev).compile()  # AOT, no execution
+            self._batched_programs[pkey] = fn
+        t0 = time.perf_counter()
+        mom = fn(ks_dev, consts_dev)
+        mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+        dt = time.perf_counter() - t0
+        return jax.tree.map(lambda x: x[:n_q], mom), dt
+
+    def query_batch(self, queries: Sequence[Query]) -> list[Answer]:
+        """Execute N concurrent queries, sharing one family scan per
+        (table, family, template) group.
+
+        The batched analogue of query(): disjunctive queries are rewritten to
+        conjunctive subqueries (§4.1.2) which join the batch individually;
+        family selection and ELP probes are amortized across the batch (one
+        probe scan per group serves every uncached ErrorBound query in it);
+        the final pass is ONE fused multi-query scan per group, whose
+        per-query moment slices unpack into ordinary Answers. Estimates are
+        identical to sequential query() calls — only the HBM traffic and
+        dispatch overhead are amortized. See docs/BATCHING.md.
+        """
+        queries = list(queries)
+        if not queries:
+            return []
+        sel_cache: dict = {}
+        jobs: list[_BatchJob] = []
+        n_subs = [0] * len(queries)
+        for pi, q in enumerate(queries):
+            for sq in rewrite_disjuncts(q):
+                jobs.append(self._plan_batch_job(pi, n_subs[pi], sq, sel_cache))
+                n_subs[pi] += 1
+
+        # ELP resolution (§4.2/§4.4): cached templates skip straight to K;
+        # uncached ErrorBound queries share one batched probe scan per group;
+        # TimeBound queries need wall-clock probes (inherently sequential).
+        probe_groups: dict[tuple, list[_BatchJob]] = {}
+        for job in jobs:
+            fam = self.families[job.table][job.phi]
+            if self.config.reuse_elp and job.elp_key in self._elp_cache:
+                job.k = self._elp_cache[job.elp_key]
+            elif isinstance(job.q.bound, ErrorBound):
+                probe_groups.setdefault(job.scan_key, []).append(job)
+            elif isinstance(job.q.bound, TimeBound):
+                job.k = self._pick_k_for_time(job.table, job.q, job.phi)
+                self._elp_cache[job.elp_key] = job.k
+            else:
+                job.k = fam.ks[0]  # no bound: most accurate available sample
+                self._elp_cache[job.elp_key] = job.k
+
+        for scan_key, group in probe_groups.items():
+            fam = self.families[group[0].table][group[0].phi]
+            k_probe = min(fam.ks)
+            mom, _ = self._run_batched(scan_key, [k_probe] * len(group),
+                                       [j.consts for j in group])
+            for i, job in enumerate(group):
+                # Sequential-contract parity (§4.4): once the first job of an
+                # elp_key resolves its K, later jobs reuse it — exactly as
+                # sequential calls 2..N would hit the cache query 1 wrote.
+                if self.config.reuse_elp and job.elp_key in self._elp_cache:
+                    job.k = self._elp_cache[job.elp_key]
+                    continue
+                mi = est_lib.moments_slice(mom, i)
+                est = (self._quantile_estimate(job.q, job.table, job.phi,
+                                               k_probe, mi)
+                       if job.q.agg is AggOp.QUANTILE
+                       else est_lib.estimate(job.q.agg, mi))
+                n_req = np.asarray(est_lib.required_n_for_error(
+                    job.q.agg, est, job.q.bound.eps, job.confidence,
+                    job.q.bound.relative))
+                job.k = elp_lib.pick_k_for_error(fam, np.asarray(est.n),
+                                                 n_req, k_probe)
+                self._elp_cache[job.elp_key] = job.k
+
+        # Final fused scan: one pass per (table, family, template) group.
+        final_groups: dict[tuple, list[_BatchJob]] = {}
+        for job in jobs:
+            final_groups.setdefault(job.scan_key, []).append(job)
+        sub_answers: list[list[tuple[int, Answer]]] = [[] for _ in queries]
+        for scan_key, group in final_groups.items():
+            mom, dt = self._run_batched(scan_key, [j.k for j in group],
+                                        [j.consts for j in group])
+            per_query_dt = dt / len(group)  # amortized shared-scan time
+            for i, job in enumerate(group):
+                fam = self.families[job.table][job.phi]
+                ans = self._answer_from_moments(
+                    job.q, job.table, job.phi, job.k,
+                    est_lib.moments_slice(mom, i), fam.prefix_for_k(job.k),
+                    per_query_dt, job.confidence)
+                sub_answers[job.parent].append((job.order, ans))
+
+        out = []
+        for pi, subs in enumerate(sub_answers):
+            subs = [a for _, a in sorted(subs, key=lambda t: t[0])]
+            out.append(subs[0] if len(subs) == 1
+                       else _union_answers(queries[pi], subs))
+        return out
 
     def exact_query(self, q: Query) -> Answer:
         """Ground truth: run the aggregation over the FULL table (rate=1),
@@ -378,18 +643,7 @@ class BlinkDB:
             cols = tbl.columns
 
             def build(pred_vals):
-                any_col = next(iter(cols.values()))
-                if struct:
-                    disj = jnp.zeros(any_col.shape, dtype=bool)
-                    for conj_s, conj_v in zip(struct, pred_vals):
-                        m = jnp.ones(any_col.shape, dtype=bool)
-                        for (col, op), val in zip(conj_s, conj_v):
-                            m = m & exec_lib._CMP[op](
-                                cols[col].astype(jnp.float32),
-                                jnp.asarray(val, jnp.float32))
-                        disj = disj | m
-                else:
-                    disj = jnp.ones(any_col.shape, bool)
+                disj = exec_lib.eval_pred(struct, cols, pred_vals)
                 ones_ = jnp.ones(tbl.n_rows, jnp.float32)
                 values_ = (cols[q.value_column].astype(jnp.float32)
                            if q.value_column else ones_)
@@ -397,8 +651,7 @@ class BlinkDB:
                       else jnp.zeros(tbl.n_rows, jnp.int32))
                 return est_lib.grouped_moments(values_, ones_, disj, g_,
                                                n_groups)
-            fn = jax.jit(build)
-            jax.tree.map(lambda x: x.block_until_ready(), fn(vals))
+            fn = jax.jit(build).lower(vals).compile()  # compile w/o executing
             self._exact_programs[key] = fn
 
         ones = jnp.ones(tbl.n_rows, jnp.float32)

@@ -13,6 +13,7 @@ dictionary-encoded group codes) and jit-compatible.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import jax
@@ -22,8 +23,10 @@ from jax.scipy.special import ndtri
 from repro.core.types import AggOp
 
 
+@functools.lru_cache(maxsize=None)
 def z_value(confidence: float) -> float:
-    """Two-sided normal quantile, e.g. 0.95 -> 1.96."""
+    """Two-sided normal quantile, e.g. 0.95 -> 1.96. Cached: the eager ndtri
+    expansion costs ~ms and confidence levels repeat across every answer."""
     return float(ndtri(0.5 + confidence / 2.0))
 
 
@@ -60,6 +63,13 @@ def grouped_moments(values: jax.Array, rates: jax.Array, mask: jax.Array,
     return GroupedMoments(
         n=seg(m), wsum=seg(w), wxsum=seg(w * x), wx2sum=seg(w * x * x),
         var_count=seg(vfac), var_sum=seg(vfac * x), var_sum2=seg(vfac * x * x))
+
+
+def moments_slice(mom: GroupedMoments, i: int) -> GroupedMoments:
+    """Select query i from a batched GroupedMoments (leaves [Q, G] → [G]).
+    The unpacking half of the batched shared-scan contract: one fused scan
+    produces the whole batch; each query's estimate derives from its slice."""
+    return jax.tree.map(lambda x: x[i], mom)
 
 
 @dataclasses.dataclass

@@ -10,6 +10,22 @@ single device the same code runs without the shard_map wrapper.
 The per-shard inner loop has two interchangeable implementations:
   * `ref` — pure jnp (jax.ops.segment_sum), the oracle;
   * `pallas` — the fused VMEM-tiled scan kernel (kernels/agg_scan.py).
+
+Batched shared-scan execution
+-----------------------------
+
+`make_batched_query_fn` is the multi-query sibling of `make_query_fn`: Q
+concurrent queries that share ONE template (same predicate structure, value
+column, group column) execute as a single fused pass over the family prefix.
+Per-query state is two traced stacks — resolution caps ks[Q] and predicate
+constants pred_consts[Q, n_atoms] in flattened template order — so one
+compiled program serves every batch of every instantiation of the template.
+On a mesh the whole batch is merged with ONE psum of the stacked [7, Q, G]
+statistics tensor; on the pallas path the per-shard scan is the Q-query
+kernel (kernels/agg_scan.py `agg_scan_batched_pallas`), which relies on the
+striped layout padding entry_key with +inf so padded rows fail every
+per-query prefix test. The (table, family, template) grouping contract that
+feeds this layer is documented in docs/BATCHING.md.
 """
 from __future__ import annotations
 
@@ -22,15 +38,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                    # jax >= 0.5
+    _shard_map = jax.shard_map
+except AttributeError:                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.core import estimators as est_lib
 from repro.core.sampling import SampleFamily
-from repro.core.types import AggOp, Atom, CmpOp, Conjunction, Predicate
+from repro.core.types import (AggOp, Atom, CmpOp, Conjunction, Predicate,
+                              cmp_fns)
 
-_CMP = {
-    CmpOp.EQ: jnp.equal, CmpOp.NE: jnp.not_equal,
-    CmpOp.LT: jnp.less, CmpOp.LE: jnp.less_equal,
-    CmpOp.GT: jnp.greater, CmpOp.GE: jnp.greater_equal,
-}
+_CMP = cmp_fns()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,20 +131,32 @@ class StripedFamily:
 
 
 def stripe_family(fam: SampleFamily, n_shards: int) -> StripedFamily:
+    """Stripe on host, then move the WHOLE padded block with one device_put.
+
+    Pad+reshape stays in NumPy (no per-column host→device round trips); the
+    single device_put of the column pytree lets the runtime batch every
+    buffer into one transfer, so (re)striping a wide family doesn't
+    serialize on per-column memcpys.
+    """
     n = fam.n_rows
     n_local = -(-n // n_shards)
     pad = n_local * n_shards - n
 
-    def reshape(arr, fill):
+    def stripe(arr, fill):
         a = np.asarray(arr)
-        a = np.concatenate([a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
-        return jnp.asarray(a.reshape(n_local, n_shards).T)  # [S, n_local]
+        if pad:
+            a = np.concatenate([a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
+        return np.ascontiguousarray(a.reshape(n_local, n_shards).T)  # [S, n_local]
 
-    cols = {c: reshape(v, 0) for c, v in fam.columns.items()}
-    freq = reshape(fam.freq, 1.0)
-    ek = reshape(fam.entry_key, np.inf)
-    valid = reshape(np.ones(n, dtype=bool), False)
-    return StripedFamily(fam.phi, fam.ks, cols, freq, ek, valid,
+    host_block = {
+        "cols": {c: stripe(v, 0) for c, v in fam.columns.items()},
+        "freq": stripe(fam.freq, 1.0),
+        "entry_key": stripe(fam.entry_key, np.inf),
+        "valid": stripe(np.ones(n, dtype=bool), False),
+    }
+    dev = jax.device_put(host_block)
+    return StripedFamily(fam.phi, fam.ks, dev["cols"], dev["freq"],
+                         dev["entry_key"], dev["valid"],
                          n, fam.table_rows, n_shards)
 
 
@@ -147,7 +177,7 @@ def run_query_striped(striped: StripedFamily, bound_pred, value_col: str | None,
         return jax.tree.map(lambda x: x.sum(axis=0), mom)
 
     pspec = P(data_axes)
-    fn = jax.shard_map(
+    fn = _shard_map(
         lambda c, f, e, v: _merge_psum(
             jax.tree.map(lambda x: x[0], jax.vmap(shard_fn)(c, f, e, v)),
             data_axes),
@@ -168,6 +198,41 @@ def pred_structure(bound: tuple[tuple[BoundAtom, ...], ...]):
     return struct, vals
 
 
+def flat_atoms(struct) -> tuple[tuple[str, CmpOp], ...]:
+    """Flatten a template structure to its atoms in template order — the
+    canonical atom indexing shared by the batched executor and kernel."""
+    return tuple((col, op) for conj in struct for (col, op) in conj)
+
+
+def flatten_pred_vals(vals) -> tuple[float, ...]:
+    """Nested per-conjunction constants → flat tuple in template order."""
+    return tuple(v for conj in vals for v in conj)
+
+
+def eval_pred(struct, cols: dict[str, jax.Array], pred_vals) -> jax.Array:
+    """Evaluate a template structure with traced NESTED constants (mirrors
+    pred_structure's vals layout) over column arrays -> bool[n]."""
+    return eval_pred_flat(struct, cols, flatten_pred_vals(pred_vals))
+
+
+def eval_pred_flat(struct, cols: dict[str, jax.Array],
+                   consts: jax.Array) -> jax.Array:
+    """Evaluate a template structure with traced FLAT constants consts[A]
+    (flat_atoms order) over column arrays -> bool[n]."""
+    any_col = next(iter(cols.values()))
+    if not struct:
+        return jnp.ones(any_col.shape, bool)
+    disj = jnp.zeros(any_col.shape, dtype=bool)
+    ai = 0
+    for conj in struct:
+        m = jnp.ones(any_col.shape, dtype=bool)
+        for (col, op) in conj:
+            m = m & _CMP[op](cols[col].astype(jnp.float32), consts[ai])
+            ai += 1
+        disj = disj | m
+    return disj
+
+
 def make_query_fn(striped: StripedFamily, struct, value_col: str | None,
                   group_col: str | None, n_groups: int,
                   mesh: Mesh | None = None,
@@ -177,21 +242,8 @@ def make_query_fn(striped: StripedFamily, struct, value_col: str | None,
     Returns jitted fn(k, pred_vals) -> GroupedMoments; k and the predicate
     constants are traced, so re-instantiations don't retrace."""
 
-    def eval_pred(cols, pred_vals):
-        any_col = next(iter(cols.values()))
-        if not struct:
-            return jnp.ones(any_col.shape, bool)
-        disj = jnp.zeros(any_col.shape, dtype=bool)
-        for conj_s, conj_v in zip(struct, pred_vals):
-            m = jnp.ones(any_col.shape, dtype=bool)
-            for (col, op), val in zip(conj_s, conj_v):
-                m = m & _CMP[op](cols[col].astype(jnp.float32),
-                                 jnp.asarray(val, jnp.float32))
-            disj = disj | m
-        return disj
-
     def shard_fn(k, pred_vals, cols, freq, ek, valid):
-        mask = eval_pred(cols, pred_vals) & valid & (ek < k)
+        mask = eval_pred(struct, cols, pred_vals) & valid & (ek < k)
         rates = jnp.minimum(1.0, k / freq)
         values = (cols[value_col].astype(jnp.float32)
                   if value_col is not None else jnp.ones_like(freq))
@@ -213,7 +265,7 @@ def make_query_fn(striped: StripedFamily, struct, value_col: str | None,
     pspec = P(data_axes)
 
     def fn(k, pred_vals):
-        inner = jax.shard_map(
+        inner = _shard_map(
             lambda c, f, e, v: _merge_psum(
                 jax.tree.map(lambda x: x[0],
                              jax.vmap(lambda cc, ff, ee, vv: shard_fn(
@@ -223,6 +275,85 @@ def make_query_fn(striped: StripedFamily, struct, value_col: str | None,
             in_specs=(pspec, pspec, pspec, pspec),
             out_specs=P(),
         )
+        return inner(striped.columns, striped.freq, striped.entry_key,
+                     striped.valid)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Batched shared-scan execution (one family pass, Q same-template queries)
+# ---------------------------------------------------------------------------
+
+def make_batched_query_fn(striped: StripedFamily, struct,
+                          value_col: str | None, group_col: str | None,
+                          n_groups: int, mesh: Mesh | None = None,
+                          data_axes: tuple[str, ...] = ("data",),
+                          use_pallas: bool = False):
+    """Compile ONE fused multi-query program per (family × template).
+
+    Returns jitted fn(ks, pred_consts) -> GroupedMoments with leading batch
+    axis: ks is f32[Q] (per-query resolution caps), pred_consts is f32[Q, A]
+    (per-query predicate constants in flat_atoms order). Every leaf of the
+    result is [Q, n_groups]. The family prefix streams from HBM once for the
+    whole batch; per-query work is VPU/MXU-only. On a mesh the per-shard
+    partials for ALL Q queries merge with a single psum.
+    """
+    atoms = flat_atoms(struct)
+    ops_struct = tuple(tuple(op for _, op in conj) for conj in struct)
+    if use_pallas:
+        from repro.kernels.agg_scan import CONST_LANES
+        if len(atoms) + 1 > CONST_LANES:
+            # The Q-query kernel packs k + atom constants into one
+            # CONST_LANES-wide qconst block; wider templates fall back to
+            # the jnp path rather than failing at trace time.
+            use_pallas = False
+
+    def shard_fn(ks, pred_consts, cols, freq, ek, valid):
+        values = (cols[value_col].astype(jnp.float32)
+                  if value_col is not None else jnp.ones_like(freq))
+        gcodes = (cols[group_col].astype(jnp.int32)
+                  if group_col is not None else jnp.zeros(freq.shape, jnp.int32))
+        if use_pallas:
+            from repro.kernels import ops as kops
+            acols = (jnp.stack([cols[c].astype(jnp.float32) for c, _ in atoms])
+                     if atoms else jnp.zeros((0,) + freq.shape, jnp.float32))
+            # Padding rows carry entry_key=+inf (stripe_family), failing the
+            # kernel's per-query prefix test — `valid` is implied.
+            return kops.agg_scan_batched(values, freq, ek, acols, gcodes,
+                                         ks, pred_consts, ops_struct, n_groups)
+
+        def one(k, consts):
+            mask = eval_pred_flat(struct, cols, consts) & valid & (ek < k)
+            rates = jnp.minimum(1.0, k / freq)
+            return est_lib.grouped_moments(values, rates, mask, gcodes,
+                                           n_groups)
+        return jax.vmap(one)(ks, pred_consts)
+
+    if mesh is None:
+        def fn(ks, pred_consts):
+            mom = jax.vmap(lambda c, f, e, v: shard_fn(ks, pred_consts,
+                                                       c, f, e, v)
+                           )(striped.columns, striped.freq,
+                             striped.entry_key, striped.valid)
+            return jax.tree.map(lambda x: x.sum(axis=0), mom)
+        return jax.jit(fn)
+
+    pspec = P(data_axes)
+
+    def fn(ks, pred_consts):
+        def per_shard(c, f, e, v):
+            mom = jax.tree.map(
+                lambda x: x[0],
+                jax.vmap(lambda cc, ff, ee, vv: shard_fn(
+                    ks, pred_consts, cc, ff, ee, vv))(c, f, e, v))
+            leaves, treedef = jax.tree.flatten(mom)
+            # ONE collective for the whole batch: psum the stacked [7, Q, G]
+            # statistics tensor instead of seven per-leaf reductions.
+            merged = jax.lax.psum(jnp.stack(leaves), data_axes)
+            return jax.tree.unflatten(treedef, list(merged))
+        inner = _shard_map(per_shard, mesh=mesh,
+                           in_specs=(pspec, pspec, pspec, pspec),
+                           out_specs=P())
         return inner(striped.columns, striped.freq, striped.entry_key,
                      striped.valid)
     return jax.jit(fn)

@@ -78,8 +78,9 @@ class SampleMaintainer:
         tbl = new_table if new_table is not None else self.db.tables[self.table_name]
         drift = self.check_drift(tbl) if new_table is not None else {}
         if new_table is not None:
+            # register_table invalidates every cache derived from the old
+            # table's columns (striped views, compiled programs, ELP state).
             self.db.register_table(self.table_name, new_table)
-            self.db._striped.clear()
 
         stale = [phi for phi, d in drift.items()
                  if d > self.config.drift_threshold]

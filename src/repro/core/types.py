@@ -57,6 +57,18 @@ class CmpOp(enum.Enum):
     GE = ">="
 
 
+def cmp_fns():
+    """Canonical CmpOp -> jnp comparator table (single definition shared by
+    the executor, the Pallas kernels, and the jnp oracles). Lazy so this
+    host-side types module doesn't import jax at load time."""
+    import jax.numpy as jnp
+    return {
+        CmpOp.EQ: jnp.equal, CmpOp.NE: jnp.not_equal,
+        CmpOp.LT: jnp.less, CmpOp.LE: jnp.less_equal,
+        CmpOp.GT: jnp.greater, CmpOp.GE: jnp.greater_equal,
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class Atom:
     """A single comparison predicate: `column <op> value`.

@@ -17,6 +17,27 @@ stays resident in VMEM while every row block streams past it.
 Block shapes: B rows (multiple of 128 lanes), GB groups (multiple of 128).
 VMEM footprint ≈ 4 input blocks (4·B·4B) + onehot (B·GB·4B) + out (8·GB·4B);
 defaults (B=2048, GB=512) ≈ 4.3 MB — well under ~16 MB VMEM of TPU v5e.
+
+Batched shared-scan execution
+-----------------------------
+
+`agg_scan_batched_pallas` amortizes ONE pass over the family prefix across Q
+concurrent same-template queries. Each row block streams HBM→VMEM exactly
+once; per-query state is tiny and lives in VMEM as a constant block
+qconst[Qp, 128] (lane 0 = resolution cap k_q, lanes 1..n_atoms = the query's
+predicate constants in flattened template order). The kernel evaluates the
+DNF predicate, the prefix test entry_key < k_q, and the HT weights
+rate = min(1, k_q/freq) for all Q queries on the resident block, then reduces
+all Q×8 statistics with a single MXU matmul:
+
+    stats[Q·8, B] @ onehot[B, GB]  →  out[Q·8, GB]   (stat-major rows)
+
+so HBM traffic is ~1/Q of Q sequential scans while MXU work grows only
+linearly. VMEM budget ≈ row blocks (≈6·B·4B) + atoms (A·B·4B) + per-query
+intermediates (≈8·Qp·B·4B) + onehot (B·GB·4B) + out (8·Qp·GB·4B); at the
+batched defaults (B=1024, GB=512, Qp=64) ≈ 8 MB — see docs/BATCHING.md for
+the full budget math. Padding rows carry entry_key=+inf so every per-query
+prefix test masks them; padded query slots get k=1 (freq≥1 keeps rates>0).
 """
 from __future__ import annotations
 
@@ -26,9 +47,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.types import cmp_fns
+
 DEFAULT_BLOCK_ROWS = 2048
+DEFAULT_BLOCK_ROWS_BATCHED = 1024
 DEFAULT_BLOCK_GROUPS = 512
 N_STATS = 8  # 7 used + 1 pad row for sublane alignment
+CONST_LANES = 128  # qconst lane width: 1 (k) + up to 127 predicate atoms
+
+_CMP = cmp_fns()
 
 
 def _agg_scan_kernel(values_ref, rates_ref, mask_ref, codes_ref, out_ref, *,
@@ -101,3 +128,130 @@ def agg_scan_pallas(values: jax.Array, rates: jax.Array, mask: jax.Array,
         interpret=interpret,
     )(v, r, m, c)
     return out[:7, :n_groups]
+
+
+def _agg_scan_batched_kernel(qconst_ref, values_ref, freq_ref, ek_ref,
+                             atoms_ref, codes_ref, out_ref, *,
+                             block_groups: int, ops_struct):
+    gi = pl.program_id(0)   # group-block index (outer)
+    ri = pl.program_id(1)   # row-block index (inner; accumulates into out)
+
+    @pl.when(ri == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v = values_ref[0, :].astype(jnp.float32)[None, :]     # [1, B]
+    f = freq_ref[0, :].astype(jnp.float32)[None, :]
+    ek = ek_ref[0, :].astype(jnp.float32)[None, :]
+    codes = codes_ref[0, :]
+    ks = qconst_ref[:, 0:1]                               # [Qp, 1]
+
+    prefix = ek < ks                                      # [Qp, B]
+    if ops_struct:
+        disj = jnp.zeros(prefix.shape, dtype=bool)
+        ai = 0
+        for conj in ops_struct:
+            m = jnp.ones(prefix.shape, dtype=bool)
+            for op in conj:
+                col = atoms_ref[ai, 0, :].astype(jnp.float32)[None, :]
+                m = m & _CMP[op](col, qconst_ref[:, ai + 1:ai + 2])
+                ai += 1
+            disj = disj | m
+        mf = (prefix & disj).astype(jnp.float32)
+    else:
+        mf = prefix.astype(jnp.float32)
+
+    r = jnp.minimum(1.0, ks / f)                          # [Qp, B]
+    w = mf / r
+    wx = w * v
+    vfac = mf * (1.0 - r) / (r * r)
+    vx = vfac * v
+    # Stat-major stacking: row s*Qp + q holds statistic s of query q.
+    stats = jnp.concatenate([
+        mf, w, wx, wx * v, vfac, vx, vx * v,
+        jnp.zeros_like(mf),                   # pad to N_STATS sublane groups
+    ], axis=0)                                            # [8·Qp, B]
+
+    group_base = gi * block_groups
+    gids = group_base + jax.lax.broadcasted_iota(jnp.int32, (1, block_groups), 1)
+    onehot = (codes[:, None] == gids).astype(jnp.float32)  # [B, GB]
+
+    out_ref[...] += jax.lax.dot_general(
+        stats, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # [8·Qp, GB]
+
+
+@functools.partial(jax.jit, static_argnames=("ops_struct", "n_groups",
+                                             "block_rows", "block_groups",
+                                             "interpret"))
+def agg_scan_batched_pallas(values: jax.Array, freq: jax.Array,
+                            entry_key: jax.Array, atom_cols: jax.Array,
+                            group_codes: jax.Array, ks: jax.Array,
+                            pred_consts: jax.Array, *, ops_struct,
+                            n_groups: int,
+                            block_rows: int = DEFAULT_BLOCK_ROWS_BATCHED,
+                            block_groups: int = DEFAULT_BLOCK_GROUPS,
+                            interpret: bool = False) -> jax.Array:
+    """Q-query shared scan: returns f32[Q, 7, n_groups].
+
+    `ops_struct` is the static predicate template (tuple of conjunctions of
+    CmpOps); atom i in flattened template order reads atom_cols[i] and
+    compares it against pred_consts[q, i]. Semantics match
+    ref.agg_scan_batched_ref.
+    """
+    n = values.shape[0]
+    q = ks.shape[0]
+    n_atoms = sum(len(c) for c in ops_struct)
+    if n_atoms + 1 > CONST_LANES:
+        raise ValueError(f"predicate has {n_atoms} atoms; max {CONST_LANES - 1}")
+
+    q_pad = max(8, -(-q // 8) * 8)
+    bg = min(block_groups, max(128, -(-n_groups // 128) * 128))
+    g_pad = -(-n_groups // bg) * bg
+    n_pad = -(-max(n, 1) // block_rows) * block_rows
+
+    def pad(x, fill):
+        return jnp.pad(x, (0, n_pad - n), constant_values=fill)
+
+    v = pad(values.astype(jnp.float32), 0).reshape(-1, block_rows)
+    f = pad(freq.astype(jnp.float32), 1).reshape(-1, block_rows)
+    ek = pad(entry_key.astype(jnp.float32), jnp.inf).reshape(-1, block_rows)
+    c = pad(group_codes.astype(jnp.int32), g_pad - 1).reshape(-1, block_rows)
+
+    na = max(n_atoms, 1)
+    a = atom_cols.astype(jnp.float32)
+    if a.shape[0] == 0:
+        a = jnp.zeros((1, n), jnp.float32)
+    a = jnp.pad(a, ((0, na - a.shape[0]), (0, n_pad - n)))
+    a = a.reshape(na, -1, block_rows)
+
+    # qconst[Qp, 128]: lane 0 = k, lanes 1..n_atoms = predicate constants.
+    # Padded query slots use k=1 (freq ≥ 1 keeps rates > 0; results dropped).
+    qconst = jnp.ones((q_pad, CONST_LANES), jnp.float32)
+    qconst = qconst.at[:q, 0].set(ks.astype(jnp.float32))
+    if n_atoms:
+        qconst = qconst.at[:q, 1:1 + n_atoms].set(
+            pred_consts.astype(jnp.float32))
+
+    n_row_blocks = n_pad // block_rows
+    n_group_blocks = g_pad // bg
+
+    out = pl.pallas_call(
+        functools.partial(_agg_scan_batched_kernel, block_groups=bg,
+                          ops_struct=ops_struct),
+        grid=(n_group_blocks, n_row_blocks),
+        in_specs=[
+            pl.BlockSpec((q_pad, CONST_LANES), lambda gi, ri: (0, 0)),
+            pl.BlockSpec((1, block_rows), lambda gi, ri: (ri, 0)),
+            pl.BlockSpec((1, block_rows), lambda gi, ri: (ri, 0)),
+            pl.BlockSpec((1, block_rows), lambda gi, ri: (ri, 0)),
+            pl.BlockSpec((na, 1, block_rows), lambda gi, ri: (0, ri, 0)),
+            pl.BlockSpec((1, block_rows), lambda gi, ri: (ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((N_STATS * q_pad, bg), lambda gi, ri: (0, gi)),
+        out_shape=jax.ShapeDtypeStruct((N_STATS * q_pad, g_pad), jnp.float32),
+        interpret=interpret,
+    )(qconst, v, f, ek, a, c)
+    # stat-major rows → [Q, 7, n_groups]
+    out = out.reshape(N_STATS, q_pad, g_pad)
+    return out[:7, :q, :n_groups].transpose(1, 0, 2)

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.estimators import GroupedMoments
-from repro.kernels.agg_scan import agg_scan_pallas
+from repro.kernels.agg_scan import agg_scan_batched_pallas, agg_scan_pallas
 from repro.kernels.weighted_sum import weighted_sum_pallas
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -24,6 +24,21 @@ def agg_scan(values: jax.Array, rates: jax.Array, mask: jax.Array,
                           interpret=INTERPRET)
     return GroupedMoments(n=out[0], wsum=out[1], wxsum=out[2], wx2sum=out[3],
                           var_count=out[4], var_sum=out[5], var_sum2=out[6])
+
+
+def agg_scan_batched(values: jax.Array, freq: jax.Array, entry_key: jax.Array,
+                     atom_cols: jax.Array, group_codes: jax.Array,
+                     ks: jax.Array, pred_consts: jax.Array, ops_struct,
+                     n_groups: int) -> GroupedMoments:
+    """Q-query shared scan (executor's batched use_pallas path): one pass over
+    the family prefix serves all Q same-template queries. Leaves are [Q, G]."""
+    out = agg_scan_batched_pallas(values, freq, entry_key, atom_cols,
+                                  group_codes, ks, pred_consts,
+                                  ops_struct=ops_struct, n_groups=n_groups,
+                                  interpret=INTERPRET)
+    return GroupedMoments(n=out[:, 0], wsum=out[:, 1], wxsum=out[:, 2],
+                          wx2sum=out[:, 3], var_count=out[:, 4],
+                          var_sum=out[:, 5], var_sum2=out[:, 6])
 
 
 def weighted_sum(values: jax.Array, weights: jax.Array,

@@ -33,6 +33,49 @@ def agg_scan_ref(values: jax.Array, rates: jax.Array, mask: jax.Array,
             seg(vfac), seg(vfac * x), seg(vfac * x * x))
 
 
+def agg_scan_batched_ref(values: jax.Array, freq: jax.Array,
+                         entry_key: jax.Array, atom_cols: jax.Array,
+                         group_codes: jax.Array, ks: jax.Array,
+                         pred_consts: jax.Array, ops_struct, n_groups: int
+                         ) -> jax.Array:
+    """Batched shared-scan oracle: Q queries over ONE family prefix.
+
+    Per query q the kernel semantics are
+      prefix_q = entry_key < ks[q]
+      mask_q   = prefix_q & DNF(ops_struct, atom_cols, pred_consts[q])
+      rates_q  = min(1, ks[q] / freq)
+    followed by the 7-statistic grouped reduction of agg_scan_ref.
+
+    `ops_struct` is the static predicate template: a tuple of conjunctions,
+    each a tuple of CmpOps; atom i (flattened in template order) compares
+    atom_cols[i] against pred_consts[q, i].  Returns f32[Q, 7, n_groups].
+    """
+    from repro.core.types import cmp_fns
+    cmp = cmp_fns()
+
+    def one(k, consts):
+        prefix = entry_key < k
+        if ops_struct:
+            disj = jnp.zeros(values.shape, dtype=bool)
+            ai = 0
+            for conj in ops_struct:
+                m = jnp.ones(values.shape, dtype=bool)
+                for op in conj:
+                    m = m & cmp[op](atom_cols[ai].astype(jnp.float32),
+                                    consts[ai])
+                    ai += 1
+                disj = disj | m
+            mask = prefix & disj
+        else:
+            mask = prefix
+        rates = jnp.minimum(1.0, k / freq.astype(jnp.float32))
+        return jnp.stack(agg_scan_ref(values, rates, mask, group_codes,
+                                      n_groups))
+
+    return jax.vmap(one)(ks.astype(jnp.float32),
+                         pred_consts.astype(jnp.float32))
+
+
 def weighted_sum_ref(values: jax.Array, weights: jax.Array,
                      mask: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Masked HT-weighted reductions: (Σ w·m, Σ w·m·x, Σ w·m·x²), scalars."""

@@ -1,0 +1,203 @@
+"""Batched shared-scan execution: kernel parity + engine equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AggOp, Atom, BlinkDB, CmpOp, EngineConfig, ErrorBound,
+                        Conjunction, Predicate, Query)
+from repro.core import executor as exec_lib
+from repro.core import sampling as samp_lib
+from repro.core import table as table_lib
+from repro.data import synth
+from repro.kernels import ref
+from repro.kernels.agg_scan import agg_scan_batched_pallas
+
+
+def _family_case(rng, n, n_groups, q, n_atoms):
+    values = jnp.asarray(rng.normal(5, 2, n).astype(np.float32))
+    freq = jnp.asarray(rng.integers(1, 500, n).astype(np.float32))
+    entry_key = jnp.asarray((rng.random(n) * np.asarray(freq)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, n_groups, n).astype(np.int32))
+    atoms = jnp.asarray(rng.integers(0, 8, (n_atoms, n)).astype(np.float32))
+    ks = jnp.asarray(rng.uniform(20, 400, q).astype(np.float32))
+    consts = jnp.asarray(rng.integers(0, 8, (q, n_atoms)).astype(np.float32))
+    return values, freq, entry_key, atoms, codes, ks, consts
+
+
+def _assert_parity(args, ops_struct, n_groups, **kw):
+    values, freq, entry_key, atoms, codes, ks, consts = args
+    got = agg_scan_batched_pallas(values, freq, entry_key, atoms, codes,
+                                  ks, consts, ops_struct=ops_struct,
+                                  n_groups=n_groups, interpret=True, **kw)
+    want = ref.agg_scan_batched_ref(values, freq, entry_key, atoms, codes,
+                                    ks, consts, ops_struct, n_groups)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-3)
+
+
+# ------------------------------------------------- kernel parity, odd shapes
+
+@pytest.mark.parametrize("n", [1, 100, 5000])      # n not multiple of blocks
+@pytest.mark.parametrize("n_groups", [1, 600])     # n_groups > block_groups
+def test_batched_kernel_shapes(n, n_groups):
+    rng = np.random.default_rng(n * 7 + n_groups)
+    args = _family_case(rng, n, n_groups, q=5, n_atoms=2)
+    _assert_parity(args, ((CmpOp.EQ,), (CmpOp.GT,)), n_groups)
+
+
+def test_batched_kernel_q1():
+    rng = np.random.default_rng(1)
+    args = _family_case(rng, 3000, 16, q=1, n_atoms=1)
+    _assert_parity(args, ((CmpOp.LE,),), 16)
+
+
+def test_batched_kernel_empty_predicate():
+    rng = np.random.default_rng(2)
+    values, freq, ek, _, codes, ks, _ = _family_case(rng, 4000, 10, 3, 1)
+    args = (values, freq, ek, jnp.zeros((0, 4000), jnp.float32), codes, ks,
+            jnp.zeros((3, 0), jnp.float32))
+    _assert_parity(args, (), 10)
+    # single empty conjunction (Predicate.true() template) == no predicate
+    args2 = (values, freq, ek, jnp.zeros((0, 4000), jnp.float32), codes, ks,
+             jnp.zeros((3, 0), jnp.float32))
+    _assert_parity(args2, ((),), 10)
+
+
+def test_batched_kernel_all_masked():
+    """Predicates that never match and prefixes that exclude every row."""
+    rng = np.random.default_rng(3)
+    values, freq, ek, atoms, codes, ks, _ = _family_case(rng, 2048, 8, 4, 1)
+    consts = jnp.full((4, 1), 99.0, jnp.float32)     # atom values are < 8
+    args = (values, freq, ek, atoms, codes, ks, consts)
+    _assert_parity(args, ((CmpOp.EQ,),), 8)
+    # prefix excludes everything: k below the smallest entry_key (but > 0)
+    tiny = jnp.full((4,), float(np.asarray(ek).min()) * 0.5 + 1e-6, jnp.float32)
+    got = agg_scan_batched_pallas(values, freq, ek, atoms, codes, tiny, consts,
+                                  ops_struct=((CmpOp.EQ,),), n_groups=8,
+                                  interpret=True)
+    assert np.all(np.isfinite(np.asarray(got)))
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+def test_batched_kernel_conjunction_mix():
+    rng = np.random.default_rng(4)
+    args = _family_case(rng, 5000, 37, q=7, n_atoms=3)
+    _assert_parity(args, ((CmpOp.EQ, CmpOp.LE), (CmpOp.GT,)), 37,
+                   block_rows=1024, block_groups=128)
+
+
+# -------------------------------------------- executor: batched == sequential
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_make_batched_query_fn_matches_sequential(use_pallas):
+    tbl = table_lib.from_columns("s", synth.sessions_table(20_000, seed=2))
+    fam = samp_lib.build_family(tbl, ("City",), 400.0, m=3, seed=1)
+    striped = exec_lib.stripe_family(fam, 1)
+    struct = ((("City", CmpOp.EQ),),)
+    n_groups = tbl.cardinality("OS")
+    bfn = exec_lib.make_batched_query_fn(striped, struct, "SessionTime", "OS",
+                                         n_groups, use_pallas=use_pallas)
+    sfn = exec_lib.make_query_fn(striped, struct, "SessionTime", "OS",
+                                 n_groups, use_pallas=use_pallas)
+    ks = jnp.asarray([400.0, 200.0, 100.0], jnp.float32)
+    consts = jnp.asarray([[0.0], [1.0], [2.0]], jnp.float32)
+    mom = bfn(ks, consts)
+    for i in range(3):
+        want = sfn(ks[i], ((float(consts[i, 0]),),))
+        for a, b in zip(jax.tree.leaves(mom), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a[i]), np.asarray(b),
+                                       rtol=1e-5, atol=1e-3)
+
+
+# ------------------------------------------------- engine: query_batch
+
+def _db(tbl, use_pallas=False):
+    db = BlinkDB(EngineConfig(k1=500.0, m=3, seed=1, use_pallas=use_pallas))
+    db.register_table("s", tbl)
+    db.add_family("s", ("City",))
+    db.add_family("s", ("OS",))
+    db.add_family("s", ())
+    return db
+
+
+def _assert_answers_match(a, b):
+    assert a.sample_phi == b.sample_phi
+    assert a.sample_k == b.sample_k
+    ka = {g.key: g for g in a.groups}
+    kb = {g.key: g for g in b.groups}
+    assert ka.keys() == kb.keys()
+    for key in ka:
+        np.testing.assert_allclose(ka[key].estimate, kb[key].estimate,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(ka[key].stderr, kb[key].stderr,
+                                   rtol=1e-4, atol=1e-9)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_query_batch_matches_sequential(use_pallas):
+    tbl = table_lib.from_columns("s", synth.sessions_table(25_000, seed=4))
+    cities = tbl.dictionaries["City"]
+    queries = (
+        [Query("s", AggOp.COUNT,
+               predicate=Predicate.where(Atom("City", CmpOp.EQ, c)),
+               bound=ErrorBound(0.1)) for c in cities[:4]]
+        + [Query("s", AggOp.AVG, value_column="SessionTime",
+                 group_by=("OS",), bound=ErrorBound(0.1)),
+           Query("s", AggOp.SUM, value_column="Bitrate",
+                 predicate=Predicate.where(Atom("OS", CmpOp.EQ, "os1"))),
+           Query("s", AggOp.QUANTILE, value_column="SessionTime",
+                 quantile=0.5,
+                 predicate=Predicate.where(Atom("City", CmpOp.EQ, cities[0]))),
+           ]
+    )
+    seq = [_db(tbl, use_pallas).query(q) for q in queries]  # fresh caches
+    bat = _db(tbl, use_pallas).query_batch(queries)
+    assert len(bat) == len(queries)
+    for a, b in zip(seq, bat):
+        _assert_answers_match(a, b)
+
+
+def test_query_batch_disjunctive_and_warm_cache():
+    tbl = table_lib.from_columns("s", synth.sessions_table(15_000, seed=6))
+    cities = tbl.dictionaries["City"]
+    q_or = Query("s", AggOp.COUNT, predicate=Predicate((
+        Conjunction((Atom("City", CmpOp.EQ, cities[0]),)),
+        Conjunction((Atom("City", CmpOp.EQ, cities[1]),)),
+    )), bound=ErrorBound(0.2))
+    db_seq, db_bat = _db(tbl), _db(tbl)
+    want = db_seq.query(q_or)
+    got = db_bat.query_batch([q_or])[0]
+    assert {g.key for g in want.groups} == {g.key for g in got.groups}
+    for gw, gg in zip(want.groups, got.groups):
+        np.testing.assert_allclose(gw.estimate, gg.estimate, rtol=1e-5)
+    # second batch hits the warm ELP + program caches and still agrees
+    got2 = db_bat.query_batch([q_or])[0]
+    for gw, gg in zip(want.groups, got2.groups):
+        np.testing.assert_allclose(gw.estimate, gg.estimate, rtol=1e-5)
+
+
+def test_query_batch_pallas_chunking(monkeypatch):
+    """Groups larger than the per-scan cap split into chunked scans whose
+    concatenated slices still match sequential answers."""
+    from repro.core import engine as engine_mod
+    monkeypatch.setattr(engine_mod, "_MAX_SCAN_BATCH", 2)
+    tbl = table_lib.from_columns("s", synth.sessions_table(12_000, seed=9))
+    cities = tbl.dictionaries["City"]
+    queries = [Query("s", AggOp.COUNT,
+                     predicate=Predicate.where(Atom("City", CmpOp.EQ, c)),
+                     bound=ErrorBound(0.2)) for c in cities[:5]]
+    seq = [_db(tbl, use_pallas=True).query(q) for q in queries]
+    bat = _db(tbl, use_pallas=True).query_batch(queries)
+    for a, b in zip(seq, bat):
+        _assert_answers_match(a, b)
+
+
+def test_query_batch_empty_and_single():
+    tbl = table_lib.from_columns("s", synth.sessions_table(10_000, seed=8))
+    db = _db(tbl)
+    assert db.query_batch([]) == []
+    q = Query("s", AggOp.COUNT, bound=ErrorBound(0.2))
+    [got] = db.query_batch([q])
+    want = _db(tbl).query(q)
+    _assert_answers_match(want, got)
