@@ -1,0 +1,148 @@
+"""Ingestion epoch latency: delta-based merge vs full rebuild (§3.2.3/§4.5).
+
+BlinkDB's maintenance story only scales if ingesting new data costs O(delta),
+not O(table): this benchmark times one maintenance epoch that ingests a
+1%/5%/20% delta through `SampleMaintainer.run_epoch(delta=...)` (in-place
+family merge + incremental restripe, compiled programs preserved) against
+the pre-delta behaviour — `run_epoch(new_table=...)` (full invalidation,
+optimizer re-run, from-scratch resample). Also times the first query after
+each epoch: the delta path reuses AOT-compiled programs, the rebuild path
+pays recompilation. Emits BENCH_ingest.json for cross-PR perf tracking.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+try:
+    from benchmarks import _bootstrap  # noqa: F401  (module mode)
+except ImportError:
+    import _bootstrap  # noqa: F401  (script mode: benchmarks/ is sys.path[0])
+
+from repro.core import (AggOp, Atom, BlinkDB, CmpOp, EngineConfig, ErrorBound,
+                        Predicate, Query)
+from repro.core import table as table_lib
+from repro.core.maintenance import MaintenanceConfig, SampleMaintainer
+from repro.data import synth
+
+from benchmarks import common
+
+DELTA_FRACS = (0.01, 0.05, 0.20)
+
+
+def _setup(n_rows: int):
+    """Fresh engine + maintainer on the Conviva-like table, City family
+    guaranteed, query path warmed (striping + AOT compile excluded from the
+    epoch timings — both paths start from an equally warm engine)."""
+    db = common.conviva_db(n_rows=n_rows)
+    if ("City",) not in db.families["sessions"]:
+        db.add_family("sessions", ("City",))
+    maint = SampleMaintainer(db, "sessions", common.conviva_templates(),
+                             MaintenanceConfig(drift_threshold=0.2))
+    q = _probe_query(db)
+    db.query(q)
+    return db, maint, q
+
+
+def _probe_query(db) -> Query:
+    city = db.tables["sessions"].dictionaries["City"][0]
+    return Query("sessions", AggOp.COUNT,
+                 predicate=Predicate.where(Atom("City", CmpOp.EQ, city)),
+                 bound=ErrorBound(0.1))
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def run(n_rows: int = 200_000, delta_fracs=DELTA_FRACS,
+        json_path: str | None = None) -> list[dict]:
+    base_raw = synth.sessions_table(n_rows, seed=common.SEED)
+    rows = []
+    for frac in delta_fracs:
+        d = max(int(frac * n_rows), 1)
+        warm_raw = synth.sessions_table(d, seed=common.SEED + 999)
+        delta_raw = synth.sessions_table(d, seed=common.SEED + 1000)
+
+        # -- incremental epoch: append + in-place merge ------------------
+        # One warmup epoch first: steady-state serving pays no per-epoch
+        # compiles (the scatter program is cached per delta shape class).
+        db_inc, maint_inc, q = _setup(n_rows)
+        maint_inc.run_epoch(delta=warm_raw)
+        db_inc.query(q)
+        report, t_delta = _timed(lambda: maint_inc.run_epoch(delta=delta_raw))
+        assert report["rebuilt"] == [], "benchmark delta should be low-drift"
+        _, t_q_delta = _timed(lambda: db_inc.query(q))
+
+        # -- full-rebuild epoch (the pre-delta behaviour) ----------------
+        # Same warmup treatment; a rebuild epoch still re-stripes and
+        # recompiles by construction — that is the cost being measured.
+        db_full, maint_full, qf = _setup(n_rows)
+        warm_tbl = table_lib.from_columns(
+            "sessions", {k: np.concatenate([base_raw[k], warm_raw[k]])
+                         for k in base_raw})
+        maint_full.run_epoch(new_table=warm_tbl)
+        appended = table_lib.from_columns(
+            "sessions", {k: np.concatenate([base_raw[k], warm_raw[k],
+                                            delta_raw[k]])
+                         for k in base_raw})
+        _, t_full = _timed(
+            lambda: maint_full.run_epoch(new_table=appended))
+        if ("City",) not in db_full.families["sessions"]:
+            db_full.add_family("sessions", ("City",))
+        _, t_q_full = _timed(lambda: db_full.query(qf))
+
+        # -- parity: the merged engine answers like the exact table ------
+        exact = db_inc.exact_query(q).groups[0].estimate
+        got = db_inc.query(q).groups[0].estimate
+        rel_err = abs(got - exact) / max(exact, 1.0)
+
+        speedup = t_full / t_delta
+        rows.append({
+            "name": f"ingest_delta{int(frac * 100)}pct",
+            "us_per_call": t_delta * 1e6,
+            "derived": (f"epoch_delta={t_delta * 1e3:.1f}ms "
+                        f"epoch_full={t_full * 1e3:.1f}ms "
+                        f"speedup={speedup:.1f}x "
+                        f"q_after_delta={t_q_delta * 1e3:.1f}ms "
+                        f"q_after_full={t_q_full * 1e3:.1f}ms "
+                        f"rel_err={rel_err:.1e}"),
+            "delta_fraction": frac,
+            "delta_rows": d,
+            "epoch_delta_s": t_delta,
+            "epoch_full_rebuild_s": t_full,
+            "speedup": speedup,
+            "query_after_delta_s": t_q_delta,
+            "query_after_full_s": t_q_full,
+            "rel_err_vs_exact": rel_err,
+            "n_rows": n_rows,
+        })
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_ingest.json")
+    ap.add_argument("--n-rows", type=int, default=200_000)
+    ap.add_argument("--quick", action="store_true",
+                    help="small data + one delta size (CI smoke)")
+    args = ap.parse_args()
+    if args.quick:
+        rows = run(n_rows=40_000, delta_fracs=(0.05,), json_path=args.json)
+    else:
+        rows = run(n_rows=args.n_rows, json_path=args.json)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ SUITES = [
     ("fig8c", "benchmarks.fig8c_scaling"),
     ("kernel", "benchmarks.kernel_perf"),
     ("batch", "benchmarks.batch_throughput"),
+    ("ingest", "benchmarks.ingest_throughput"),
     ("roofline", "benchmarks.roofline_report"),
 ]
 

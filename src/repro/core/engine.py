@@ -53,6 +53,22 @@ _MAX_SCAN_BATCH = 64
 
 
 @dataclasses.dataclass
+class AppendReport:
+    """What one BlinkDB.append_rows ingested and what it invalidated."""
+    delta: table_lib.TableDelta
+    # family -> (stratum freqs before, after) with STABLE stratum ids —
+    # aligned arrays, so maintenance can compute drift on the delta directly.
+    freqs: dict[tuple[str, ...], tuple[np.ndarray, np.ndarray]]
+    restriped: list[tuple[str, ...]]   # families whose block outgrew padding
+    epoch: int                         # 1-based append epoch for this table
+
+    @property
+    def merged(self) -> list[tuple[str, ...]]:
+        """Families merged in place — every family gets a freqs entry."""
+        return list(self.freqs)
+
+
+@dataclasses.dataclass
 class _BatchJob:
     """One conjunctive subquery's slot in a batched execution plan."""
     parent: int                   # index of the originating query
@@ -87,6 +103,7 @@ class BlinkDB:
         # (§4.4; invalidation matches positionally on the (table, phi) prefix)
         self._elp_cache: dict = {}
         self._fk_maps: dict = {}      # (fact, dim, fk) -> np fk->row map
+        self._append_epochs: dict[str, int] = {}  # table -> appends so far
         self.last_solution: opt_lib.Solution | None = None
 
     # ------------------------------------------------------------- offline
@@ -106,9 +123,12 @@ class BlinkDB:
                 del cache[k]
         for k in [k for k in self._fk_maps if name in k[:2]]:
             del self._fk_maps[k]
-        # If `name` served as a dimension, fact tables and their families
-        # hold gathered "name.col" columns whose codes reference the OLD
-        # dictionary — strip them so _resolve_joins regathers on next use.
+        self._invalidate_as_dimension(name)
+
+    def _invalidate_as_dimension(self, name: str) -> None:
+        """If `name` serves as a dimension, fact tables and their families
+        hold gathered "name.col" columns whose codes reference the OLD
+        dictionary — strip them so _resolve_joins regathers on next use."""
         prefix = name + "."
         for fact_name, fact in self.tables.items():
             stale_cols = [c for c in fact.columns if c.startswith(prefix)]
@@ -143,9 +163,13 @@ class BlinkDB:
     def build_samples(self, table_name: str, templates: Sequence[QueryTemplate],
                       storage_budget_fraction: float = 0.5,
                       change_fraction: float = 1.0,
-                      exact: bool = False) -> opt_lib.Solution:
+                      exact: bool = False,
+                      seed: int | None = None) -> opt_lib.Solution:
         """Offline sample creation (§2.2.1): solve §3.2, build chosen families
-        plus the always-present uniform family."""
+        plus the always-present uniform family. `seed` overrides the config
+        seed for this build only — maintenance threads a fresh per-epoch seed
+        through here instead of mutating the shared EngineConfig."""
+        seed = self.config.seed if seed is None else seed
         tbl = self.tables[table_name]
         stats = self.candidate_stats(table_name)
         cands = opt_lib.enumerate_candidates(templates, stats,
@@ -171,30 +195,133 @@ class BlinkDB:
             self._drop_programs(table_name, phi)
         for phi in sorted(wanted - current):
             fam = samp_lib.build_family(tbl, phi, self.config.k1, self.config.c,
-                                        self.config.m, seed=self.config.seed)
+                                        self.config.m, seed=seed)
             self.families[table_name][phi] = fam
         if () not in self.families[table_name]:
             self.families[table_name][()] = samp_lib.build_uniform_family(
                 tbl, self.config.uniform_fraction, self.config.c,
-                self.config.m, seed=self.config.seed)
+                self.config.m, seed=seed)
         return sol
 
-    def add_family(self, table_name: str, phi: Sequence[str]) -> None:
-        """Manually add a family (used by tests/benchmarks)."""
+    def add_family(self, table_name: str, phi: Sequence[str],
+                   seed: int | None = None) -> None:
+        """Manually add (or force-rebuild) a family. `seed` overrides the
+        config seed for this build (per-epoch maintenance resamples)."""
+        seed = self.config.seed if seed is None else seed
         tbl = self.tables[table_name]
         phi_t = tuple(sorted(phi))
         if phi_t == ():
             fam = samp_lib.build_uniform_family(
                 tbl, self.config.uniform_fraction, self.config.c,
-                self.config.m, seed=self.config.seed)
+                self.config.m, seed=seed)
         else:
             fam = samp_lib.build_family(tbl, phi_t, self.config.k1,
                                         self.config.c, self.config.m,
-                                        seed=self.config.seed)
+                                        seed=seed)
         self.families.setdefault(table_name, {})[phi_t] = fam
         # Replacing a family orphans anything compiled against its columns.
         self._striped.pop((table_name, phi_t), None)
         self._drop_programs(table_name, phi_t)
+
+    def append_rows(self, table_name: str, raw: Mapping[str, np.ndarray],
+                    seed: int | None = None) -> AppendReport:
+        """Append-only ingestion with delta-based sample maintenance
+        (§3.2.3/§4.5): encode the delta against the existing dictionaries,
+        merge every materialized family in place (exact HT rates under the
+        grown frequencies — see sampling.merge_family), and ship only the
+        delta to the device via the incremental restripe.
+
+        Invalidation is FINE-GRAINED (docs/MAINTENANCE.md has the matrix):
+        compiled query programs take the striped block as a traced argument,
+        so they stay valid unless a family outgrows its padded shape class
+        (then only that family's programs drop); group-by programs whose
+        dictionary grew recompile under their new cardinality key; exact-path
+        programs for this table drop (the table length changed); ELP
+        resolutions and latency models are kept — they are statistical
+        calibrations that remain sound under an append, not correctness
+        state. Nothing owned by OTHER tables is touched unless this table
+        serves them as a join dimension.
+        """
+        tbl = self.tables[table_name]
+        epoch = self._append_epochs.get(table_name, 0) + 1
+        self._append_epochs[table_name] = epoch
+        unit_seed = self.config.seed if seed is None else seed
+
+        # Gathered join attributes can't ride a schema-only delta: the table
+        # strips its own in Table.append; strip the FAMILIES' copies here
+        # (lazily regathered on next use).
+        fams = self.families.get(table_name, {})
+        for phi, fam in fams.items():
+            gathered = [c for c in fam.columns if "." in c]
+            for c in gathered:
+                del fam.columns[c]
+            if gathered:
+                self._striped.pop((table_name, phi), None)
+                self._drop_programs(table_name, phi)
+        # If this table serves as a dimension, the delta changes join
+        # results for its fact tables: refresh fk maps + gathered columns.
+        for k in [k for k in self._fk_maps if k[1] == table_name]:
+            del self._fk_maps[k]
+        self._invalidate_as_dimension(table_name)
+
+        delta = tbl.append(raw)
+
+        # fk maps where THIS table is the fact are sized by the fk column's
+        # dictionary — stale once that dictionary grew (new fk values would
+        # silently clamp-join to an arbitrary dimension row).
+        for k in [k for k in self._fk_maps
+                  if k[0] == table_name
+                  and len(delta.new_dict_values.get(k[2], ()))]:
+            del self._fk_maps[k]
+
+        # One delta-unit draw per stream, shared by every family on it.
+        strat_units = samp_lib.delta_units(delta.n_rows, unit_seed, epoch)
+        unif_units = samp_lib.delta_units(delta.n_rows, unit_seed, epoch,
+                                          uniform=True)
+        freqs: dict[tuple[str, ...], tuple[np.ndarray, np.ndarray]] = {}
+        restriped: list[tuple[str, ...]] = []
+        for phi, fam in list(fams.items()):
+            old_freqs = fam.stratum_freqs
+            units = unif_units if phi == () else strat_units
+            if phi == ():
+                # Uniform family keeps K_1 = p·N as N grows.
+                frac = fam.ks[0] / max(fam.table_rows, 1)
+                merged, block = samp_lib.merge_family(
+                    fam, delta.columns, units,
+                    new_k1=frac * (fam.table_rows + delta.n_rows),
+                    c=self.config.c)
+            else:
+                merged, block = samp_lib.merge_family(fam, delta.columns,
+                                                      units, c=self.config.c)
+            fams[phi] = merged
+            freqs[phi] = (old_freqs, merged.stratum_freqs)
+            key = (table_name, phi)
+            striped = self._striped.get(key)
+            if striped is not None:
+                upd = exec_lib.stripe_append(striped, merged, block)
+                if upd is None:   # outgrew padding: full compacting restripe
+                    self._striped[key] = exec_lib.stripe_family(
+                        merged, self._n_shards())
+                    self._drop_programs(table_name, phi)
+                    restriped.append(phi)
+                else:
+                    self._striped[key] = upd
+
+        # Exact-path programs are keyed by table length — every entry for
+        # this table is now unreachable; drop them (only this table's).
+        for k in [k for k in self._exact_programs if k[0] == table_name]:
+            del self._exact_programs[k]
+        # Group-by programs whose dictionary grew recompile under the new
+        # cardinality; prune the now-unreachable old-cardinality entries.
+        for col, vals in delta.new_dict_values.items():
+            if not len(vals):
+                continue
+            for cache in (self._programs, self._batched_programs,
+                          self._quantile_programs):
+                for k in [k for k in cache
+                          if k[0] == table_name and k[4] == col]:
+                    del cache[k]
+        return AppendReport(delta, freqs, restriped, epoch)
 
     # ------------------------------------------------------------- runtime
     def _n_shards(self) -> int:
@@ -289,26 +416,31 @@ class BlinkDB:
         """One fused scan at resolution k via a cached compiled program.
         Programs are compiled once per (family × query template) — k and
         predicate constants are traced args (§2.1 template stability)."""
-        tbl = self.tables[table_name]
         fam = self.families[table_name][phi]
         striped = self._striped_for(table_name, phi)
         bound_pred = exec_lib.bind_predicate(q.predicate, self._encode(table_name))
         struct, vals = exec_lib.pred_structure(bound_pred)
         group_col = q.group_by[0] if q.group_by else None
         n_groups = self._column_card(table_name, group_col) if group_col else 1
-        key = (table_name, phi, struct, q.value_column, group_col, n_groups)
+        # The striped block is a traced ARGUMENT of the compiled program, so
+        # incremental appends that keep the padded shape class reuse it; the
+        # shape class in the key retires programs when a block is reallocated.
+        key = (table_name, phi, struct, q.value_column, group_col, n_groups,
+               striped.shape_class)
+        args = (striped.columns, striped.freq, striped.entry_key,
+                striped.valid)
         fn = self._programs.get(key)
         if fn is None:
             jfn = exec_lib.make_query_fn(
-                striped, struct, q.value_column, group_col, n_groups,
+                struct, q.value_column, group_col, n_groups,
                 mesh=self.mesh, data_axes=self.data_axes,
                 use_pallas=self.config.use_pallas)
             # AOT-compile (no execution) so the cold path runs the query
             # exactly once: the timed call below both warms and answers.
-            fn = jfn.lower(jnp.float32(k), vals).compile()
+            fn = jfn.lower(jnp.float32(k), vals, *args).compile()
             self._programs[key] = fn
         t0 = time.perf_counter()
-        mom = fn(jnp.float32(k), vals)
+        mom = fn(jnp.float32(k), vals, *args)
         mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
         dt = time.perf_counter() - t0
         return mom, fam.prefix_for_k(k), dt
@@ -348,30 +480,25 @@ class BlinkDB:
                            phi: tuple[str, ...], k: float,
                            mom: est_lib.GroupedMoments) -> est_lib.Estimate:
         """Grouped weighted quantile needs the raw rows (histogram pass).
-        The pass is jitted and cached per (family × template) — k, the
-        predicate constants, and the quantile level are traced args, so every
-        re-instantiation (and every ELP probe) reuses one compiled program."""
-        fam = self.families[table_name][phi]
+        The pass is jitted and cached per (family × template × shape class) —
+        k, the predicate constants, the quantile level, AND the striped block
+        are traced args, so every re-instantiation (and every ELP probe)
+        reuses one compiled program, including across incremental appends."""
+        striped = self._striped_for(table_name, phi)
         bound_pred = exec_lib.bind_predicate(q.predicate, self._encode(table_name))
         struct, vals = exec_lib.pred_structure(bound_pred)
         group_col = q.group_by[0] if q.group_by else None
         n_groups = self._column_card(table_name, group_col) if group_col else 1
-        key = (table_name, phi, struct, q.value_column, group_col, n_groups)
+        key = (table_name, phi, struct, q.value_column, group_col, n_groups,
+               striped.shape_class)
         fn = self._quantile_programs.get(key)
         if fn is None:
-            cols, ek, freq = fam.columns, fam.entry_key, fam.freq
-            n_rows, value_col = fam.n_rows, q.value_column
-
-            def build(k_, pred_vals, level):
-                mask = exec_lib.eval_pred(struct, cols, pred_vals) & (ek < k_)
-                w = mask.astype(jnp.float32) / jnp.minimum(1.0, k_ / freq)
-                g = (cols[group_col].astype(jnp.int32) if group_col
-                     else jnp.zeros(n_rows, jnp.int32))
-                return exec_lib.grouped_quantile(
-                    cols[value_col], w, g, n_groups, level)
-            fn = jax.jit(build)
+            fn = exec_lib.make_quantile_fn(struct, q.value_column, group_col,
+                                           n_groups)
             self._quantile_programs[key] = fn
-        qv, dens = fn(jnp.float32(k), vals, jnp.float32(q.quantile))
+        qv, dens = fn(jnp.float32(k), vals, jnp.float32(q.quantile),
+                      striped.columns, striped.freq, striped.entry_key,
+                      striped.valid)
         return est_lib.estimate(AggOp.QUANTILE, mom, quantile_value=qv,
                                 quantile_density=dens, q=q.quantile)
 
@@ -524,17 +651,19 @@ class BlinkDB:
             [list(consts_list[0])] * (q_pad - n_q),
             np.float32).reshape(q_pad, n_atoms)
         ks_dev, consts_dev = jnp.asarray(ks_arr), jnp.asarray(consts)
-        pkey = scan_key + (q_pad,)
+        args = (striped.columns, striped.freq, striped.entry_key,
+                striped.valid)
+        pkey = scan_key + (striped.shape_class, q_pad)
         fn = self._batched_programs.get(pkey)
         if fn is None:
             jfn = exec_lib.make_batched_query_fn(
-                striped, struct, value_col, group_col, n_groups,
+                struct, value_col, group_col, n_groups,
                 mesh=self.mesh, data_axes=self.data_axes,
                 use_pallas=self.config.use_pallas)
-            fn = jfn.lower(ks_dev, consts_dev).compile()  # AOT, no execution
+            fn = jfn.lower(ks_dev, consts_dev, *args).compile()  # AOT
             self._batched_programs[pkey] = fn
         t0 = time.perf_counter()
-        mom = fn(ks_dev, consts_dev)
+        mom = fn(ks_dev, consts_dev, *args)
         mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
         dt = time.perf_counter() - t0
         return jax.tree.map(lambda x: x[:n_q], mom), dt
@@ -637,31 +766,38 @@ class BlinkDB:
         struct, vals = exec_lib.pred_structure(bound_pred)
         group_col = q.group_by[0] if q.group_by else None
         n_groups = self._column_card(q.table, group_col) if group_col else 1
-        key = (q.table, struct, q.value_column, group_col, n_groups)
+        # Plain-dict snapshot: .items() refreshes any lazily-stale appended
+        # device columns, and jit pytrees must not see the lazy dict subclass.
+        tcols = dict(tbl.columns.items())
+        # Columns are traced args and the key carries the table length +
+        # column set, so an appended table can never hit a program compiled
+        # against its old buffers (append_rows also prunes old entries).
+        key = (q.table, struct, q.value_column, group_col, n_groups,
+               tbl.n_rows, tuple(sorted(tcols)))
         fn = self._exact_programs.get(key)
         if fn is None:
-            cols = tbl.columns
+            n_rows = tbl.n_rows
 
-            def build(pred_vals):
+            def build(pred_vals, cols):
                 disj = exec_lib.eval_pred(struct, cols, pred_vals)
-                ones_ = jnp.ones(tbl.n_rows, jnp.float32)
+                ones_ = jnp.ones(n_rows, jnp.float32)
                 values_ = (cols[q.value_column].astype(jnp.float32)
                            if q.value_column else ones_)
                 g_ = (cols[group_col].astype(jnp.int32) if group_col
-                      else jnp.zeros(tbl.n_rows, jnp.int32))
+                      else jnp.zeros(n_rows, jnp.int32))
                 return est_lib.grouped_moments(values_, ones_, disj, g_,
                                                n_groups)
-            fn = jax.jit(build).lower(vals).compile()  # compile w/o executing
+            fn = jax.jit(build).lower(vals, tcols).compile()  # AOT
             self._exact_programs[key] = fn
 
         ones = jnp.ones(tbl.n_rows, jnp.float32)
-        mask = exec_lib.predicate_mask(tbl.columns, bound_pred)
-        values = (tbl.columns[q.value_column].astype(jnp.float32)
+        mask = exec_lib.predicate_mask(tcols, bound_pred)
+        values = (tcols[q.value_column].astype(jnp.float32)
                   if q.value_column else ones)
-        g = (tbl.columns[group_col].astype(jnp.int32) if group_col
+        g = (tcols[group_col].astype(jnp.int32) if group_col
              else jnp.zeros(tbl.n_rows, jnp.int32))
         t0 = time.perf_counter()
-        mom = fn(vals)
+        mom = fn(vals, tcols)
         mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
         if q.agg is AggOp.QUANTILE:
             qv, dens = exec_lib.grouped_quantile(
@@ -690,7 +826,17 @@ class BlinkDB:
 def _union_answers(q: Query, answers: list[Answer]) -> Answer:
     """Combine disjunct sub-answers (§4.1.2): sums/counts add; variances add.
     (Disjuncts may overlap in general; BlinkDB's rewrite assumes disjoint or
-    inclusion-exclusion handled upstream — we document the disjoint case.)"""
+    inclusion-exclusion handled upstream — we document the disjoint case.)
+
+    Only ADDITIVE aggregates may be unioned this way; rewrite_disjuncts
+    rejects AVG/QUANTILE before execution. Sub-answer GroupResults are
+    copied before the union mutates ci_low/ci_high — groups that appear in a
+    single disjunct must not alias (and silently corrupt) the sub-answer.
+    """
+    if q.agg not in (AggOp.COUNT, AggOp.SUM):
+        raise ValueError(
+            f"disjunct union is only defined for additive aggregates "
+            f"(COUNT/SUM), not {q.agg}")
     by_key: dict[tuple, GroupResult] = {}
     for a in answers:
         for g in a.groups:
@@ -702,7 +848,7 @@ def _union_answers(q: Query, answers: list[Answer]) -> Answer:
                     prev.n_selected + g.n_selected, prev.exact and g.exact)
                 by_key[g.key] = merged
             else:
-                by_key[g.key] = g
+                by_key[g.key] = dataclasses.replace(g)
     z = est_lib.z_value(answers[0].confidence)
     groups = []
     for g in by_key.values():

@@ -111,23 +111,63 @@ def _merge_psum(mom: est_lib.GroupedMoments, axes) -> est_lib.GroupedMoments:
 # Striped (distributed) family layout
 # ---------------------------------------------------------------------------
 
+# Shape-class granularity of the striped layout: local rows are padded up to
+# a multiple of _STRIPE_BLOCK with _STRIPE_HEADROOM slack so small appends
+# land in pre-allocated padding and keep every AOT-compiled program valid
+# (docs/MAINTENANCE.md). Padded/ghost rows self-exclude: entry_key >= K_1.
+_STRIPE_BLOCK = 64
+_STRIPE_HEADROOM = 0.25
+_STRATA_BLOCK = 128     # freq-table length granularity (new strata are rare)
+
+
 @dataclasses.dataclass
 class StripedFamily:
     """A SampleFamily striped round-robin over data shards.
 
-    Row j of the sorted family lives at shard (j % S), local index (j // S);
-    a prefix of length n touches ceil(n/S) local rows on every shard: perfect
-    load balance for every resolution.
+    Row j of the family lives at shard (j % S), local index (j // S); every
+    shard holds an equal slice of every prefix: balanced load for every
+    resolution. The block over-allocates (_STRIPE_HEADROOM) so append deltas
+    slot into existing padding, and keeps the per-row sampling PRIMITIVES —
+    unit u and stable stratum id — alongside the derived freq/entry_key, so
+    an append only ships the delta rows plus the updated per-stratum
+    frequency table; freq and entry_key are re-derived ON DEVICE.
     """
     phi: tuple[str, ...]
     ks: tuple[float, ...]
     columns: dict[str, jax.Array]   # [S, n_local] (padded)
-    freq: jax.Array                 # f32[S, n_local]
-    entry_key: jax.Array            # f32[S, n_local]
+    freq: jax.Array                 # f32[S, n_local] (derived: freq_table[strat])
+    entry_key: jax.Array            # f32[S, n_local] (derived: unit * freq)
     valid: jax.Array                # bool[S, n_local] (padding mask)
-    n_rows: int
+    unit: jax.Array                 # f32[S, n_local], +inf on padding
+    strat: jax.Array                # int32[S, n_local] stable stratum ids
+    freq_table: jax.Array           # f32[D_padded] per-stratum F
+    n_rows: int                     # occupied slots (incl. self-excluded ghosts)
     table_rows: int
     n_shards: int
+
+    @property
+    def capacity(self) -> int:
+        return self.n_shards * int(self.freq.shape[1])
+
+    @property
+    def shape_class(self) -> tuple:
+        """Everything an AOT-compiled program's input signature depends on.
+        Appends that keep this unchanged reuse compiled programs as-is."""
+        return (self.n_shards, int(self.freq.shape[1]),
+                tuple(sorted(self.columns)))
+
+
+def _padded_local(n: int, n_shards: int) -> int:
+    n_local = -(-max(n, 1) // n_shards)
+    n_local = int(n_local * (1.0 + _STRIPE_HEADROOM)) + 1
+    return -(-n_local // _STRIPE_BLOCK) * _STRIPE_BLOCK
+
+
+def _padded_freq_table(freq_table: np.ndarray) -> np.ndarray:
+    want = -(-max(len(freq_table), 1) // _STRATA_BLOCK) * _STRATA_BLOCK
+    out = np.ones(want, dtype=np.float32)
+    out[: len(freq_table)] = freq_table
+    return out
 
 
 def stripe_family(fam: SampleFamily, n_shards: int) -> StripedFamily:
@@ -139,7 +179,7 @@ def stripe_family(fam: SampleFamily, n_shards: int) -> StripedFamily:
     serialize on per-column memcpys.
     """
     n = fam.n_rows
-    n_local = -(-n // n_shards)
+    n_local = _padded_local(n, n_shards)
     pad = n_local * n_shards - n
 
     def stripe(arr, fill):
@@ -148,16 +188,104 @@ def stripe_family(fam: SampleFamily, n_shards: int) -> StripedFamily:
             a = np.concatenate([a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
         return np.ascontiguousarray(a.reshape(n_local, n_shards).T)  # [S, n_local]
 
+    unit = (np.asarray(fam.unit) if fam.unit is not None
+            else np.asarray(fam.entry_key) / np.maximum(np.asarray(fam.freq), 1e-30))
+    strat = (fam.row_strata if fam.row_strata is not None
+             else np.zeros(n, dtype=np.int64))
     host_block = {
         "cols": {c: stripe(v, 0) for c, v in fam.columns.items()},
         "freq": stripe(fam.freq, 1.0),
         "entry_key": stripe(fam.entry_key, np.inf),
         "valid": stripe(np.ones(n, dtype=bool), False),
+        "unit": stripe(unit.astype(np.float32), np.inf),
+        "strat": stripe(strat.astype(np.int32), 0),
+        "freq_table": _padded_freq_table(
+            fam.stratum_freqs.astype(np.float32)),
     }
     dev = jax.device_put(host_block)
     return StripedFamily(fam.phi, fam.ks, dev["cols"], dev["freq"],
-                         dev["entry_key"], dev["valid"],
+                         dev["entry_key"], dev["valid"], dev["unit"],
+                         dev["strat"], dev["freq_table"],
                          n, fam.table_rows, n_shards)
+
+
+@jax.jit
+def _scatter_refresh(cols, unit, strat, valid, payload):
+    """One fused device program for an incremental restripe: scatter the
+    (padded) delta rows into the block and re-derive freq/entry_key from the
+    updated frequency table. Module-level jit + power-of-two delta padding
+    ⇒ compiled once per (shape class, delta pad class), reused by every
+    subsequent append epoch."""
+    s_idx, l_idx = payload["s"], payload["l"]
+
+    def scatter(arr, vals):
+        return arr.at[s_idx, l_idx].set(vals.astype(arr.dtype))
+
+    cols = {c: scatter(cols[c], payload["cols"][c]) for c in cols}
+    unit = scatter(unit, payload["unit"])
+    strat = scatter(strat, payload["strat"])
+    valid = valid.at[s_idx, l_idx].set(True)
+    freq_table = payload["freq_table"]
+    freq = freq_table[strat]
+    entry_key = unit * freq          # padding keeps unit=+inf -> ek=+inf
+    return cols, unit, strat, valid, freq_table, freq, entry_key
+
+
+@jax.jit
+def _refresh_only(cols, unit, strat, valid, freq_table):
+    """Zero surviving delta rows: only the frequency table changed (the
+    rescale may still ghost existing rows)."""
+    freq = freq_table[strat]
+    return cols, unit, strat, valid, freq_table, freq, unit * freq
+
+
+def stripe_append(striped: StripedFamily, fam: SampleFamily,
+                  block) -> StripedFamily | None:
+    """Incremental restripe: scatter an append's DeltaBlock into the striped
+    block's padding and re-derive freq/entry_key on device.
+
+    The only host→device traffic is ONE device_put of the delta payload
+    (d rows + the refreshed per-stratum frequency table); existing rows'
+    freq/entry_key are recomputed on device from the stored (unit, stratum)
+    primitives, which also turns rows the rescale pushed past K_1 into
+    self-excluding ghosts (entry_key >= K_1 fails every prefix test).
+    The delta is padded to a power-of-two row count by REPEATING its last
+    row (duplicate writes of identical values — idempotent), so the jitted
+    scatter program is shared across epochs. Returns None when the delta
+    outgrows the padded capacity — the caller falls back to a full
+    (compacting) restripe, which also resets the shape class.
+    """
+    d = block.n_rows
+    start = striped.n_rows
+    s_count = striped.n_shards
+    if start + d > striped.capacity:
+        return None
+    freq_table = _padded_freq_table(block.freq_table)
+    if d == 0:
+        out = _refresh_only(striped.columns, striped.unit, striped.strat,
+                            striped.valid, jax.device_put(freq_table))
+    else:
+        d_pad = max(64, 1 << (d - 1).bit_length())
+
+        def pad(a):
+            a = np.asarray(a)
+            return np.concatenate([a, np.repeat(a[-1:], d_pad - d, axis=0)])
+
+        j = np.arange(start, start + d)
+        payload = {
+            "s": pad((j % s_count).astype(np.int32)),
+            "l": pad((j // s_count).astype(np.int32)),
+            "cols": {c: pad(v) for c, v in block.columns.items()},
+            "unit": pad(block.unit.astype(np.float32)),
+            "strat": pad(block.strata.astype(np.int32)),
+            "freq_table": freq_table,
+        }
+        out = _scatter_refresh(striped.columns, striped.unit, striped.strat,
+                               striped.valid, jax.device_put(payload))
+    cols, unit, strat, valid, freq_table, freq, entry_key = out
+    return StripedFamily(fam.phi, fam.ks, cols, freq, entry_key, valid,
+                         unit, strat, freq_table,
+                         start + d, fam.table_rows, s_count)
 
 
 def run_query_striped(striped: StripedFamily, bound_pred, value_col: str | None,
@@ -233,14 +361,18 @@ def eval_pred_flat(struct, cols: dict[str, jax.Array],
     return disj
 
 
-def make_query_fn(striped: StripedFamily, struct, value_col: str | None,
+def make_query_fn(struct, value_col: str | None,
                   group_col: str | None, n_groups: int,
                   mesh: Mesh | None = None,
                   data_axes: tuple[str, ...] = ("data",),
                   use_pallas: bool = False):
     """Compile the fused query program once per (family × template).
-    Returns jitted fn(k, pred_vals) -> GroupedMoments; k and the predicate
-    constants are traced, so re-instantiations don't retrace."""
+    Returns jitted fn(k, pred_vals, cols, freq, entry_key, valid) ->
+    GroupedMoments. k and the predicate constants are traced, so
+    re-instantiations don't retrace — and the striped block itself is a
+    TRACED ARGUMENT rather than a captured constant, so an incremental
+    append that keeps the padded shape class (StripedFamily.shape_class)
+    reuses the same AOT-compiled program on the updated arrays."""
 
     def shard_fn(k, pred_vals, cols, freq, ek, valid):
         mask = eval_pred(struct, cols, pred_vals) & valid & (ek < k)
@@ -255,16 +387,15 @@ def make_query_fn(striped: StripedFamily, struct, value_col: str | None,
         return est_lib.grouped_moments(values, rates, mask, gcodes, n_groups)
 
     if mesh is None:
-        def fn(k, pred_vals):
+        def fn(k, pred_vals, cols, freq, entry_key, valid):
             mom = jax.vmap(lambda c, f, e, v: shard_fn(k, pred_vals, c, f, e, v)
-                           )(striped.columns, striped.freq,
-                             striped.entry_key, striped.valid)
+                           )(cols, freq, entry_key, valid)
             return jax.tree.map(lambda x: x.sum(axis=0), mom)
         return jax.jit(fn)
 
     pspec = P(data_axes)
 
-    def fn(k, pred_vals):
+    def fn(k, pred_vals, cols, freq, entry_key, valid):
         inner = _shard_map(
             lambda c, f, e, v: _merge_psum(
                 jax.tree.map(lambda x: x[0],
@@ -275,8 +406,7 @@ def make_query_fn(striped: StripedFamily, struct, value_col: str | None,
             in_specs=(pspec, pspec, pspec, pspec),
             out_specs=P(),
         )
-        return inner(striped.columns, striped.freq, striped.entry_key,
-                     striped.valid)
+        return inner(cols, freq, entry_key, valid)
     return jax.jit(fn)
 
 
@@ -284,19 +414,22 @@ def make_query_fn(striped: StripedFamily, struct, value_col: str | None,
 # Batched shared-scan execution (one family pass, Q same-template queries)
 # ---------------------------------------------------------------------------
 
-def make_batched_query_fn(striped: StripedFamily, struct,
+def make_batched_query_fn(struct,
                           value_col: str | None, group_col: str | None,
                           n_groups: int, mesh: Mesh | None = None,
                           data_axes: tuple[str, ...] = ("data",),
                           use_pallas: bool = False):
     """Compile ONE fused multi-query program per (family × template).
 
-    Returns jitted fn(ks, pred_consts) -> GroupedMoments with leading batch
-    axis: ks is f32[Q] (per-query resolution caps), pred_consts is f32[Q, A]
-    (per-query predicate constants in flat_atoms order). Every leaf of the
-    result is [Q, n_groups]. The family prefix streams from HBM once for the
-    whole batch; per-query work is VPU/MXU-only. On a mesh the per-shard
-    partials for ALL Q queries merge with a single psum.
+    Returns jitted fn(ks, pred_consts, cols, freq, entry_key, valid) ->
+    GroupedMoments with leading batch axis: ks is f32[Q] (per-query
+    resolution caps), pred_consts is f32[Q, A] (per-query predicate
+    constants in flat_atoms order). Every leaf of the result is
+    [Q, n_groups]. The family prefix streams from HBM once for the whole
+    batch; per-query work is VPU/MXU-only. On a mesh the per-shard partials
+    for ALL Q queries merge with a single psum. As with make_query_fn, the
+    striped block is a traced argument so appends that preserve the padded
+    shape class keep compiled programs valid.
     """
     atoms = flat_atoms(struct)
     ops_struct = tuple(tuple(op for _, op in conj) for conj in struct)
@@ -330,17 +463,16 @@ def make_batched_query_fn(striped: StripedFamily, struct,
         return jax.vmap(one)(ks, pred_consts)
 
     if mesh is None:
-        def fn(ks, pred_consts):
+        def fn(ks, pred_consts, cols, freq, entry_key, valid):
             mom = jax.vmap(lambda c, f, e, v: shard_fn(ks, pred_consts,
                                                        c, f, e, v)
-                           )(striped.columns, striped.freq,
-                             striped.entry_key, striped.valid)
+                           )(cols, freq, entry_key, valid)
             return jax.tree.map(lambda x: x.sum(axis=0), mom)
         return jax.jit(fn)
 
     pspec = P(data_axes)
 
-    def fn(ks, pred_consts):
+    def fn(ks, pred_consts, cols, freq, entry_key, valid):
         def per_shard(c, f, e, v):
             mom = jax.tree.map(
                 lambda x: x[0],
@@ -354,8 +486,7 @@ def make_batched_query_fn(striped: StripedFamily, struct,
         inner = _shard_map(per_shard, mesh=mesh,
                            in_specs=(pspec, pspec, pspec, pspec),
                            out_specs=P())
-        return inner(striped.columns, striped.freq, striped.entry_key,
-                     striped.valid)
+        return inner(cols, freq, entry_key, valid)
     return jax.jit(fn)
 
 
@@ -389,3 +520,27 @@ def grouped_quantile(values: jax.Array, weights: jax.Array, gcodes: jax.Array,
     qval = left_edge + frac * bin_w
     density = jnp.take_along_axis(hist, idx[:, None], 1)[:, 0] / (total[:, 0] * bin_w)
     return qval, density
+
+
+def make_quantile_fn(struct, value_col: str, group_col: str | None,
+                     n_groups: int):
+    """Jitted grouped-quantile pass over a STRIPED block (flattened).
+
+    Histogram results are order-invariant, so running over the padded
+    striped layout (masking padding/ghosts through zero weight) matches the
+    old sorted-family pass — while inheriting the striped shape class, so
+    appends that fit existing padding reuse the compiled program. Returns
+    fn(k, pred_vals, level, cols, freq, entry_key, valid) ->
+    (quantile_value[G], density[G])."""
+
+    def fn(k, pred_vals, level, cols, freq, entry_key, valid):
+        flat = {c: v.reshape(-1) for c, v in cols.items()}
+        fqf = freq.reshape(-1)
+        ekf = entry_key.reshape(-1)
+        mask = eval_pred(struct, flat, pred_vals) & valid.reshape(-1) \
+            & (ekf < k)
+        w = mask.astype(jnp.float32) / jnp.minimum(1.0, k / fqf)
+        g = (flat[group_col].astype(jnp.int32) if group_col
+             else jnp.zeros(ekf.shape, jnp.int32))
+        return grouped_quantile(flat[value_col], w, g, n_groups, level)
+    return jax.jit(fn)

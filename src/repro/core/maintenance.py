@@ -4,6 +4,20 @@ Periodically: (1) detect data/workload drift, (2) re-run the §3.2 optimizer
 with the Eq.-5 change budget r, (3) regenerate affected families with fresh
 randomness in a low-priority background task and atomically swap them in.
 
+Two ingestion modes (docs/MAINTENANCE.md):
+
+* `run_epoch(delta=...)` — the serving-compatible path: the epoch is an
+  APPEND of new rows. Families merge in place (engine.append_rows: exact HT
+  rates under the grown frequencies, compiled programs preserved), and only
+  when the delta drifts a family's stratum distribution past the threshold
+  does the epoch fall back to the §3.2 optimizer + fresh resample for the
+  drifted families.
+* `run_epoch(new_table=...)` — full replacement (the original batch path):
+  every derived cache is invalidated and families rebuild from scratch.
+
+Epoch randomness is threaded explicitly (base_seed + epoch number) — the
+shared EngineConfig.seed is never mutated.
+
 On a real cluster the regeneration runs as a background jit program on idle
 pod slices; here the scheduler is a thread so the mechanics (atomic swap,
 change budget, drift triggers) are fully testable.
@@ -46,55 +60,152 @@ class SampleMaintainer:
 
     def __init__(self, db: BlinkDB, table_name: str,
                  templates: Sequence[QueryTemplate],
-                 config: MaintenanceConfig | None = None):
+                 config: MaintenanceConfig | None = None,
+                 base_seed: int | None = None):
         self.db = db
         self.table_name = table_name
         self.templates = list(templates)
         self.config = config or MaintenanceConfig()
+        # Per-epoch resample seeds derive from base_seed + epoch — the shared
+        # EngineConfig.seed stays immutable (other engines/tables may read it).
+        self.base_seed = db.config.seed if base_seed is None else base_seed
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self.epochs = 0
 
     # -- drift detection -----------------------------------------------------
     def check_drift(self, new_table: table_lib.Table) -> dict[tuple[str, ...], float]:
-        """TV drift per existing family between old stats and the new data."""
+        """TV drift per existing family between old stats and the new data.
+
+        The new histogram is built in the family's STABLE stratum-id order
+        (map_codes_stable on fam.strata_keys, new combinations appended) —
+        a positional comparison against combined_codes' lexicographic
+        numbering would misalign once delta epochs have introduced strata,
+        reporting spurious drift / masking real drift. A replacement table
+        re-encodes its dictionaries from scratch, so its codes are first
+        translated by dictionary VALUE onto the engine table's codes (a new
+        table whose dictionary merely gained a value must not shift every
+        code after it).
+        """
         out = {}
+        old_tbl = self.db.tables.get(self.table_name)
         for phi, fam in self.db.families[self.table_name].items():
             if not phi:
                 continue
-            codes, _ = table_lib.combined_codes(new_table, phi)
-            nd = int(codes.max()) + 1 if len(codes) else 0
-            new_f = table_lib.stratum_frequencies(codes, nd)
+            if fam.strata_keys is not None:
+                mat = np.stack(
+                    [self._align_codes(new_table, old_tbl, c) for c in phi],
+                    axis=1)
+                codes, keys = table_lib.map_codes_stable(mat, fam.strata_keys)
+                new_f = table_lib.stratum_frequencies(codes, len(keys))
+            else:
+                codes, _ = table_lib.combined_codes(new_table, phi)
+                nd = int(codes.max()) + 1 if len(codes) else 0
+                new_f = table_lib.stratum_frequencies(codes, nd)
             out[phi] = distribution_drift(fam.stratum_freqs, new_f)
         return out
 
+    @staticmethod
+    def _align_codes(new_table: table_lib.Table,
+                     old_tbl: table_lib.Table | None, col: str) -> np.ndarray:
+        """Codes of new_table[col] re-expressed in old_tbl's dictionary
+        (values unseen by the old dictionary get fresh codes past its
+        cardinality, i.e. guaranteed-new strata)."""
+        codes = new_table.host_column(col).astype(np.int32)
+        if old_tbl is None or new_table is old_tbl:
+            return codes
+        old_vals = old_tbl.dictionaries[col]
+        lookup = {v: i for i, v in enumerate(old_vals.tolist())}
+        trans, _ = table_lib.get_or_assign_codes(
+            new_table.dictionaries[col].tolist(), lookup)
+        return trans[codes].astype(np.int32)
+
     # -- one maintenance epoch -------------------------------------------------
     def run_epoch(self, new_table: table_lib.Table | None = None,
-                  new_templates: Sequence[QueryTemplate] | None = None) -> dict:
-        """Apply new data/workload; resample (fresh seed) families whose drift
-        exceeds the threshold; re-run the optimizer under the change budget."""
+                  new_templates: Sequence[QueryTemplate] | None = None,
+                  delta=None, seed: int | None = None) -> dict:
+        """One maintenance epoch.
+
+        `delta` (host columns, append-only) takes the incremental path: merge
+        every family in place via BlinkDB.append_rows, measure drift on the
+        STABLE stratum histograms it reports, and only if some family drifted
+        past the threshold re-run the §3.2 optimizer (change budget) and
+        resample the drifted families with the fresh epoch seed. Low-drift
+        epochs therefore never recompile, rebuild, or resample anything —
+        maintenance becomes a serving-compatible operation.
+
+        `new_table` replaces the table wholesale (batch path): full
+        invalidation + optimizer re-run, as before.
+        """
+        if delta is not None and new_table is not None:
+            raise ValueError("pass either delta (append) or new_table "
+                             "(replacement), not both")
         if new_templates is not None:
             self.templates = list(new_templates)
+        self.epochs += 1
+        epoch_seed = (self.base_seed + self.epochs) if seed is None else seed
+
+        if delta is not None:
+            report = self.db.append_rows(self.table_name, delta,
+                                         seed=epoch_seed)
+            drift = {phi: distribution_drift(old, new)
+                     for phi, (old, new) in report.freqs.items() if phi}
+            stale = [phi for phi, d in drift.items()
+                     if d > self.config.drift_threshold]
+            sol = None
+            if stale or new_templates is not None:
+                # Fallback past the drift threshold: §3.2 re-optimization
+                # under the change budget + fresh resample of drifted
+                # families (offline-sampling staleness fix, §2.1).
+                sol = self.db.build_samples(
+                    self.table_name, self.templates,
+                    storage_budget_fraction=0.5,
+                    change_fraction=self.config.change_fraction,
+                    seed=epoch_seed)
+                for phi in stale:
+                    if phi in self.db.families[self.table_name]:
+                        self.db.add_family(self.table_name, phi,
+                                           seed=epoch_seed)
+            return {"drift": drift, "rebuilt": stale,
+                    "merged": report.merged, "restriped": report.restriped,
+                    "appended_rows": report.delta.n_rows,
+                    "objective": sol.objective if sol else None,
+                    "storage": sol.storage_used if sol else None}
+
         tbl = new_table if new_table is not None else self.db.tables[self.table_name]
         drift = self.check_drift(tbl) if new_table is not None else {}
+        dicts_changed = False
         if new_table is not None:
+            # A replacement table re-encodes its dictionaries from scratch;
+            # families that survive selection hold rows coded under the OLD
+            # dictionaries and would silently answer with wrong strata/groups
+            # unless every dictionary round-trips identically.
+            old_tbl = self.db.tables.get(self.table_name)
+            dicts_changed = old_tbl is not None and (
+                set(old_tbl.dictionaries) != set(new_table.dictionaries)
+                or any(not np.array_equal(old_tbl.dictionaries[c],
+                                          new_table.dictionaries[c])
+                       for c in old_tbl.dictionaries))
             # register_table invalidates every cache derived from the old
             # table's columns (striped views, compiled programs, ELP state).
             self.db.register_table(self.table_name, new_table)
 
         stale = [phi for phi, d in drift.items()
                  if d > self.config.drift_threshold]
-        self.epochs += 1
-        # Fresh randomness on resample: offline-sampling staleness fix (§2.1).
-        self.db.config.seed = self.db.config.seed + 1
         sol = self.db.build_samples(
             self.table_name, self.templates,
             storage_budget_fraction=0.5,
-            change_fraction=self.config.change_fraction)
-        # Force-regenerate drifted families that survived selection.
+            change_fraction=self.config.change_fraction,
+            seed=epoch_seed)
+        if dicts_changed:
+            # Rebuild EVERY surviving family: their rows are coded under the
+            # replaced dictionaries (encoding staleness is systematic
+            # wrongness, unlike the accepted §4.5 data staleness).
+            stale = sorted(self.db.families[self.table_name], key=len)
+        # Force-regenerate drifted (or re-encoded) surviving families.
         for phi in stale:
             if phi in self.db.families[self.table_name]:
-                self.db.add_family(self.table_name, phi)
+                self.db.add_family(self.table_name, phi, seed=epoch_seed)
         return {"drift": drift, "rebuilt": stale, "objective": sol.objective,
                 "storage": sol.storage_used}
 

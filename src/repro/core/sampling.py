@@ -46,14 +46,37 @@ class SampleFamily:
     table_rows: int                   # rows in the original table
     n_distinct: int                   # |D(φ)|
     stratum_freqs: np.ndarray         # F per distinct value (host, for Δ/stats)
+    # Incremental-maintenance state (docs/MAINTENANCE.md). `unit` is the raw
+    # per-row priority u — kept so a merge can recompute entry_key = u·F_new
+    # bit-identically to a from-scratch rebuild with the same units.
+    unit: jax.Array | None = None          # f32[n] per-row u ~ U[0,1)
+    strata_keys: np.ndarray | None = None  # [D, |φ|] per-stratum column codes
+    row_strata: np.ndarray | None = None   # int64[n] stable stratum id per row
+    entry_key_host: np.ndarray | None = None  # host mirror (hot-path prefixes)
+    # Host mirrors of the merge inputs: without them every append epoch would
+    # read the whole sample back device→host — O(sample), not O(delta).
+    columns_host: dict[str, np.ndarray] | None = None
+    unit_host: np.ndarray | None = None
+
+    def host_column(self, name: str) -> np.ndarray:
+        if self.columns_host is not None and name in self.columns_host:
+            return self.columns_host[name]
+        return np.asarray(self.columns[name])
 
     @property
     def k1(self) -> float:
         return self.ks[0]
 
     def prefix_for_k(self, k: float) -> int:
-        """Rows to scan for resolution cap k (searchsorted on entry_key)."""
-        return int(np.searchsorted(np.asarray(self.entry_key), k, side="left"))
+        """Rows to scan for resolution cap k. Searches the HOST mirror of
+        entry_key — this runs on the hot path of every query()/query_batch()
+        answer, and a per-call device→host transfer of the whole key column
+        would dwarf the scan it accounts for."""
+        ek = self.entry_key_host
+        if ek is None:
+            ek = np.asarray(self.entry_key)
+            self.entry_key_host = ek
+        return int(np.searchsorted(ek, k, side="left"))
 
     def rate(self, k: float) -> jax.Array:
         """Per-row inclusion probability at resolution k (HT weights = 1/rate)."""
@@ -62,6 +85,24 @@ class SampleFamily:
     def storage_bytes(self, row_bytes: int) -> int:
         # +8: the f32 freq and entry_key bookkeeping columns.
         return self.n_rows * (row_bytes + 8)
+
+
+@dataclasses.dataclass
+class DeltaBlock:
+    """The rows a merge ADDED to a family, in delta order, plus the updated
+    per-stratum frequency table — exactly the payload the executor's
+    incremental restripe ships to the device (one small device_put)."""
+    columns: dict[str, np.ndarray]    # host, encoded; kept delta rows only
+    unit: np.ndarray                  # f32[d_kept]
+    strata: np.ndarray                # int32[d_kept] stable stratum ids
+    freq: np.ndarray                  # f32[d_kept] F_new per row
+    entry_key: np.ndarray             # f32[d_kept] = unit · F_new
+    freq_table: np.ndarray            # f32[D_new] updated per-stratum F
+    n_dropped_old: int                # old rows pushed past K_1 by the rescale
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.unit.size)
 
 
 def resolution_caps(k1: float, c: float, m: int) -> tuple[float, ...]:
@@ -74,46 +115,88 @@ def expected_sample_rows(stratum_freqs: np.ndarray, k: float) -> float:
     return float(np.minimum(stratum_freqs, k).sum())
 
 
+def base_units(n: int, seed: int, *, uniform: bool = False) -> np.ndarray:
+    """Per-row random priorities u ~ U[1e-7, 1) for a table's initial rows.
+    The uniform family salts the seed so R(p) and SFam(φ) draw independently
+    (matches the original build_family / build_uniform_family streams)."""
+    key = jax.random.PRNGKey((seed ^ 0x5EED) if uniform else seed)
+    return np.asarray(jax.random.uniform(key, (n,), dtype=jnp.float32,
+                                         minval=1e-7, maxval=1.0))
+
+
+def delta_units(n: int, seed: int, epoch: int, *,
+                uniform: bool = False) -> np.ndarray:
+    """Per-row priorities for the rows of append epoch `epoch` (1-based).
+    Deterministic in (seed, epoch), independent across epochs — so a
+    from-scratch rebuild fed base_units ++ delta_units(…,1) ++ … is a
+    bit-exact oracle for the incremental merge path. Host-side numpy RNG:
+    the ingest hot path must not pay a device-program compile per delta
+    shape (base_units stays on the jax stream for seed compatibility)."""
+    rng = np.random.default_rng(np.random.SeedSequence(
+        [seed & 0xFFFFFFFFFFFFFFFF, epoch, 1 if uniform else 0]))
+    return np.maximum(rng.random(n, dtype=np.float32), np.float32(1e-7))
+
+
+def _assemble_family(phi: tuple[str, ...], ks: tuple[float, ...],
+                     host_cols: Mapping[str, np.ndarray], units: np.ndarray,
+                     codes: np.ndarray, freqs: np.ndarray,
+                     key_matrix: np.ndarray, table_rows: int) -> SampleFamily:
+    """Materialize a family from per-row (unit, stratum) assignments: keep
+    entry_key = u·F < K_1, sort ascending, cut prefixes. Shared by the
+    from-scratch builders and (via identical float math) the merge oracle."""
+    k1 = ks[0]
+    row_freq = freqs.astype(np.float32)[codes] if len(codes) \
+        else np.zeros(0, np.float32)
+    entry_key = units.astype(np.float32) * row_freq
+    keep = entry_key < k1
+    order = np.argsort(entry_key[keep], kind="stable")
+    idx = np.nonzero(keep)[0][order]
+    ek = entry_key[idx]
+    prefixes = tuple(int(np.searchsorted(ek, k, side="left")) for k in ks)
+    cols_host = {name: np.asarray(arr)[idx] for name, arr in host_cols.items()}
+    unit_host = units.astype(np.float32)[idx]
+    return SampleFamily(
+        phi=phi, ks=ks,
+        columns={name: jnp.asarray(a) for name, a in cols_host.items()},
+        freq=jnp.asarray(row_freq[idx]),
+        entry_key=jnp.asarray(ek),
+        prefix_sizes=prefixes, n_rows=int(idx.size), table_rows=table_rows,
+        n_distinct=len(freqs), stratum_freqs=freqs,
+        unit=jnp.asarray(unit_host),
+        strata_keys=key_matrix, row_strata=codes[idx],
+        entry_key_host=ek, columns_host=cols_host, unit_host=unit_host)
+
+
 def build_family(tbl: table_lib.Table, phi: Sequence[str], k1: float,
                  c: float = 2.0, m: int | None = None, *,
-                 seed: int = 0) -> SampleFamily:
-    """Construct SFam(φ) from a table (offline sample creation, §2.2.1)."""
+                 seed: int = 0, units: np.ndarray | None = None) -> SampleFamily:
+    """Construct SFam(φ) from a table (offline sample creation, §2.2.1).
+
+    `units` overrides the seeded per-row priorities — the host ORACLE for the
+    incremental merge path: rebuilding with the concatenated unit segments of
+    every append must reproduce the merged family exactly.
+    """
     phi = tuple(sorted(phi))
     for col in phi:
         if tbl.schema.column(col).kind is not ColumnKind.CATEGORICAL:
             raise ValueError(f"stratification column {col!r} must be categorical")
-    codes, _ = table_lib.combined_codes(tbl, phi)
+    codes, key_matrix = table_lib.combined_codes(tbl, phi)
     n_distinct = int(codes.max()) + 1 if len(codes) else 0
     freqs = table_lib.stratum_frequencies(codes, n_distinct)
 
     if m is None:
         m = max(1, int(math.floor(math.log(max(k1, 2.0), c))))
     ks = resolution_caps(k1, c, m)
-
-    key = jax.random.PRNGKey(seed)
-    u = jax.random.uniform(key, (tbl.n_rows,), dtype=jnp.float32,
-                           minval=1e-7, maxval=1.0)
-    row_freq = jnp.asarray(freqs, dtype=jnp.float32)[jnp.asarray(codes)]
-    entry_key = u * row_freq
-
-    keep = np.asarray(entry_key) < k1
-    order = np.argsort(np.asarray(entry_key)[keep], kind="stable")
-    idx = np.nonzero(keep)[0][order]
-
-    cols = {name: jnp.asarray(np.asarray(arr)[idx]) for name, arr in tbl.columns.items()}
-    fam_freq = jnp.asarray(np.asarray(row_freq)[idx])
-    fam_entry = jnp.asarray(np.asarray(entry_key)[idx])
-    ek = np.asarray(fam_entry)
-    prefixes = tuple(int(np.searchsorted(ek, k, side="left")) for k in ks)
-
-    return SampleFamily(
-        phi=phi, ks=ks, columns=cols, freq=fam_freq, entry_key=fam_entry,
-        prefix_sizes=prefixes, n_rows=int(idx.size), table_rows=tbl.n_rows,
-        n_distinct=n_distinct, stratum_freqs=freqs)
+    if units is None:
+        units = base_units(tbl.n_rows, seed)
+    host_cols = {c: tbl.host_column(c) for c in tbl.columns}
+    return _assemble_family(phi, ks, host_cols, units, codes, freqs,
+                            key_matrix[:n_distinct], tbl.n_rows)
 
 
 def build_uniform_family(tbl: table_lib.Table, fraction: float, c: float = 2.0,
-                         m: int | None = None, *, seed: int = 0) -> SampleFamily:
+                         m: int | None = None, *, seed: int = 0,
+                         units: np.ndarray | None = None) -> SampleFamily:
     """Uniform family R(p): stratification on φ=∅ — one stratum of size N,
     K_1 = p·N. rate = K/N = sampling fraction; entry_key = u·N."""
     n = tbl.n_rows
@@ -121,22 +204,107 @@ def build_uniform_family(tbl: table_lib.Table, fraction: float, c: float = 2.0,
     if m is None:
         m = max(1, int(math.floor(math.log(max(k1, 2.0), c))))
     ks = resolution_caps(k1, c, m)
-    key = jax.random.PRNGKey(seed ^ 0x5EED)
-    u = np.asarray(jax.random.uniform(key, (n,), dtype=jnp.float32,
-                                      minval=1e-7, maxval=1.0))
-    entry_key = u * n
-    keep = entry_key < k1
-    order = np.argsort(entry_key[keep], kind="stable")
-    idx = np.nonzero(keep)[0][order]
-    cols = {name: jnp.asarray(np.asarray(arr)[idx]) for name, arr in tbl.columns.items()}
-    ek = entry_key[idx]
-    prefixes = tuple(int(np.searchsorted(ek, k, side="left")) for k in ks)
-    return SampleFamily(
-        phi=(), ks=ks, columns=cols,
-        freq=jnp.full((idx.size,), float(n), dtype=jnp.float32),
-        entry_key=jnp.asarray(ek.astype(np.float32)),
-        prefix_sizes=prefixes, n_rows=int(idx.size), table_rows=n,
-        n_distinct=1, stratum_freqs=np.array([n], dtype=np.int64))
+    if units is None:
+        units = base_units(n, seed, uniform=True)
+    host_cols = {c: tbl.host_column(c) for c in tbl.columns}
+    return _assemble_family((), ks, host_cols, units,
+                            np.zeros(n, dtype=np.int64),
+                            np.array([n], dtype=np.int64),
+                            np.zeros((1, 0), dtype=np.int32), n)
+
+
+def merge_family(fam: SampleFamily, delta_columns: Mapping[str, np.ndarray],
+                 units: np.ndarray, *, new_k1: float | None = None,
+                 c: float = 2.0) -> tuple[SampleFamily, DeltaBlock]:
+    """Merge an append-only delta into a materialized family (§3.2.3/§4.5).
+
+    Incremental counterpart of build_family: the delta's rows are keyed with
+    the SAME entry_key = u·F(x) scheme under the UPDATED per-stratum
+    frequencies, and existing rows are re-keyed u·F_new from their stored
+    unit — so Horvitz–Thompson rates min(1, K/F_new) stay exact and the
+    nested-prefix invariant is preserved by construction. Because appends
+    only grow F, re-keying only ever pushes rows OUT of the K_1 prefix,
+    never in: no access to unsampled base rows is needed. The result is
+    bit-identical to `build_family(appended_table, units=all_units)`.
+
+    `new_k1` resizes the largest cap (the uniform family keeps K_1 = p·N as
+    N grows); stratified families keep their configured cap (pass None).
+    Raises KeyError if the family carries columns the delta lacks (e.g.
+    gathered join attributes — the engine strips those before merging).
+    """
+    phi = fam.phi
+    missing = [name for name in fam.columns if name not in delta_columns]
+    if missing:
+        raise KeyError(
+            f"delta lacks columns {missing} present on family {phi!r} — "
+            "strip gathered join columns before merging")
+    if phi:
+        mat = np.stack([np.asarray(delta_columns[col], dtype=np.int32)
+                        for col in phi], axis=1)
+        dcodes, key_matrix = table_lib.map_codes_stable(mat, fam.strata_keys)
+        new_freqs = table_lib.extend_frequencies(fam.stratum_freqs, dcodes,
+                                                 len(key_matrix))
+        ks = fam.ks
+    else:
+        d = len(next(iter(delta_columns.values())))
+        dcodes = np.zeros(d, dtype=np.int64)
+        key_matrix = fam.strata_keys
+        new_freqs = np.array([fam.table_rows + d], dtype=np.int64)
+        ks = (resolution_caps(new_k1, c, len(fam.ks))
+              if new_k1 is not None else fam.ks)
+    k1 = ks[0]
+    freqs_f32 = new_freqs.astype(np.float32)
+
+    # Re-key existing sample rows under the grown frequencies (host
+    # mirrors: no device read-back on the ingest path).
+    old_units = (fam.unit_host if fam.unit_host is not None
+                 else np.asarray(fam.unit))
+    old_strata = fam.row_strata
+    old_freq = freqs_f32[old_strata]
+    old_ek = old_units * old_freq
+    keep_old = old_ek < k1
+
+    # Key and filter the delta's rows.
+    units = np.asarray(units, dtype=np.float32)
+    d_freq = freqs_f32[dcodes]
+    d_ek = units * d_freq
+    keep_d = d_ek < k1
+
+    block = DeltaBlock(
+        columns={name: np.asarray(delta_columns[name])[keep_d]
+                 for name in fam.columns},
+        unit=units[keep_d], strata=dcodes[keep_d].astype(np.int32),
+        freq=d_freq[keep_d], entry_key=d_ek[keep_d],
+        freq_table=freqs_f32, n_dropped_old=int((~keep_old).sum()))
+
+    ek_m = np.concatenate([old_ek[keep_old], block.entry_key])
+    order = np.argsort(ek_m, kind="stable")
+    ek_sorted = ek_m[order]
+    prefixes = tuple(int(np.searchsorted(ek_sorted, k, side="left"))
+                     for k in ks)
+
+    def merge_col(old_arr, new_arr):
+        old_h = np.asarray(old_arr)[keep_old]
+        return np.concatenate([old_h, np.asarray(new_arr,
+                                                 dtype=old_h.dtype)])[order]
+
+    cols_host = {name: merge_col(fam.host_column(name), block.columns[name])
+                 for name in fam.columns}
+    unit_host = merge_col(old_units, block.unit)
+    merged = SampleFamily(
+        phi=phi, ks=ks,
+        columns={name: jnp.asarray(a) for name, a in cols_host.items()},
+        freq=jnp.asarray(merge_col(old_freq, block.freq)),
+        entry_key=jnp.asarray(ek_sorted),
+        prefix_sizes=prefixes, n_rows=int(ek_sorted.size),
+        table_rows=fam.table_rows + len(dcodes),
+        n_distinct=len(new_freqs), stratum_freqs=new_freqs,
+        unit=jnp.asarray(unit_host),
+        strata_keys=key_matrix,
+        row_strata=merge_col(old_strata, block.strata.astype(np.int64)),
+        entry_key_host=ek_sorted, columns_host=cols_host,
+        unit_host=unit_host)
+    return merged, block
 
 
 def stratified_exact_k(tbl: table_lib.Table, phi: Sequence[str], k: int, *,

@@ -13,7 +13,7 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
-from repro.core.types import Conjunction, Predicate, Query
+from repro.core.types import AggOp, Conjunction, Predicate, Query
 
 
 @dataclasses.dataclass
@@ -51,9 +51,20 @@ def select_family(
 
 def rewrite_disjuncts(q: Query) -> list[Query]:
     """§4.1.2: a disjunctive query becomes a union of conjunctive sub-queries,
-    each inheriting the bound (the engine combines their answers)."""
+    each inheriting the bound (the engine combines their answers).
+
+    Only additive aggregates (COUNT/SUM) can be recombined by summing
+    per-disjunct estimates; AVG and QUANTILE are rejected up front — the
+    previous behaviour silently summed per-disjunct averages/quantiles,
+    which is wrong whenever disjunct weights differ.
+    """
     if len(q.predicate.disjuncts) <= 1:
         return [q]
+    if q.agg not in (AggOp.COUNT, AggOp.SUM):
+        raise ValueError(
+            f"disjunctive (OR) predicates only support additive aggregates "
+            f"(COUNT/SUM); {q.agg} over a union of disjuncts is not the "
+            f"aggregate over the union — rewrite the query per disjunct")
     return [
         dataclasses.replace(q, predicate=Predicate((conj,)))
         for conj in q.predicate.disjuncts

@@ -13,7 +13,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import ColumnKind, ColumnSchema, TableSchema
+from repro.core.types import ColumnKind, ColumnSchema, TableDelta, TableSchema
+
+
+class _LazyDeviceColumns(dict):
+    """Device-column dict whose appended entries re-upload lazily.
+
+    `Table.append` only touches the host mirrors and marks the column stale;
+    the device copy refreshes on first ACCESS (item/values/items). The
+    sampled serving path never reads full base-table columns — only the
+    exact path and join gathers do — so steady-state ingest costs O(delta)
+    in host→device traffic instead of re-uploading the table each epoch.
+    """
+
+    def __init__(self, mapping, owner: "Table"):
+        super().__init__(mapping)
+        self._owner = owner
+
+    def _refresh(self, key) -> None:
+        owner = self._owner
+        if key in owner._stale_device:
+            super().__setitem__(key, jnp.asarray(owner.columns_host[key]))
+            owner._stale_device.discard(key)
+
+    def __getitem__(self, key):
+        self._refresh(key)
+        return super().__getitem__(key)
+
+    def items(self):
+        for k in list(super().keys()):
+            self._refresh(k)
+        return super().items()
+
+    def values(self):
+        for k in list(super().keys()):
+            self._refresh(k)
+        return super().values()
 
 
 @dataclasses.dataclass
@@ -24,6 +59,22 @@ class Table:
     # column name -> numpy array of dictionary values (categoricals only)
     dictionaries: dict[str, np.ndarray]
     n_rows: int
+    # host mirrors of the encoded schema columns — the append/merge path is
+    # host-side, and without a mirror every epoch would read the full device
+    # columns back (O(table), not O(delta), in host↔device traffic on
+    # accelerator backends).
+    columns_host: dict[str, np.ndarray] | None = None
+    # columns whose device copy lags the host mirror (lazy re-upload)
+    _stale_device: set = dataclasses.field(default_factory=set, repr=False)
+
+    def __post_init__(self):
+        if not isinstance(self.columns, _LazyDeviceColumns):
+            self.columns = _LazyDeviceColumns(self.columns, self)
+
+    def host_column(self, name: str) -> np.ndarray:
+        if self.columns_host is not None and name in self.columns_host:
+            return self.columns_host[name]
+        return np.asarray(self.columns[name])
 
     def column_codes(self, name: str) -> jax.Array:
         return self.columns[name]
@@ -49,6 +100,102 @@ class Table:
     def nbytes(self) -> int:
         return self.row_bytes() * self.n_rows
 
+    def append(self, raw: Mapping[str, np.ndarray]) -> TableDelta:
+        """Append-only ingestion: encode a delta of host rows against the
+        existing dictionaries and concatenate onto the device columns.
+
+        Incremental by construction — existing rows are never recoded:
+        categorical values already in a dictionary keep their code, unseen
+        values get fresh codes past the current cardinality (the dictionary
+        is extended, not rebuilt). Returns the TableDelta the sampling layer
+        needs to merge materialized families (docs/MAINTENANCE.md).
+        """
+        schema_cols = set(self.schema.column_names)
+        got = set(raw.keys())
+        if got != schema_cols:
+            raise ValueError(
+                f"append to {self.schema.name!r}: delta columns {sorted(got)} "
+                f"!= schema columns {sorted(schema_cols)}")
+        # Validate AND encode the whole delta before mutating anything — a
+        # rejection (ragged lengths, a measure that won't cast to f32) must
+        # not leave phantom dictionary entries or inflated cardinality.
+        n_delta = None
+        encoded: dict[str, np.ndarray] = {}
+        new_dict_values: dict[str, np.ndarray] = {}
+        for cname in self.schema.column_names:
+            values = np.asarray(raw[cname])
+            if n_delta is None:
+                n_delta = len(values)
+            elif len(values) != n_delta:
+                raise ValueError(
+                    f"column {cname}: length {len(values)} != {n_delta}")
+            if self.schema.column(cname).kind is ColumnKind.CATEGORICAL:
+                encoded[cname], new_dict_values[cname] = _encode_against(
+                    values, self.dictionaries[cname])
+            else:
+                encoded[cname] = values.astype(np.float32)
+        # ---- commit point: nothing below raises ----
+        # Gathered join attributes ("dim.col") cannot ride a schema-only
+        # delta; leaving them at the old length would corrupt the exact/join
+        # paths. Strip here (the engine lazily regathers on next use).
+        for c in [c for c in self.columns if "." in c]:
+            del self.columns[c]
+            if self.columns_host is not None:
+                self.columns_host.pop(c, None)
+        for cname, new_vals in new_dict_values.items():
+            if new_vals.size:
+                self.dictionaries[cname] = np.concatenate(
+                    [self.dictionaries[cname], new_vals])
+                self.schema = self.schema.with_cardinality(
+                    cname, len(self.dictionaries[cname]))
+        delta = TableDelta(self.schema.name, self.n_rows, int(n_delta or 0),
+                           encoded, new_dict_values)
+        if self.columns_host is None:
+            self.columns_host = {}
+        for cname, arr in encoded.items():
+            # Host-side concat on the mirror only; the device copy refreshes
+            # lazily on access (an eager per-epoch re-upload — or an
+            # on-device concat, which compiles a new XLA program per length —
+            # would make ingest O(table) again).
+            self.columns_host[cname] = np.concatenate(
+                [self.host_column(cname), arr])
+            self._stale_device.add(cname)
+        self.n_rows += delta.n_rows
+        return delta
+
+
+def get_or_assign_codes(keys: list, lookup: dict) -> tuple[np.ndarray, list]:
+    """Shared get-or-assign-next-code kernel for every incremental encoding
+    path (dictionary extension, stable stratum mapping, cross-dictionary
+    code alignment): keys already in `lookup` keep their code, unseen keys
+    get fresh codes past len(lookup) in first-appearance order. Returns
+    (int64 codes per key, the new keys)."""
+    out = np.empty(len(keys), dtype=np.int64)
+    new_keys = []
+    next_code = len(lookup)
+    for j, k in enumerate(keys):
+        code = lookup.get(k)
+        if code is None:
+            code = next_code
+            next_code += 1
+            lookup[k] = code
+            new_keys.append(k)
+        out[j] = code
+    return out, new_keys
+
+
+def _encode_against(values: np.ndarray, dictionary: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Encode raw categorical values against an existing dictionary.
+    Returns (int32 codes, new values in first-appearance-of-np.unique order).
+    The dictionary is NOT assumed sorted (appends break global sort)."""
+    uniq, inverse = np.unique(values, return_inverse=True)
+    lookup = {v: i for i, v in enumerate(dictionary.tolist())}
+    uniq_codes, new_vals = get_or_assign_codes(uniq.tolist(), lookup)
+    new_arr = (np.asarray(new_vals, dtype=dictionary.dtype)
+               if new_vals else np.empty(0, dtype=dictionary.dtype))
+    return uniq_codes[inverse].astype(np.int32), new_arr
+
 
 def from_columns(name: str, raw: Mapping[str, np.ndarray],
                  categorical: Sequence[str] | None = None) -> Table:
@@ -56,7 +203,7 @@ def from_columns(name: str, raw: Mapping[str, np.ndarray],
     `categorical`) are dictionary-encoded; the rest become float32 measures."""
     categorical = set(categorical or ())
     n_rows = None
-    schemas, cols, dicts = [], {}, {}
+    schemas, cols, dicts, hosts = [], {}, {}, {}
     for cname, values in raw.items():
         values = np.asarray(values)
         if n_rows is None:
@@ -67,12 +214,15 @@ def from_columns(name: str, raw: Mapping[str, np.ndarray],
         if is_cat:
             uniq, codes = np.unique(values, return_inverse=True)
             schemas.append(ColumnSchema(cname, ColumnKind.CATEGORICAL, len(uniq)))
-            cols[cname] = jnp.asarray(codes.astype(np.int32))
+            hosts[cname] = codes.astype(np.int32)
+            cols[cname] = jnp.asarray(hosts[cname])
             dicts[cname] = uniq
         else:
             schemas.append(ColumnSchema(cname, ColumnKind.NUMERIC))
-            cols[cname] = jnp.asarray(values.astype(np.float32))
-    return Table(TableSchema(name, tuple(schemas)), cols, dicts, int(n_rows or 0))
+            hosts[cname] = values.astype(np.float32)
+            cols[cname] = jnp.asarray(hosts[cname])
+    return Table(TableSchema(name, tuple(schemas)), cols, dicts,
+                 int(n_rows or 0), columns_host=hosts)
 
 
 def combined_codes(table: Table, phi: Sequence[str]) -> tuple[np.ndarray, np.ndarray]:
@@ -87,7 +237,7 @@ def combined_codes(table: Table, phi: Sequence[str]) -> tuple[np.ndarray, np.nda
     if not phi:
         n = table.n_rows
         return np.zeros(n, dtype=np.int64), np.zeros((1, 0), dtype=np.int32)
-    mats = np.stack([np.asarray(table.columns[c]) for c in phi], axis=1)
+    mats = np.stack([table.host_column(c) for c in phi], axis=1)
     uniq, inverse = np.unique(mats, axis=0, return_inverse=True)
     return inverse.astype(np.int64), uniq.astype(np.int32)
 
@@ -95,3 +245,39 @@ def combined_codes(table: Table, phi: Sequence[str]) -> tuple[np.ndarray, np.nda
 def stratum_frequencies(codes: np.ndarray, n_distinct: int) -> np.ndarray:
     """F(φ, T, x): per-stratum row counts."""
     return np.bincount(codes, minlength=n_distinct).astype(np.int64)
+
+
+def map_codes_stable(mat: np.ndarray, key_matrix: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Map delta rows to STABLE stratum ids given an existing key matrix.
+
+    `combined_codes` numbers strata by np.unique's lexicographic order, which
+    renumbers everything when new value-combinations appear — useless for
+    incremental maintenance. This maps each row of `mat` [d, w] (per-column
+    dictionary codes on φ) through `key_matrix` [D, w] (row i = the codes of
+    stratum i): known combinations keep their id, unseen ones get fresh ids
+    D, D+1, ... Returns (int64 codes[d], extended key matrix).
+    """
+    w = key_matrix.shape[1]
+    if w == 0:  # φ = ∅: single stratum
+        return np.zeros(len(mat), dtype=np.int64), key_matrix
+    uniq, inverse = np.unique(mat, axis=0, return_inverse=True)
+    lookup = {tuple(r): i for i, r in enumerate(key_matrix.tolist())}
+    ids, new_rows = get_or_assign_codes([tuple(r) for r in uniq.tolist()],
+                                        lookup)
+    if new_rows:
+        key_matrix = np.concatenate(
+            [key_matrix, np.asarray(new_rows, dtype=np.int32).reshape(-1, w)])
+    return ids[inverse].astype(np.int64), key_matrix
+
+
+def extend_frequencies(old_freqs: np.ndarray, delta_codes: np.ndarray,
+                       n_distinct: int) -> np.ndarray:
+    """Incremental F update: old per-stratum counts (padded with zeros for
+    strata first seen in the delta) plus the delta's histogram. Append-only,
+    so frequencies are monotone non-decreasing — the invariant the merge
+    path's entry-key rescaling relies on (rows only ever LEAVE a prefix)."""
+    out = np.zeros(n_distinct, dtype=np.int64)
+    out[: len(old_freqs)] = old_freqs
+    out += np.bincount(delta_codes, minlength=n_distinct).astype(np.int64)
+    return out

@@ -47,6 +47,34 @@ class TableSchema:
     def column_names(self) -> tuple[str, ...]:
         return tuple(c.name for c in self.columns)
 
+    def with_cardinality(self, name: str, cardinality: int) -> "TableSchema":
+        """Schema after a dictionary extension (append-only ingestion): the
+        named categorical column's cardinality grows, nothing else moves."""
+        cols = tuple(
+            dataclasses.replace(c, cardinality=cardinality)
+            if c.name == name else c
+            for c in self.columns)
+        return dataclasses.replace(self, columns=cols)
+
+
+@dataclasses.dataclass
+class TableDelta:
+    """One append's worth of ingested rows, already dictionary-encoded.
+
+    The delta protocol (docs/MAINTENANCE.md): `Table.append` encodes the raw
+    host columns against the table's dictionaries — extending them in place
+    for unseen categorical values, never recoding existing rows — and returns
+    this record so the sampling/executor layers can merge the delta into
+    materialized sample families without touching pre-existing data.
+    """
+    table: str
+    start_row: int                       # first appended row's index
+    n_rows: int                          # rows in this delta
+    # column name -> encoded HOST array (int32 codes / float32 measures)
+    columns: dict[str, np.ndarray]
+    # categorical column -> dictionary values first seen in this delta
+    new_dict_values: dict[str, np.ndarray]
+
 
 class CmpOp(enum.Enum):
     EQ = "=="

@@ -96,15 +96,16 @@ def test_make_batched_query_fn_matches_sequential(use_pallas):
     striped = exec_lib.stripe_family(fam, 1)
     struct = ((("City", CmpOp.EQ),),)
     n_groups = tbl.cardinality("OS")
-    bfn = exec_lib.make_batched_query_fn(striped, struct, "SessionTime", "OS",
+    bfn = exec_lib.make_batched_query_fn(struct, "SessionTime", "OS",
                                          n_groups, use_pallas=use_pallas)
-    sfn = exec_lib.make_query_fn(striped, struct, "SessionTime", "OS",
+    sfn = exec_lib.make_query_fn(struct, "SessionTime", "OS",
                                  n_groups, use_pallas=use_pallas)
+    args = (striped.columns, striped.freq, striped.entry_key, striped.valid)
     ks = jnp.asarray([400.0, 200.0, 100.0], jnp.float32)
     consts = jnp.asarray([[0.0], [1.0], [2.0]], jnp.float32)
-    mom = bfn(ks, consts)
+    mom = bfn(ks, consts, *args)
     for i in range(3):
-        want = sfn(ks[i], ((float(consts[i, 0]),),))
+        want = sfn(ks[i], ((float(consts[i, 0]),),), *args)
         for a, b in zip(jax.tree.leaves(mom), jax.tree.leaves(want)):
             np.testing.assert_allclose(np.asarray(a[i]), np.asarray(b),
                                        rtol=1e-5, atol=1e-3)

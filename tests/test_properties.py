@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) on the system's statistical invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # optional dep: skip (not error) without it
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax.numpy as jnp
 
