@@ -31,6 +31,7 @@ from repro.data import synth
 from benchmarks import common
 
 DELTA_FRACS = (0.01, 0.05, 0.20)
+DELETE_FRACS = (0.05, 0.20)
 
 
 def _setup(n_rows: int):
@@ -128,17 +129,94 @@ def run(n_rows: int = 200_000, delta_fracs=DELTA_FRACS,
     return rows
 
 
+def run_mutation(n_rows: int = 200_000, delete_fracs=DELETE_FRACS,
+                 json_path: str | None = None) -> list[dict]:
+    """Delete/compact phase: time a tombstone epoch that deletes ~frac of the
+    table (host tombstones + per-family ghosting + the device bitmask
+    scatter), the first query after it (compiled programs must survive), a
+    ghost-reclaiming compaction, and the query after THAT — against the
+    pre-mutation alternative of a full replacement rebuild. Emits
+    BENCH_mutation.json."""
+    rows = []
+    for frac in delete_fracs:
+        db, maint, q = _setup(n_rows)
+        tbl = db.tables["sessions"]
+        # delete a slab of days covering ~frac of the rows
+        days = sorted(np.unique(tbl.host_column("dt")))
+        n_days = max(1, int(round(frac * len(days))))
+        pred = Predicate(tuple(
+            Predicate.where(Atom("dt", CmpOp.EQ, int(d))).disjuncts[0]
+            for d in days[:n_days]))
+        report, t_delete = _timed(lambda: db.delete_rows("sessions", pred))
+        _, t_q_del = _timed(lambda: db.query(q))
+        fracs = db.ghost_fractions("sessions")
+        # The engine policy: compact only families past the threshold (low
+        # here so the smallest delete fraction still exercises the path).
+        compact_threshold = 0.02
+        compacted, t_compact = _timed(
+            lambda: [phi for phi, f in fracs.items()
+                     if f > compact_threshold
+                     and db.compact_family("sessions", phi)])
+        _, t_q_comp = _timed(lambda: db.query(q))
+
+        # pre-mutation alternative: rebuild the table without the dead rows
+        db_full, maint_full, qf = _setup(n_rows)
+        keep = ~np.isin(db_full.tables["sessions"].host_column("dt"),
+                        np.asarray(days[:n_days]))
+        base_raw = synth.sessions_table(n_rows, seed=common.SEED)
+        survivor = table_lib.from_columns(
+            "sessions", {k: v[keep] for k, v in base_raw.items()})
+        _, t_full = _timed(lambda: maint_full.run_epoch(new_table=survivor))
+
+        exact = db.exact_query(q).groups[0].estimate
+        got = db.query(q).groups[0].estimate
+        rel_err = abs(got - exact) / max(exact, 1.0)
+        speedup = t_full / t_delete
+        rows.append({
+            "name": f"mutation_delete{int(frac * 100)}pct",
+            "us_per_call": t_delete * 1e6,
+            "derived": (f"epoch_delete={t_delete * 1e3:.1f}ms "
+                        f"epoch_rebuild={t_full * 1e3:.1f}ms "
+                        f"speedup={speedup:.1f}x "
+                        f"q_after_delete={t_q_del * 1e3:.1f}ms "
+                        f"compact={t_compact * 1e3:.1f}ms "
+                        f"q_after_compact={t_q_comp * 1e3:.1f}ms "
+                        f"rel_err={rel_err:.1e}"),
+            "delete_fraction": frac,
+            "deleted_rows": int(report.mutation.n_tombstoned),
+            "epoch_delete_s": t_delete,
+            "epoch_full_rebuild_s": t_full,
+            "speedup": speedup,
+            "query_after_delete_s": t_q_del,
+            "compact_s": t_compact,
+            "query_after_compact_s": t_q_comp,
+            "ghost_fraction_before_compact": max(fracs.values(), default=0.0),
+            "compacted": [list(p) for p in compacted],
+            "rel_err_vs_exact": rel_err,
+            "n_rows": n_rows,
+        })
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="BENCH_ingest.json")
+    ap.add_argument("--json-mutation", default="BENCH_mutation.json")
     ap.add_argument("--n-rows", type=int, default=200_000)
     ap.add_argument("--quick", action="store_true",
                     help="small data + one delta size (CI smoke)")
     args = ap.parse_args()
     if args.quick:
         rows = run(n_rows=40_000, delta_fracs=(0.05,), json_path=args.json)
+        rows += run_mutation(n_rows=40_000, delete_fracs=(0.20,),
+                             json_path=args.json_mutation)
     else:
         rows = run(n_rows=args.n_rows, json_path=args.json)
+        rows += run_mutation(n_rows=args.n_rows,
+                             json_path=args.json_mutation)
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")

@@ -56,7 +56,7 @@ _MAX_SCAN_BATCH = 64
 class AppendReport:
     """What one BlinkDB.append_rows ingested and what it invalidated."""
     delta: table_lib.TableDelta
-    # family -> (stratum freqs before, after) with STABLE stratum ids —
+    # family -> (LIVE stratum freqs before, after) with STABLE stratum ids —
     # aligned arrays, so maintenance can compute drift on the delta directly.
     freqs: dict[tuple[str, ...], tuple[np.ndarray, np.ndarray]]
     restriped: list[tuple[str, ...]]   # families whose block outgrew padding
@@ -66,6 +66,22 @@ class AppendReport:
     def merged(self) -> list[tuple[str, ...]]:
         """Families merged in place — every family gets a freqs entry."""
         return list(self.freqs)
+
+
+@dataclasses.dataclass
+class MutationReport:
+    """What one BlinkDB.delete_rows / update_rows changed and invalidated."""
+    mutation: table_lib.TableMutation
+    # family -> (LIVE stratum freqs before, after), stable stratum ids
+    freqs: dict[tuple[str, ...], tuple[np.ndarray, np.ndarray]] = \
+        dataclasses.field(default_factory=dict)
+    # family -> dead rows that were in the sample (now striped-block ghosts)
+    tombstoned_sampled: dict[tuple[str, ...], int] = \
+        dataclasses.field(default_factory=dict)
+    restriped: list[tuple[str, ...]] = dataclasses.field(default_factory=list)
+    # append epoch consumed by an update's re-insert delta (None: pure delete
+    # or nothing matched — no delta units were drawn)
+    epoch: int | None = None
 
 
 @dataclasses.dataclass
@@ -154,10 +170,18 @@ class BlinkDB:
         def stats(phi: frozenset[str]):
             codes, _ = table_lib.combined_codes(tbl, sorted(phi))
             nd = int(codes.max()) + 1 if len(codes) else 0
+            # Tombstoned rows are storage the sample will never hold —
+            # statistics run over the LIVE histogram, and strata whose rows
+            # are ALL dead can never match a live row: they must not inflate
+            # |D(φ)| or the §3.2.1 tail-length metric Δ(φ).
+            if tbl.live is not None:
+                codes = codes[tbl.live]
             freqs = table_lib.stratum_frequencies(codes, nd)
             storage = samp_lib.expected_sample_rows(freqs, k1) * (tbl.row_bytes() + 8)
-            delta = float((freqs < k1).sum())   # §3.2.1 tail-length metric
-            return storage, float(nd), delta
+            nd_live = float(((freqs > 0).sum()) if tbl.live is not None
+                            else nd)
+            delta = float(((freqs > 0) & (freqs < k1)).sum())
+            return storage, nd_live, delta
         return stats
 
     def build_samples(self, table_name: str, templates: Sequence[QueryTemplate],
@@ -180,7 +204,9 @@ class BlinkDB:
             deltas.append(dl)
             distincts.append(nd)
         wl = opt_lib.Workload(tuple(templates), tuple(deltas), tuple(distincts))
-        budget = storage_budget_fraction * tbl.nbytes
+        # Budget against LIVE bytes: tombstoned rows are storage the samples
+        # will never hold (identical to nbytes for append-only tables).
+        budget = storage_budget_fraction * tbl.row_bytes() * tbl.n_live
         existing = frozenset(frozenset(p) for p in self.families[table_name] if p)
         solver = opt_lib.solve_exact if exact else opt_lib.solve_greedy
         sol = solver(cands, wl, budget, existing=existing,
@@ -246,10 +272,19 @@ class BlinkDB:
         epoch = self._append_epochs.get(table_name, 0) + 1
         self._append_epochs[table_name] = epoch
         unit_seed = self.config.seed if seed is None else seed
+        self._pre_delta_invalidation(table_name)
+        delta = tbl.append(raw)
+        self._post_delta_invalidation(table_name, delta)
+        freqs, restriped = self._merge_delta_into_families(
+            table_name, delta, epoch, unit_seed)
+        return AppendReport(delta, freqs, restriped, epoch)
 
-        # Gathered join attributes can't ride a schema-only delta: the table
-        # strips its own in Table.append; strip the FAMILIES' copies here
-        # (lazily regathered on next use).
+    def _pre_delta_invalidation(self, table_name: str) -> None:
+        """Before a delta lands: gathered join attributes can't ride a
+        schema-only delta — the table strips its own in Table.append; strip
+        the FAMILIES' copies here (lazily regathered on next use). If this
+        table serves as a dimension, the delta changes join results for its
+        fact tables: refresh fk maps + gathered columns."""
         fams = self.families.get(table_name, {})
         for phi, fam in fams.items():
             gathered = [c for c in fam.columns if "." in c]
@@ -258,43 +293,70 @@ class BlinkDB:
             if gathered:
                 self._striped.pop((table_name, phi), None)
                 self._drop_programs(table_name, phi)
-        # If this table serves as a dimension, the delta changes join
-        # results for its fact tables: refresh fk maps + gathered columns.
         for k in [k for k in self._fk_maps if k[1] == table_name]:
             del self._fk_maps[k]
         self._invalidate_as_dimension(table_name)
 
-        delta = tbl.append(raw)
+    def _post_delta_invalidation(self, table_name: str,
+                                 delta: table_lib.TableDelta) -> None:
+        """After a delta landed (append or update re-insert):
 
-        # fk maps where THIS table is the fact are sized by the fk column's
-        # dictionary — stale once that dictionary grew (new fk values would
-        # silently clamp-join to an arbitrary dimension row).
+        fk maps where THIS table is the fact are sized by the fk column's
+        dictionary — stale once that dictionary grew (new fk values would
+        silently clamp-join to an arbitrary dimension row). Exact-path
+        programs are keyed by table length — every entry for this table is
+        now unreachable; drop them (only this table's). Group-by programs
+        whose dictionary grew recompile under the new cardinality; prune the
+        now-unreachable old-cardinality entries."""
         for k in [k for k in self._fk_maps
                   if k[0] == table_name
                   and len(delta.new_dict_values.get(k[2], ()))]:
             del self._fk_maps[k]
+        for k in [k for k in self._exact_programs if k[0] == table_name]:
+            del self._exact_programs[k]
+        for col, vals in delta.new_dict_values.items():
+            if not len(vals):
+                continue
+            for cache in (self._programs, self._batched_programs,
+                          self._quantile_programs):
+                for k in [k for k in cache
+                          if k[0] == table_name and k[4] == col]:
+                    del cache[k]
 
-        # One delta-unit draw per stream, shared by every family on it.
+    def _merge_delta_into_families(self, table_name: str,
+                                   delta: table_lib.TableDelta, epoch: int,
+                                   unit_seed: int):
+        """Merge a landed delta into every materialized family in place and
+        incrementally restripe the device blocks (one delta-unit draw per
+        stream, shared by every family on it)."""
+        fams = self.families.get(table_name, {})
         strat_units = samp_lib.delta_units(delta.n_rows, unit_seed, epoch)
         unif_units = samp_lib.delta_units(delta.n_rows, unit_seed, epoch,
                                           uniform=True)
         freqs: dict[tuple[str, ...], tuple[np.ndarray, np.ndarray]] = {}
         restriped: list[tuple[str, ...]] = []
         for phi, fam in list(fams.items()):
-            old_freqs = fam.stratum_freqs
+            old_freqs = fam.live_freqs
             units = unif_units if phi == () else strat_units
             if phi == ():
-                # Uniform family keeps K_1 = p·N as N grows.
-                frac = fam.ks[0] / max(fam.table_rows, 1)
+                # Uniform family keeps K_1 = p·N as N grows — N being the
+                # PHYSICAL (inclusion) count, not the live count: K/F must
+                # never grow faster than F or rows re-enter the prefix and
+                # the merge can't supply them (it never sees unsampled base
+                # rows). Keeping K₁/N_phys constant pins every row's rate at
+                # exactly p through any delete/append interleaving.
+                n_phys = max(int(fam.stratum_freqs[0]), 1)
+                frac = fam.ks[0] / n_phys
                 merged, block = samp_lib.merge_family(
                     fam, delta.columns, units,
-                    new_k1=frac * (fam.table_rows + delta.n_rows),
-                    c=self.config.c)
+                    new_k1=frac * (n_phys + delta.n_rows),
+                    c=self.config.c, start_row=delta.start_row)
             else:
-                merged, block = samp_lib.merge_family(fam, delta.columns,
-                                                      units, c=self.config.c)
+                merged, block = samp_lib.merge_family(
+                    fam, delta.columns, units, c=self.config.c,
+                    start_row=delta.start_row)
             fams[phi] = merged
-            freqs[phi] = (old_freqs, merged.stratum_freqs)
+            freqs[phi] = (old_freqs, merged.live_freqs)
             key = (table_name, phi)
             striped = self._striped.get(key)
             if striped is not None:
@@ -306,22 +368,105 @@ class BlinkDB:
                     restriped.append(phi)
                 else:
                     self._striped[key] = upd
+        return freqs, restriped
 
-        # Exact-path programs are keyed by table length — every entry for
-        # this table is now unreachable; drop them (only this table's).
-        for k in [k for k in self._exact_programs if k[0] == table_name]:
-            del self._exact_programs[k]
-        # Group-by programs whose dictionary grew recompile under the new
-        # cardinality; prune the now-unreachable old-cardinality entries.
-        for col, vals in delta.new_dict_values.items():
-            if not len(vals):
-                continue
-            for cache in (self._programs, self._batched_programs,
-                          self._quantile_programs):
-                for k in [k for k in cache
-                          if k[0] == table_name and k[4] == col]:
-                    del cache[k]
-        return AppendReport(delta, freqs, restriped, epoch)
+    def delete_rows(self, table_name: str, predicate) -> MutationReport:
+        """Delete (tombstone) every live row matching `predicate`, keeping
+        all sample families and compiled programs serving (docs/MAINTENANCE.md
+        mutation protocol): the table marks rows dead in place; each family
+        drops its sampled copies host-side and ships ONE bitmask scatter that
+        ghosts their striped-block slots; per-stratum LIVE counts decrement
+        while inclusion frequencies — and with them every surviving row's
+        entry key and exact HT rate — stay put.
+
+        Invalidation: compiled sampled-path programs are all KEPT (the block
+        shape class is untouched by a tombstone scatter); exact-path programs
+        are also kept — the live mask is a traced argument and the physical
+        table length didn't change; ELP/latency calibrations are kept as with
+        appends. Only join state is refreshed when this table serves as a
+        dimension (fact rows must not keep serving values gathered from rows
+        that no longer exist)."""
+        tbl = self.tables[table_name]
+        mutation = tbl.delete(predicate)
+        report = MutationReport(mutation)
+        if mutation.n_tombstoned == 0:
+            return report
+        self._apply_tombstones_to_families(table_name, mutation, report)
+        for k in [k for k in self._fk_maps if k[1] == table_name]:
+            del self._fk_maps[k]
+        self._invalidate_as_dimension(table_name)
+        return report
+
+    def update_rows(self, table_name: str, predicate, assignments,
+                    seed: int | None = None) -> MutationReport:
+        """Update matching live rows: tombstone the old versions and ingest
+        the re-encoded new versions as an ordinary append delta (LSM-style),
+        so the re-inserts ride the whole incremental merge/restripe pipeline
+        — including the append invalidation matrix (new dictionary values,
+        exact-program retirement by table length, fk-map refreshes)."""
+        tbl = self.tables[table_name]
+        unit_seed = self.config.seed if seed is None else seed
+        mutation = tbl.update(predicate, assignments)
+        report = MutationReport(mutation)
+        if mutation.n_tombstoned == 0:
+            return report   # nothing matched: invalidate nothing
+        # (After the table mutation is fine: the family-side strips are only
+        # consumed by the merge below, and the cache drops are order-free.)
+        self._pre_delta_invalidation(table_name)
+        self._apply_tombstones_to_families(table_name, mutation, report)
+        epoch = self._append_epochs.get(table_name, 0) + 1
+        self._append_epochs[table_name] = epoch
+        report.epoch = epoch
+        self._post_delta_invalidation(table_name, mutation.delta)
+        freqs, restriped = self._merge_delta_into_families(
+            table_name, mutation.delta, epoch, unit_seed)
+        report.restriped = restriped
+        for phi, (_, after) in freqs.items():
+            before = report.freqs.get(phi, (after, after))[0]
+            report.freqs[phi] = (before, after)
+        return report
+
+    def _apply_tombstones_to_families(self, table_name: str, mutation,
+                                      report: MutationReport) -> None:
+        fams = self.families.get(table_name, {})
+        for phi, fam in list(fams.items()):
+            fam2, tblock = samp_lib.apply_tombstones(
+                fam, mutation.tombstoned, mutation.tombstoned_columns)
+            fams[phi] = fam2
+            report.freqs[phi] = (fam.live_freqs, fam2.live_freqs)
+            report.tombstoned_sampled[phi] = tblock.n_sampled
+            key = (table_name, phi)
+            striped = self._striped.get(key)
+            if striped is not None:
+                self._striped[key] = exec_lib.stripe_tombstone(
+                    striped, tblock.row_ids, table_rows=fam2.table_rows)
+
+    # ------------------------------------------------- ghost-slot compaction
+    def ghost_fractions(self, table_name: str) -> dict[tuple[str, ...], float]:
+        """Per-family ghost+tombstone slot fraction of the materialized
+        striped blocks (the compaction-policy trigger metric)."""
+        return {phi: s.ghost_fraction
+                for (t, phi), s in self._striped.items() if t == table_name}
+
+    def compact_family(self, table_name: str, phi: tuple[str, ...]) -> bool:
+        """Compacting restripe: rebuild the family's striped block from the
+        (ghost-free) host family, reclaiming every self-excluded slot. The
+        new block PINS the old per-shard geometry (stripe_family min_local),
+        so in the common case the shape class — and every AOT-compiled
+        program — survives; if the natural padding for the surviving rows
+        outgrew the old geometry anyway, programs are dropped instead of
+        served stale. Returns True if a block was compacted."""
+        key = (table_name, phi)
+        striped = self._striped.get(key)
+        if striped is None:
+            return False   # nothing materialized: next stripe is compact
+        fam = self.families[table_name][phi]
+        fresh = exec_lib.stripe_family(fam, self._n_shards(),
+                                       min_local=striped.n_local)
+        self._striped[key] = fresh
+        if fresh.shape_class != striped.shape_class:
+            self._drop_programs(table_name, phi)
+        return True
 
     # ------------------------------------------------------------- runtime
     def _n_shards(self) -> int:
@@ -473,7 +618,7 @@ class BlinkDB:
             groups.append(GroupResult(key, float(vals[g]), float(errs[g]),
                                       float(los[g]), float(his[g]),
                                       float(nsel[g]), exact))
-        return Answer(q, groups, phi, k, rows_read, tbl.n_rows, elapsed,
+        return Answer(q, groups, phi, k, rows_read, tbl.n_live, elapsed,
                       confidence)
 
     def _quantile_estimate(self, q: Query, table_name: str,
@@ -774,12 +919,16 @@ class BlinkDB:
         # against its old buffers (append_rows also prunes old entries).
         key = (q.table, struct, q.value_column, group_col, n_groups,
                tbl.n_rows, tuple(sorted(tcols)))
+        # The tombstone mask rides as a traced argument, so exact programs
+        # survive deletes (same length, same column set — only mask values
+        # change); updates retire them via the n_rows key as appends do.
+        live = tbl.live_mask_device()
         fn = self._exact_programs.get(key)
         if fn is None:
             n_rows = tbl.n_rows
 
-            def build(pred_vals, cols):
-                disj = exec_lib.eval_pred(struct, cols, pred_vals)
+            def build(pred_vals, cols, live_):
+                disj = exec_lib.eval_pred(struct, cols, pred_vals) & live_
                 ones_ = jnp.ones(n_rows, jnp.float32)
                 values_ = (cols[q.value_column].astype(jnp.float32)
                            if q.value_column else ones_)
@@ -787,19 +936,22 @@ class BlinkDB:
                       else jnp.zeros(n_rows, jnp.int32))
                 return est_lib.grouped_moments(values_, ones_, disj, g_,
                                                n_groups)
-            fn = jax.jit(build).lower(vals, tcols).compile()  # AOT
+            fn = jax.jit(build).lower(vals, tcols, live).compile()  # AOT
             self._exact_programs[key] = fn
 
-        ones = jnp.ones(tbl.n_rows, jnp.float32)
-        mask = exec_lib.predicate_mask(tcols, bound_pred)
-        values = (tcols[q.value_column].astype(jnp.float32)
-                  if q.value_column else ones)
-        g = (tcols[group_col].astype(jnp.int32) if group_col
-             else jnp.zeros(tbl.n_rows, jnp.int32))
         t0 = time.perf_counter()
-        mom = fn(vals, tcols)
+        mom = fn(vals, tcols, live)
         mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
         if q.agg is AggOp.QUANTILE:
+            # Only the quantile pass needs the raw mask/values/groups — the
+            # compiled program above already evaluated the predicate for the
+            # moment statistics.
+            mask = exec_lib.predicate_mask(tcols, bound_pred) & live
+            values = (tcols[q.value_column].astype(jnp.float32)
+                      if q.value_column
+                      else jnp.ones(tbl.n_rows, jnp.float32))
+            g = (tcols[group_col].astype(jnp.int32) if group_col
+                 else jnp.zeros(tbl.n_rows, jnp.int32))
             qv, dens = exec_lib.grouped_quantile(
                 values, mask.astype(jnp.float32), g, n_groups, q.quantile)
             est = est_lib.estimate(AggOp.QUANTILE, mom, quantile_value=qv,
@@ -820,7 +972,7 @@ class BlinkDB:
                                       float(vals[gidx]), float(vals[gidx]),
                                       float(ns[gidx]), True))
         return Answer(q, groups, ("<exact>",), float("inf"), tbl.n_rows,
-                      tbl.n_rows, dt, 1.0)
+                      tbl.n_live, dt, 1.0)
 
 
 def _union_answers(q: Query, answers: list[Answer]) -> Answer:

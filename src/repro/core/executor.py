@@ -144,10 +144,28 @@ class StripedFamily:
     n_rows: int                     # occupied slots (incl. self-excluded ghosts)
     table_rows: int
     n_shards: int
+    # Host mirror: physical base-row id per occupied slot, in linear slot
+    # order (slot j ↔ shard j%S, local j//S). -1 marks slots already ghosted
+    # by a tombstone (so re-deletes can't double-count). Tombstones resolve
+    # their scatter indices against this without any device read-back.
+    slot_row_ids: np.ndarray | None = None
+    # Self-excluded slots: rescale ghosts (rows pushed past K₁ by a merge)
+    # plus tombstoned rows. Drives the compaction trigger.
+    n_ghosts: int = 0
 
     @property
     def capacity(self) -> int:
         return self.n_shards * int(self.freq.shape[1])
+
+    @property
+    def n_local(self) -> int:
+        return int(self.freq.shape[1])
+
+    @property
+    def ghost_fraction(self) -> float:
+        """Fraction of occupied slots that are self-excluded ghosts — the
+        scan-efficiency loss a compacting restripe reclaims."""
+        return self.n_ghosts / max(self.n_rows, 1)
 
     @property
     def shape_class(self) -> tuple:
@@ -170,16 +188,25 @@ def _padded_freq_table(freq_table: np.ndarray) -> np.ndarray:
     return out
 
 
-def stripe_family(fam: SampleFamily, n_shards: int) -> StripedFamily:
+def stripe_family(fam: SampleFamily, n_shards: int,
+                  min_local: int | None = None) -> StripedFamily:
     """Stripe on host, then move the WHOLE padded block with one device_put.
 
     Pad+reshape stays in NumPy (no per-column host→device round trips); the
     single device_put of the column pytree lets the runtime batch every
     buffer into one transfer, so (re)striping a wide family doesn't
     serialize on per-column memcpys.
+
+    `min_local` pins the per-shard slot count to at least that value: a
+    COMPACTING restripe (ghost/tombstone reclamation) passes the old block's
+    n_local so the rebuilt block keeps the same shape class and every
+    AOT-compiled program stays valid — the family only ever shrinks under
+    compaction, so the old geometry always fits.
     """
     n = fam.n_rows
     n_local = _padded_local(n, n_shards)
+    if min_local is not None:
+        n_local = max(n_local, int(min_local))
     pad = n_local * n_shards - n
 
     def stripe(arr, fill):
@@ -203,10 +230,26 @@ def stripe_family(fam: SampleFamily, n_shards: int) -> StripedFamily:
             fam.stratum_freqs.astype(np.float32)),
     }
     dev = jax.device_put(host_block)
+    slot_row_ids = (fam.row_ids.astype(np.int64).copy()
+                    if fam.row_ids is not None
+                    else np.full(n, -1, dtype=np.int64))
     return StripedFamily(fam.phi, fam.ks, dev["cols"], dev["freq"],
                          dev["entry_key"], dev["valid"], dev["unit"],
                          dev["strat"], dev["freq_table"],
-                         n, fam.table_rows, n_shards)
+                         n, fam.table_rows, n_shards,
+                         slot_row_ids=slot_row_ids, n_ghosts=0)
+
+
+def _pad_pow2(a: np.ndarray, d: int) -> np.ndarray:
+    """Pad a length-d leading axis to the next power of two (min 64) by
+    REPEATING the last element: duplicate writes of identical values are
+    idempotent for every scatter that consumes the result, and the pow-2 pad
+    classes keep the jitted scatter programs shared across epochs. One
+    definition for both the append and tombstone scatters — the pad recipe
+    is load-bearing for program-cache reuse and must not fork."""
+    d_pad = max(64, 1 << (d - 1).bit_length())
+    a = np.asarray(a)
+    return np.concatenate([a, np.repeat(a[-1:], d_pad - d, axis=0)])
 
 
 @jax.jit
@@ -265,11 +308,8 @@ def stripe_append(striped: StripedFamily, fam: SampleFamily,
         out = _refresh_only(striped.columns, striped.unit, striped.strat,
                             striped.valid, jax.device_put(freq_table))
     else:
-        d_pad = max(64, 1 << (d - 1).bit_length())
-
         def pad(a):
-            a = np.asarray(a)
-            return np.concatenate([a, np.repeat(a[-1:], d_pad - d, axis=0)])
+            return _pad_pow2(a, d)
 
         j = np.arange(start, start + d)
         payload = {
@@ -283,9 +323,68 @@ def stripe_append(striped: StripedFamily, fam: SampleFamily,
         out = _scatter_refresh(striped.columns, striped.unit, striped.strat,
                                striped.valid, jax.device_put(payload))
     cols, unit, strat, valid, freq_table, freq, entry_key = out
+    old_ids = (striped.slot_row_ids if striped.slot_row_ids is not None
+               else np.full(start, -1, dtype=np.int64))
+    new_ids = (block.row_ids.astype(np.int64) if block.row_ids is not None
+               else np.full(d, -1, dtype=np.int64))
     return StripedFamily(fam.phi, fam.ks, cols, freq, entry_key, valid,
                          unit, strat, freq_table,
-                         start + d, fam.table_rows, s_count)
+                         start + d, fam.table_rows, s_count,
+                         slot_row_ids=np.concatenate([old_ids, new_ids]),
+                         # rows the rescale pushed past K₁ stay in the block
+                         # as self-excluded ghosts until compaction
+                         n_ghosts=striped.n_ghosts + block.n_dropped_old)
+
+
+@jax.jit
+def _scatter_ghost(unit, entry_key, valid, s_idx, l_idx):
+    """One fused device program for a tombstone pass: turn the dead rows'
+    slots into self-excluding ghosts. unit := +inf keeps them ghosted
+    through any later _scatter_refresh (ek is re-derived as unit·freq);
+    entry_key := +inf fails every prefix test immediately; valid := False
+    covers the quantile/ref paths that mask on validity. Module-level jit +
+    power-of-two index padding ⇒ compiled once per (shape class, pad class),
+    like the append scatter."""
+    inf = jnp.float32(jnp.inf)
+    unit = unit.at[s_idx, l_idx].set(inf)
+    entry_key = entry_key.at[s_idx, l_idx].set(inf)
+    valid = valid.at[s_idx, l_idx].set(False)
+    return unit, entry_key, valid
+
+
+def stripe_tombstone(striped: StripedFamily, dead_row_ids: np.ndarray,
+                     table_rows: int | None = None) -> StripedFamily:
+    """Ghost the slots of tombstoned sampled rows — the device half of a
+    delete. Ships ONLY a bitmask scatter (two f32 + one bool scatter at the
+    dead slots): no column rewrite, no freq-table refresh, no re-keying —
+    inclusion frequencies are untouched by deletes (sampling layer docs) —
+    and the block keeps its shape class, so every AOT-compiled program stays
+    valid. Slots are found via the host slot_row_ids mirror; ghosted slots
+    are marked -1 there so a row can never be double-counted. `table_rows`
+    is the post-mutation LIVE table count (dead_row_ids are only the dead
+    rows that were SAMPLED, so it cannot be derived here)."""
+    if table_rows is None:
+        table_rows = striped.table_rows
+    ids = striped.slot_row_ids
+    if ids is None or len(dead_row_ids) == 0:
+        return dataclasses.replace(striped, table_rows=table_rows)
+    dead_row_ids = np.asarray(dead_row_ids, dtype=np.int64)
+    slots = np.flatnonzero(np.isin(ids[: striped.n_rows], dead_row_ids))
+    if slots.size == 0:
+        return dataclasses.replace(striped, table_rows=table_rows)
+    d = int(slots.size)
+    slots_p = _pad_pow2(slots, d)
+    s_idx = (slots_p % striped.n_shards).astype(np.int32)
+    l_idx = (slots_p // striped.n_shards).astype(np.int32)
+    unit, entry_key, valid = _scatter_ghost(
+        striped.unit, striped.entry_key, striped.valid,
+        *jax.device_put((s_idx, l_idx)))
+    new_ids = ids.copy()
+    new_ids[slots] = -1
+    return dataclasses.replace(
+        striped, unit=unit, entry_key=entry_key, valid=valid,
+        slot_row_ids=new_ids, n_ghosts=striped.n_ghosts + d,
+        table_rows=table_rows)
 
 
 def run_query_striped(striped: StripedFamily, bound_pred, value_col: str | None,

@@ -33,13 +33,20 @@ class Join:
 
 def build_fk_map(fact: table_lib.Table, dim: table_lib.Table,
                  join: Join) -> np.ndarray:
-    """fact_fk_code -> dim row index (−1 for dangling keys)."""
+    """fact_fk_code -> dim row index (−1 for dangling keys).
+
+    Tombstoned dimension rows are skipped: a deleted dim row must not keep
+    serving its attributes (its keys dangle to the sentinel instead), and an
+    updated dim row's LIVE re-inserted version — not the dead original that
+    setdefault would find first — must win for its key."""
     fact_vals = fact.dictionaries[join.fact_key]
-    dim_codes = np.asarray(dim.columns[join.dim_key])
+    dim_codes = dim.host_column(join.dim_key)
     dim_vals = dim.dictionaries[join.dim_key]
-    # dim row index per dim key value
+    # dim row index per dim key value (live rows only)
     val_to_row = {}
     for row, code in enumerate(dim_codes):
+        if dim.live is not None and not dim.live[row]:
+            continue
         val_to_row.setdefault(dim_vals[code], row)
     out = np.full(len(fact_vals), -1, dtype=np.int32)
     for code, v in enumerate(fact_vals):

@@ -15,6 +15,12 @@ Two ingestion modes (docs/MAINTENANCE.md):
 * `run_epoch(new_table=...)` — full replacement (the original batch path):
   every derived cache is invalidated and families rebuild from scratch.
 
+Deletes/updates flow through `BlinkDB.delete_rows`/`update_rows` (tombstone
+protocol, docs/MAINTENANCE.md); every epoch additionally runs the
+ghost-slot compaction policy (`compact()`): families whose striped blocks
+accumulated more than `compact_threshold` self-excluded slots (rescale
+ghosts + tombstoned rows) are restriped into their existing geometry.
+
 Epoch randomness is threaded explicitly (base_seed + epoch number) — the
 shared EngineConfig.seed is never mutated.
 
@@ -53,6 +59,11 @@ class MaintenanceConfig:
     drift_threshold: float = 0.05     # TV distance triggering re-optimization
     change_fraction: float = 0.3      # Eq. 5 r: ≤30% of sample bytes may churn
     period_s: float = 86400.0         # paper: daily
+    # Ghost+tombstone slot fraction past which a family's striped block is
+    # compacted (periodic restripe — not only on block growth). Rescale
+    # ghosts and tombstoned rows self-exclude from every scan but still
+    # occupy slots, so scan efficiency decays with churn until reclaimed.
+    compact_threshold: float = 0.3
 
 
 class SampleMaintainer:
@@ -86,9 +97,16 @@ class SampleMaintainer:
         translated by dictionary VALUE onto the engine table's codes (a new
         table whose dictionary merely gained a value must not shift every
         code after it).
+
+        Both sides of the comparison are LIVE histograms: the family's
+        stratum_live (inclusion freqs still count tombstoned rows — a
+        delete-heavy epoch would otherwise under-report drift, since dead
+        rows pad both marginals toward the stale distribution) and the new
+        table's non-tombstoned rows.
         """
         out = {}
         old_tbl = self.db.tables.get(self.table_name)
+        live = new_table.live
         for phi, fam in self.db.families[self.table_name].items():
             if not phi:
                 continue
@@ -97,12 +115,14 @@ class SampleMaintainer:
                     [self._align_codes(new_table, old_tbl, c) for c in phi],
                     axis=1)
                 codes, keys = table_lib.map_codes_stable(mat, fam.strata_keys)
-                new_f = table_lib.stratum_frequencies(codes, len(keys))
+                nd = len(keys)
             else:
                 codes, _ = table_lib.combined_codes(new_table, phi)
                 nd = int(codes.max()) + 1 if len(codes) else 0
-                new_f = table_lib.stratum_frequencies(codes, nd)
-            out[phi] = distribution_drift(fam.stratum_freqs, new_f)
+            if live is not None:
+                codes = codes[live]
+            new_f = table_lib.stratum_frequencies(codes, nd)
+            out[phi] = distribution_drift(fam.live_freqs, new_f)
         return out
 
     @staticmethod
@@ -119,6 +139,22 @@ class SampleMaintainer:
         trans, _ = table_lib.get_or_assign_codes(
             new_table.dictionaries[col].tolist(), lookup)
         return trans[codes].astype(np.int32)
+
+    # -- ghost-slot compaction (periodic restripe) -----------------------------
+    def compact(self) -> list[tuple[str, ...]]:
+        """Compact every family whose striped block's ghost+tombstone slot
+        fraction exceeds the threshold (docs/MAINTENANCE.md): rescale ghosts
+        and tombstoned rows self-exclude from scans but still occupy slots,
+        so without this periodic restripe a churn-heavy workload degrades
+        scan efficiency until a block happens to outgrow its padding. The
+        compacting restripe pins the old block geometry, so compiled query
+        programs normally stay valid. Returns the compacted families."""
+        compacted = []
+        for phi, frac in self.db.ghost_fractions(self.table_name).items():
+            if frac > self.config.compact_threshold:
+                if self.db.compact_family(self.table_name, phi):
+                    compacted.append(phi)
+        return compacted
 
     # -- one maintenance epoch -------------------------------------------------
     def run_epoch(self, new_table: table_lib.Table | None = None,
@@ -169,6 +205,7 @@ class SampleMaintainer:
             return {"drift": drift, "rebuilt": stale,
                     "merged": report.merged, "restriped": report.restriped,
                     "appended_rows": report.delta.n_rows,
+                    "compacted": self.compact(),
                     "objective": sol.objective if sol else None,
                     "storage": sol.storage_used if sol else None}
 
@@ -206,7 +243,8 @@ class SampleMaintainer:
         for phi in stale:
             if phi in self.db.families[self.table_name]:
                 self.db.add_family(self.table_name, phi, seed=epoch_seed)
-        return {"drift": drift, "rebuilt": stale, "objective": sol.objective,
+        return {"drift": drift, "rebuilt": stale,
+                "compacted": self.compact(), "objective": sol.objective,
                 "storage": sol.storage_used}
 
     # -- background thread (low-priority task per §4.5) -----------------------

@@ -43,9 +43,16 @@ class SampleFamily:
     entry_key: jax.Array              # f32[n] = u * F(x), ascending
     prefix_sizes: tuple[int, ...]     # |S(φ, K_i)| for each K_i (row counts)
     n_rows: int                       # rows materialized (= prefix_sizes[0])
-    table_rows: int                   # rows in the original table
+    table_rows: int                   # LIVE rows in the original table
     n_distinct: int                   # |D(φ)|
-    stratum_freqs: np.ndarray         # F per distinct value (host, for Δ/stats)
+    # INCLUSION frequency per distinct value: the F the entry keys and HT
+    # rates are computed under. Under mutation this is the CUMULATIVE
+    # (ever-inserted, i.e. physical) histogram — monotone non-decreasing, so
+    # re-keying u·F only ever pushes rows OUT of the K₁ prefix and a row's
+    # inclusion probability min(1, K/F) stays exact no matter what was
+    # deleted around it (docs/MAINTENANCE.md tombstone protocol). For
+    # append-only families it equals the live histogram, as before.
+    stratum_freqs: np.ndarray
     # Incremental-maintenance state (docs/MAINTENANCE.md). `unit` is the raw
     # per-row priority u — kept so a merge can recompute entry_key = u·F_new
     # bit-identically to a from-scratch rebuild with the same units.
@@ -57,6 +64,11 @@ class SampleFamily:
     # read the whole sample back device→host — O(sample), not O(delta).
     columns_host: dict[str, np.ndarray] | None = None
     unit_host: np.ndarray | None = None
+    # Mutation state: physical base-table row index per sampled row (the
+    # stable id tombstones are matched on), and LIVE per-stratum counts
+    # (drift/stats; decremented by tombstones while stratum_freqs is not).
+    row_ids: np.ndarray | None = None      # int64[n]
+    stratum_live: np.ndarray | None = None # int64[D]; None ⇒ == stratum_freqs
 
     def host_column(self, name: str) -> np.ndarray:
         if self.columns_host is not None and name in self.columns_host:
@@ -66,6 +78,13 @@ class SampleFamily:
     @property
     def k1(self) -> float:
         return self.ks[0]
+
+    @property
+    def live_freqs(self) -> np.ndarray:
+        """LIVE per-stratum counts (what drift/optimizer stats should see);
+        equals the inclusion freqs until a tombstone decrements it."""
+        return (self.stratum_live if self.stratum_live is not None
+                else self.stratum_freqs)
 
     def prefix_for_k(self, k: float) -> int:
         """Rows to scan for resolution cap k. Searches the HOST mirror of
@@ -99,6 +118,7 @@ class DeltaBlock:
     entry_key: np.ndarray             # f32[d_kept] = unit · F_new
     freq_table: np.ndarray            # f32[D_new] updated per-stratum F
     n_dropped_old: int                # old rows pushed past K_1 by the rescale
+    row_ids: np.ndarray | None = None # int64[d_kept] physical base-row ids
 
     @property
     def n_rows(self) -> int:
@@ -140,15 +160,24 @@ def delta_units(n: int, seed: int, epoch: int, *,
 def _assemble_family(phi: tuple[str, ...], ks: tuple[float, ...],
                      host_cols: Mapping[str, np.ndarray], units: np.ndarray,
                      codes: np.ndarray, freqs: np.ndarray,
-                     key_matrix: np.ndarray, table_rows: int) -> SampleFamily:
+                     key_matrix: np.ndarray, table_rows: int, *,
+                     live: np.ndarray | None = None,
+                     incl_freqs: np.ndarray | None = None) -> SampleFamily:
     """Materialize a family from per-row (unit, stratum) assignments: keep
-    entry_key = u·F < K_1, sort ascending, cut prefixes. Shared by the
-    from-scratch builders and (via identical float math) the merge oracle."""
+    entry_key = u·F < K_1 (live rows only), sort ascending, cut prefixes.
+    Shared by the from-scratch builders and (via identical float math) the
+    merge/mutation oracle. `freqs` are the LIVE per-stratum counts;
+    `incl_freqs` (default: freqs) are the inclusion frequencies keys/rates
+    use — the mutation oracle passes the cumulative physical histogram."""
     k1 = ks[0]
-    row_freq = freqs.astype(np.float32)[codes] if len(codes) \
+    if incl_freqs is None:
+        incl_freqs = freqs
+    row_freq = incl_freqs.astype(np.float32)[codes] if len(codes) \
         else np.zeros(0, np.float32)
     entry_key = units.astype(np.float32) * row_freq
     keep = entry_key < k1
+    if live is not None:
+        keep &= live
     order = np.argsort(entry_key[keep], kind="stable")
     idx = np.nonzero(keep)[0][order]
     ek = entry_key[idx]
@@ -161,20 +190,28 @@ def _assemble_family(phi: tuple[str, ...], ks: tuple[float, ...],
         freq=jnp.asarray(row_freq[idx]),
         entry_key=jnp.asarray(ek),
         prefix_sizes=prefixes, n_rows=int(idx.size), table_rows=table_rows,
-        n_distinct=len(freqs), stratum_freqs=freqs,
+        n_distinct=len(incl_freqs), stratum_freqs=incl_freqs,
         unit=jnp.asarray(unit_host),
         strata_keys=key_matrix, row_strata=codes[idx],
-        entry_key_host=ek, columns_host=cols_host, unit_host=unit_host)
+        entry_key_host=ek, columns_host=cols_host, unit_host=unit_host,
+        row_ids=idx.astype(np.int64), stratum_live=freqs)
 
 
 def build_family(tbl: table_lib.Table, phi: Sequence[str], k1: float,
                  c: float = 2.0, m: int | None = None, *,
-                 seed: int = 0, units: np.ndarray | None = None) -> SampleFamily:
+                 seed: int = 0, units: np.ndarray | None = None,
+                 cumulative_inclusion: bool = False) -> SampleFamily:
     """Construct SFam(φ) from a table (offline sample creation, §2.2.1).
 
     `units` overrides the seeded per-row priorities — the host ORACLE for the
     incremental merge path: rebuilding with the concatenated unit segments of
     every append must reproduce the merged family exactly.
+
+    On a table with tombstones only LIVE rows are sampled. A fresh build
+    keys them under the live frequencies (best sample utilization);
+    `cumulative_inclusion=True` keys under the cumulative PHYSICAL histogram
+    instead — the oracle for the incremental mutation path, where inclusion
+    frequencies count every row ever inserted and never decrement.
     """
     phi = tuple(sorted(phi))
     for col in phi:
@@ -182,7 +219,11 @@ def build_family(tbl: table_lib.Table, phi: Sequence[str], k1: float,
             raise ValueError(f"stratification column {col!r} must be categorical")
     codes, key_matrix = table_lib.combined_codes(tbl, phi)
     n_distinct = int(codes.max()) + 1 if len(codes) else 0
-    freqs = table_lib.stratum_frequencies(codes, n_distinct)
+    live = tbl.live
+    live_freqs = table_lib.stratum_frequencies(
+        codes if live is None else codes[live], n_distinct)
+    incl = (table_lib.stratum_frequencies(codes, n_distinct)
+            if cumulative_inclusion else None)
 
     if m is None:
         m = max(1, int(math.floor(math.log(max(k1, 2.0), c))))
@@ -190,17 +231,23 @@ def build_family(tbl: table_lib.Table, phi: Sequence[str], k1: float,
     if units is None:
         units = base_units(tbl.n_rows, seed)
     host_cols = {c: tbl.host_column(c) for c in tbl.columns}
-    return _assemble_family(phi, ks, host_cols, units, codes, freqs,
-                            key_matrix[:n_distinct], tbl.n_rows)
+    return _assemble_family(phi, ks, host_cols, units, codes, live_freqs,
+                            key_matrix[:n_distinct], tbl.n_live,
+                            live=live, incl_freqs=incl)
 
 
 def build_uniform_family(tbl: table_lib.Table, fraction: float, c: float = 2.0,
                          m: int | None = None, *, seed: int = 0,
-                         units: np.ndarray | None = None) -> SampleFamily:
-    """Uniform family R(p): stratification on φ=∅ — one stratum of size N,
-    K_1 = p·N. rate = K/N = sampling fraction; entry_key = u·N."""
+                         units: np.ndarray | None = None, k1: float | None = None,
+                         cumulative_inclusion: bool = False) -> SampleFamily:
+    """Uniform family R(p): stratification on φ=∅ — one stratum of size N
+    (live rows), K_1 = p·N. rate = K/N = sampling fraction; entry_key = u·N.
+    `k1` overrides p·N exactly (the mutation oracle needs the incremental
+    family's cap bit-for-bit, not a fraction round-trip)."""
     n = tbl.n_rows
-    k1 = fraction * n
+    n_live = tbl.n_live
+    if k1 is None:
+        k1 = fraction * n_live
     if m is None:
         m = max(1, int(math.floor(math.log(max(k1, 2.0), c))))
     ks = resolution_caps(k1, c, m)
@@ -209,13 +256,17 @@ def build_uniform_family(tbl: table_lib.Table, fraction: float, c: float = 2.0,
     host_cols = {c: tbl.host_column(c) for c in tbl.columns}
     return _assemble_family((), ks, host_cols, units,
                             np.zeros(n, dtype=np.int64),
-                            np.array([n], dtype=np.int64),
-                            np.zeros((1, 0), dtype=np.int32), n)
+                            np.array([n_live], dtype=np.int64),
+                            np.zeros((1, 0), dtype=np.int32), n_live,
+                            live=tbl.live,
+                            incl_freqs=(np.array([n], dtype=np.int64)
+                                        if cumulative_inclusion else None))
 
 
 def merge_family(fam: SampleFamily, delta_columns: Mapping[str, np.ndarray],
                  units: np.ndarray, *, new_k1: float | None = None,
-                 c: float = 2.0) -> tuple[SampleFamily, DeltaBlock]:
+                 c: float = 2.0,
+                 start_row: int | None = None) -> tuple[SampleFamily, DeltaBlock]:
     """Merge an append-only delta into a materialized family (§3.2.3/§4.5).
 
     Incremental counterpart of build_family: the delta's rows are keyed with
@@ -238,18 +289,34 @@ def merge_family(fam: SampleFamily, delta_columns: Mapping[str, np.ndarray],
         raise KeyError(
             f"delta lacks columns {missing} present on family {phi!r} — "
             "strip gathered join columns before merging")
+    live_old = fam.live_freqs
+    if start_row is None:
+        # Fallback: the inclusion-frequency total counts every physical row
+        # the family has tracked since build. Only exact when the family's
+        # inclusion freqs are cumulative from physical row 0 (true unless it
+        # was freshly built on an already-tombstoned table — the engine
+        # passes the table's authoritative delta.start_row).
+        start_row = int(fam.stratum_freqs.sum())
     if phi:
         mat = np.stack([np.asarray(delta_columns[col], dtype=np.int32)
                         for col in phi], axis=1)
         dcodes, key_matrix = table_lib.map_codes_stable(mat, fam.strata_keys)
         new_freqs = table_lib.extend_frequencies(fam.stratum_freqs, dcodes,
                                                  len(key_matrix))
+        new_live = table_lib.extend_frequencies(live_old, dcodes,
+                                                len(key_matrix))
         ks = fam.ks
     else:
         d = len(next(iter(delta_columns.values())))
         dcodes = np.zeros(d, dtype=np.int64)
         key_matrix = fam.strata_keys
-        new_freqs = np.array([fam.table_rows + d], dtype=np.int64)
+        # Extend the family's OWN inclusion base (exactly like the stratified
+        # branch extends fam.stratum_freqs) — not the table's physical count:
+        # a family freshly built on an already-tombstoned table has a live
+        # inclusion base, and keying against the physical count while the
+        # caller scales K₁ from the live base would silently shrink rates.
+        new_freqs = np.array([int(fam.stratum_freqs[0]) + d], dtype=np.int64)
+        new_live = np.array([int(live_old[0]) + d], dtype=np.int64)
         ks = (resolution_caps(new_k1, c, len(fam.ks))
               if new_k1 is not None else fam.ks)
     k1 = ks[0]
@@ -270,12 +337,14 @@ def merge_family(fam: SampleFamily, delta_columns: Mapping[str, np.ndarray],
     d_ek = units * d_freq
     keep_d = d_ek < k1
 
+    d_row_ids = start_row + np.arange(len(dcodes), dtype=np.int64)
     block = DeltaBlock(
         columns={name: np.asarray(delta_columns[name])[keep_d]
                  for name in fam.columns},
         unit=units[keep_d], strata=dcodes[keep_d].astype(np.int32),
         freq=d_freq[keep_d], entry_key=d_ek[keep_d],
-        freq_table=freqs_f32, n_dropped_old=int((~keep_old).sum()))
+        freq_table=freqs_f32, n_dropped_old=int((~keep_old).sum()),
+        row_ids=d_row_ids[keep_d])
 
     ek_m = np.concatenate([old_ek[keep_old], block.entry_key])
     order = np.argsort(ek_m, kind="stable")
@@ -291,6 +360,8 @@ def merge_family(fam: SampleFamily, delta_columns: Mapping[str, np.ndarray],
     cols_host = {name: merge_col(fam.host_column(name), block.columns[name])
                  for name in fam.columns}
     unit_host = merge_col(old_units, block.unit)
+    old_row_ids = (fam.row_ids if fam.row_ids is not None
+                   else np.full(len(old_units), -1, dtype=np.int64))
     merged = SampleFamily(
         phi=phi, ks=ks,
         columns={name: jnp.asarray(a) for name, a in cols_host.items()},
@@ -303,8 +374,93 @@ def merge_family(fam: SampleFamily, delta_columns: Mapping[str, np.ndarray],
         strata_keys=key_matrix,
         row_strata=merge_col(old_strata, block.strata.astype(np.int64)),
         entry_key_host=ek_sorted, columns_host=cols_host,
-        unit_host=unit_host)
+        unit_host=unit_host,
+        row_ids=merge_col(old_row_ids, block.row_ids),
+        stratum_live=new_live)
     return merged, block
+
+
+@dataclasses.dataclass
+class TombstoneBlock:
+    """What one apply_tombstones pass removed from a family — exactly the
+    payload the executor's `stripe_tombstone` ships to the device (a bitmask
+    scatter over the dead sampled rows' slots; nothing else changes)."""
+    row_ids: np.ndarray            # int64: dead rows that WERE in the sample
+    n_tombstoned: int              # total dead rows (sampled or not)
+
+    @property
+    def n_sampled(self) -> int:
+        return int(self.row_ids.size)
+
+
+def apply_tombstones(fam: SampleFamily, row_ids: np.ndarray,
+                     row_columns: Mapping[str, np.ndarray]
+                     ) -> tuple[SampleFamily, TombstoneBlock]:
+    """Apply a TableMutation's tombstones to a materialized family.
+
+    Dead rows that were sampled are dropped from the host family (their
+    striped-block slots become self-excluding ghosts via stripe_tombstone);
+    per-stratum LIVE counts are decremented for every dead row, sampled or
+    not. The INCLUSION frequencies — and with them every surviving row's
+    entry_key and HT rate — are untouched: a row's inclusion probability
+    min(1, K/F) was fixed by the frequencies it was keyed under, and deleting
+    its neighbours does not change it, so estimates over the live population
+    stay exactly unbiased without re-keying anything (docs/MAINTENANCE.md).
+
+    `row_ids` are the tombstoned physical row indices; `row_columns` their
+    encoded host columns as of death (TableMutation.tombstoned_columns) —
+    used to locate each dead row's stratum without re-reading the base table.
+    """
+    row_ids = np.asarray(row_ids, dtype=np.int64)
+    n_dead = int(row_ids.size)
+    live_old = fam.live_freqs
+    if fam.phi:
+        mat = np.stack([np.asarray(row_columns[col], dtype=np.int32)
+                        for col in fam.phi], axis=1)
+        dcodes, keys = table_lib.map_codes_stable(mat, fam.strata_keys)
+        if len(keys) != len(fam.strata_keys):
+            raise ValueError(
+                "tombstoned rows reference strata this family has never "
+                "seen — the mutation does not belong to its table")
+    else:
+        dcodes = np.zeros(n_dead, dtype=np.int64)
+    dec = np.bincount(dcodes, minlength=len(live_old)).astype(np.int64)
+    new_live = live_old - dec
+    if (new_live < 0).any():
+        raise ValueError("tombstones exceed live stratum counts — rows "
+                         "deleted twice?")
+
+    if fam.row_ids is None:
+        raise ValueError("family has no row_ids — built before mutation "
+                         "support; rebuild it to enable deletes")
+    dead = np.isin(fam.row_ids, row_ids)
+    block = TombstoneBlock(row_ids=fam.row_ids[dead], n_tombstoned=n_dead)
+    table_rows = fam.table_rows - n_dead
+    if not dead.any():
+        out = dataclasses.replace(fam, stratum_live=new_live,
+                                  table_rows=table_rows)
+        return out, block
+
+    keep = ~dead
+    ek = fam.entry_key_host[keep]         # keys unchanged ⇒ still sorted
+    cols_host = {name: fam.host_column(name)[keep] for name in fam.columns}
+    unit_host = (fam.unit_host if fam.unit_host is not None
+                 else np.asarray(fam.unit))[keep]
+    row_strata = fam.row_strata[keep]
+    row_freq = fam.stratum_freqs.astype(np.float32)[row_strata]
+    prefixes = tuple(int(np.searchsorted(ek, k, side="left")) for k in fam.ks)
+    out = SampleFamily(
+        phi=fam.phi, ks=fam.ks,
+        columns={name: jnp.asarray(a) for name, a in cols_host.items()},
+        freq=jnp.asarray(row_freq),
+        entry_key=jnp.asarray(ek),
+        prefix_sizes=prefixes, n_rows=int(ek.size), table_rows=table_rows,
+        n_distinct=fam.n_distinct, stratum_freqs=fam.stratum_freqs,
+        unit=jnp.asarray(unit_host),
+        strata_keys=fam.strata_keys, row_strata=row_strata,
+        entry_key_host=ek, columns_host=cols_host, unit_host=unit_host,
+        row_ids=fam.row_ids[keep], stratum_live=new_live)
+    return out, block
 
 
 def stratified_exact_k(tbl: table_lib.Table, phi: Sequence[str], k: int, *,

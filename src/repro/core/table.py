@@ -13,7 +13,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import ColumnKind, ColumnSchema, TableDelta, TableSchema
+from repro.core.types import (CmpOp, ColumnKind, ColumnSchema, Predicate,
+                              TableDelta, TableMutation, TableSchema)
+
+# numpy comparator table for host-side predicate evaluation (mirrors
+# types.cmp_fns, which is the jnp table used on device)
+_NP_CMP = {
+    CmpOp.EQ: np.equal, CmpOp.NE: np.not_equal,
+    CmpOp.LT: np.less, CmpOp.LE: np.less_equal,
+    CmpOp.GT: np.greater, CmpOp.GE: np.greater_equal,
+}
 
 
 class _LazyDeviceColumns(dict):
@@ -64,12 +73,38 @@ class Table:
     # columns back (O(table), not O(delta), in host↔device traffic on
     # accelerator backends).
     columns_host: dict[str, np.ndarray] | None = None
+    # host tombstone mask: live[i] False once physical row i is deleted or
+    # superseded by an update. None means every row is live (append-only
+    # tables pay nothing). Physical rows NEVER move — a row's physical index
+    # is the stable id the sampling layer keys inclusion metadata on; dead
+    # slots are reclaimed only by striped-block compaction, not here.
+    live: np.ndarray | None = None
     # columns whose device copy lags the host mirror (lazy re-upload)
     _stale_device: set = dataclasses.field(default_factory=set, repr=False)
+    _live_count: int | None = dataclasses.field(default=None, repr=False)
+    _live_device: jax.Array | None = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
         if not isinstance(self.columns, _LazyDeviceColumns):
             self.columns = _LazyDeviceColumns(self.columns, self)
+
+    @property
+    def n_live(self) -> int:
+        """Live (non-tombstoned) rows; == n_rows for append-only tables."""
+        if self.live is None:
+            return self.n_rows
+        if self._live_count is None:
+            self._live_count = int(self.live.sum())
+        return self._live_count
+
+    def live_mask_device(self) -> jax.Array:
+        """Device mirror of the tombstone mask (exact-path predicate AND).
+        Cached; invalidated by delete/update/append."""
+        if self._live_device is None:
+            mask = (np.ones(self.n_rows, dtype=bool) if self.live is None
+                    else self.live)
+            self._live_device = jnp.asarray(mask)
+        return self._live_device
 
     def host_column(self, name: str) -> np.ndarray:
         if self.columns_host is not None and name in self.columns_host:
@@ -161,7 +196,105 @@ class Table:
                 [self.host_column(cname), arr])
             self._stale_device.add(cname)
         self.n_rows += delta.n_rows
+        if self.live is not None:
+            self.live = np.concatenate(
+                [self.live, np.ones(delta.n_rows, dtype=bool)])
+        self._live_count = None
+        self._live_device = None
         return delta
+
+    def eval_predicate_host(self, pred: Predicate) -> np.ndarray:
+        """Host-side DNF predicate evaluation over the encoded columns.
+
+        Categorical atoms compare dictionary CODES against the encoded value
+        (-1 for values the dictionary has never seen) — numerically, exactly
+        as the device path does after bind_predicate, so a host mutation and
+        a device scan agree on which rows match.
+        """
+        cols_f32: dict[str, np.ndarray] = {}   # one cast per column, not atom
+        disj = np.zeros(self.n_rows, dtype=bool)
+        for conj in pred.disjuncts:
+            m = np.ones(self.n_rows, dtype=bool)
+            for a in conj.atoms:
+                if self.schema.column(a.column).kind is ColumnKind.CATEGORICAL:
+                    enc = float(self.encode_value(a.column, a.value))
+                else:
+                    enc = float(a.value)
+                col = cols_f32.get(a.column)
+                if col is None:
+                    col = self.host_column(a.column).astype(np.float32)
+                    cols_f32[a.column] = col
+                m &= _NP_CMP[a.op](col, np.float32(enc))
+            disj |= m
+        return disj
+
+    def _matched_live(self, predicate: Predicate) -> np.ndarray:
+        match = self.eval_predicate_host(predicate)
+        if self.live is not None:
+            match &= self.live
+        return np.flatnonzero(match).astype(np.int64)
+
+    def _tombstone(self, idx: np.ndarray) -> None:
+        if not idx.size:
+            return   # no-match mutation: stay on the live-is-None fast paths
+        if self.live is None:
+            self.live = np.ones(self.n_rows, dtype=bool)
+        self.live[idx] = False
+        self._live_count = None
+        self._live_device = None
+
+    def delete(self, predicate: Predicate) -> TableMutation:
+        """Tombstone every live row matching `predicate`.
+
+        Rows are marked dead in the host mask, never moved: physical indices
+        stay stable (the id scheme the sample-maintenance layer relies on),
+        and the dead slots are reclaimed by striped-block compaction, not by
+        rewriting the table. Returns the TableMutation the sampling layer
+        needs to ghost its copies and decrement live stratum counts.
+        """
+        idx = self._matched_live(predicate)
+        tomb_cols = {c: self.host_column(c)[idx].copy()
+                     for c in self.schema.column_names}
+        self._tombstone(idx)
+        return TableMutation(self.schema.name, idx, tomb_cols, None)
+
+    def update(self, predicate: Predicate, assignments: Mapping) -> TableMutation:
+        """Update matching live rows: tombstone the old versions and append
+        re-encoded copies with `assignments` applied (LSM-style
+        tombstone+insert, so updates ride the existing delta machinery).
+
+        `assignments` maps column name -> new RAW value (scalar, broadcast to
+        every matched row, or an array of per-row values). Categorical
+        assignments may introduce new dictionary values — the dictionary
+        extends exactly as for an append. Atomic: the delta is validated and
+        committed by `append` BEFORE any row is tombstoned, so a rejected
+        assignment leaves the table untouched.
+        """
+        unknown = set(assignments) - set(self.schema.column_names)
+        if unknown:
+            raise KeyError(f"update assigns unknown columns {sorted(unknown)}")
+        idx = self._matched_live(predicate)
+        tomb_cols = {c: self.host_column(c)[idx].copy()
+                     for c in self.schema.column_names}
+        raw: dict[str, np.ndarray] = {}
+        for cname in self.schema.column_names:
+            if cname in assignments:
+                vals = np.asarray(assignments[cname])
+                if vals.ndim == 0:
+                    vals = np.full(len(idx), vals[()])
+                elif len(vals) != len(idx):
+                    raise ValueError(
+                        f"assignment {cname}: length {len(vals)} != "
+                        f"{len(idx)} matched rows")
+                raw[cname] = vals
+            elif self.schema.column(cname).kind is ColumnKind.CATEGORICAL:
+                # decode so append re-encodes against the (same) dictionary
+                raw[cname] = self.dictionaries[cname][tomb_cols[cname]]
+            else:
+                raw[cname] = tomb_cols[cname]
+        delta = self.append(raw) if len(idx) else None
+        self._tombstone(idx)
+        return TableMutation(self.schema.name, idx, tomb_cols, delta)
 
 
 def get_or_assign_codes(keys: list, lookup: dict) -> tuple[np.ndarray, list]:
@@ -192,8 +325,15 @@ def _encode_against(values: np.ndarray, dictionary: np.ndarray
     uniq, inverse = np.unique(values, return_inverse=True)
     lookup = {v: i for i, v in enumerate(dictionary.tolist())}
     uniq_codes, new_vals = get_or_assign_codes(uniq.tolist(), lookup)
-    new_arr = (np.asarray(new_vals, dtype=dictionary.dtype)
-               if new_vals else np.empty(0, dtype=dictionary.dtype))
+    if new_vals:
+        # Same-kind values keep their natural dtype so the later concatenate
+        # PROMOTES the dictionary width — forcing dictionary.dtype would
+        # silently truncate a string longer than any existing entry.
+        new_arr = np.asarray(new_vals)
+        if new_arr.dtype.kind != dictionary.dtype.kind:
+            new_arr = new_arr.astype(dictionary.dtype)
+    else:
+        new_arr = np.empty(0, dtype=dictionary.dtype)
     return uniq_codes[inverse].astype(np.int32), new_arr
 
 

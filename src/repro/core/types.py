@@ -76,6 +76,37 @@ class TableDelta:
     new_dict_values: dict[str, np.ndarray]
 
 
+@dataclasses.dataclass
+class TableMutation:
+    """One delete/update's worth of tombstoned (and re-inserted) rows.
+
+    The mutation protocol (docs/MAINTENANCE.md): `Table.delete` marks matched
+    live rows dead in the host tombstone mask — physical rows never move, so
+    a row's physical index is a STABLE id that sample families can key their
+    per-row inclusion metadata on. `Table.update` additionally re-encodes the
+    touched rows with the assignments applied and appends them as an ordinary
+    `TableDelta` (tombstone-the-old + insert-the-new, LSM style), so updated
+    rows ride the existing append/merge machinery unchanged.
+    """
+    table: str
+    # physical row indices newly tombstoned (sorted, unique)
+    tombstoned: np.ndarray
+    # column name -> encoded HOST values of the tombstoned rows, as of death —
+    # the sampling layer decrements per-stratum LIVE counts from these without
+    # re-reading the base table.
+    tombstoned_columns: dict[str, np.ndarray]
+    # re-inserted new versions (updates only; None for a pure delete)
+    delta: "TableDelta | None" = None
+
+    @property
+    def n_tombstoned(self) -> int:
+        return int(self.tombstoned.size)
+
+    @property
+    def n_reinserted(self) -> int:
+        return self.delta.n_rows if self.delta is not None else 0
+
+
 class CmpOp(enum.Enum):
     EQ = "=="
     NE = "!="

@@ -1,5 +1,7 @@
 """Table-2 estimator correctness: unbiasedness, variance calibration, CI
-coverage (paper §4.3 + Table 2)."""
+coverage (paper §4.3 + Table 2) — plus the estimator-under-mutation
+regression: every statistic a mutated family feeds downstream must match a
+clean from-scratch rebuild."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -112,6 +114,97 @@ def test_required_n_projection():
     stderr, lo, hi = est_lib.ci(est2, 0.95)
     half = float(np.asarray(stderr)[0]) * est_lib.z_value(0.95)
     assert half <= 0.013 * float(est2.value[0]), "projection met the 1% bound"
+
+
+def _prefix_inputs(fam, k, value_col="SessionTime", group_col="OS"):
+    """Canonical-order scan inputs for the prefix S(φ, k) of a family."""
+    from test_mutations import _canon
+    order = _canon(fam)
+    n = int(np.searchsorted(fam.entry_key_host[order], np.float32(k), "left"))
+    idx = order[:n]
+    x = fam.host_column(value_col)[idx].astype(np.float32)
+    freq = np.asarray(fam.freq)[idx]
+    rates = np.minimum(1.0, np.float32(k) / freq)
+    g = fam.host_column(group_col)[idx].astype(np.int32)
+    return x, rates, g
+
+
+def _bootstrap_quantiles(x, w, q=0.5, n_boot=40, seed=0):
+    """Weighted-quantile bootstrap percentile band (2.5/50/97.5)."""
+    rng = np.random.default_rng(seed)
+    n = len(x)
+    out = []
+    for _ in range(n_boot):
+        take = rng.integers(0, n, n)
+        xx, ww = x[take], w[take]
+        s = np.argsort(xx, kind="stable")
+        cw = np.cumsum(ww[s])
+        out.append(xx[s][min(np.searchsorted(cw, q * cw[-1]), n - 1)])
+    return np.percentile(out, [2.5, 50.0, 97.5])
+
+
+def test_mutated_family_estimators_match_clean_rebuild():
+    """Estimator-under-mutation regression: after a delete/update/append
+    churn, ALL SEVEN scan statistics (the GroupedMoments leaves), the
+    closed-form estimates + CIs for every aggregate, the histogram quantile,
+    and bootstrap quantile bands computed from the mutated family match a
+    clean from-scratch rebuild within float tolerance, at every resolution."""
+    from test_mutations import MutationMirror, _apply_op, _mk_db
+    from repro.core import executor as exec_lib
+    mirror = MutationMirror(_mk_db(n0=3000))
+    for op in [("delete", "City", 0), ("append", 250, 77),
+               ("update", "City", 2, 1), ("delete", "OS", 1),
+               ("append", 120, 78)]:
+        _apply_op(mirror, op)
+    fam = mirror.db.families["s"][("City",)]
+    oracle = mirror.oracle(("City",))
+    n_groups = mirror.db.tables["s"].cardinality("OS")
+
+    for k in fam.ks:
+        moms, quants, boots = [], [], []
+        for f in (fam, oracle):
+            x, rates, g = _prefix_inputs(f, k)
+            mom = est_lib.grouped_moments(
+                jnp.asarray(x), jnp.asarray(rates),
+                jnp.ones(len(x), bool), jnp.asarray(g), n_groups)
+            moms.append(mom)
+            quants.append(exec_lib.grouped_quantile(
+                jnp.asarray(x), jnp.asarray(1.0 / rates), jnp.asarray(g),
+                n_groups, 0.5))
+            boots.append(_bootstrap_quantiles(
+                x.astype(np.float64), 1.0 / rates.astype(np.float64)))
+        # all seven sufficient statistics, leaf by leaf
+        leaves_a = jax.tree.leaves(moms[0])
+        leaves_b = jax.tree.leaves(moms[1])
+        assert len(leaves_a) == 7
+        for a, b in zip(leaves_a, leaves_b):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+        # closed-form estimates + CIs for the additive/ratio aggregates
+        for agg in (AggOp.COUNT, AggOp.SUM, AggOp.AVG):
+            ea = est_lib.estimate(agg, moms[0])
+            eb = est_lib.estimate(agg, moms[1])
+            for fa, fb in [(ea.value, eb.value), (ea.n, eb.n)]:
+                np.testing.assert_allclose(np.asarray(fa), np.asarray(fb),
+                                           rtol=1e-6, atol=1e-6)
+            for ca, cb in zip(est_lib.ci(ea, 0.95), est_lib.ci(eb, 0.95)):
+                np.testing.assert_allclose(np.asarray(ca), np.asarray(cb),
+                                           rtol=1e-5, atol=1e-5)
+        # histogram quantile + its Table-2 density, then the closed-form CI
+        (qa, da), (qb, db_) = quants
+        np.testing.assert_allclose(np.asarray(qa), np.asarray(qb),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(da), np.asarray(db_),
+                                   rtol=1e-6, atol=1e-6)
+        eqa = est_lib.estimate(AggOp.QUANTILE, moms[0], quantile_value=qa,
+                               quantile_density=da, q=0.5)
+        eqb = est_lib.estimate(AggOp.QUANTILE, moms[1], quantile_value=qb,
+                               quantile_density=db_, q=0.5)
+        for ca, cb in zip(est_lib.ci(eqa, 0.95), est_lib.ci(eqb, 0.95)):
+            np.testing.assert_allclose(np.asarray(ca), np.asarray(cb),
+                                       rtol=1e-5, atol=1e-5)
+        # bootstrap quantile bands (same seeded resamples, same rows)
+        np.testing.assert_allclose(boots[0], boots[1], rtol=1e-7)
 
 
 def test_uniform_reduces_to_table2_count():

@@ -92,18 +92,22 @@ def _assert_families_identical(fam, oracle):
     assert fam.prefix_sizes == oracle.prefix_sizes
     np.testing.assert_array_equal(fam.entry_key_host, oracle.entry_key_host)
 
-    def canon(f):
-        return np.lexsort((np.asarray(f.unit), f.entry_key_host))
-    pa, pb = canon(fam), canon(oracle)
+    from test_mutations import _canon   # (ek, row_id): one shared total order
+    pa, pb = _canon(fam), _canon(oracle)
     np.testing.assert_array_equal(np.asarray(fam.freq)[pa],
                                   np.asarray(oracle.freq)[pb])
     np.testing.assert_array_equal(np.asarray(fam.unit)[pa],
                                   np.asarray(oracle.unit)[pb])
+    np.testing.assert_array_equal(fam.row_ids[pa], oracle.row_ids[pb])
     for c in fam.columns:
         np.testing.assert_array_equal(np.asarray(fam.columns[c])[pa],
                                       np.asarray(oracle.columns[c])[pb])
     np.testing.assert_array_equal(np.sort(fam.stratum_freqs),
                                   np.sort(oracle.stratum_freqs))
+    # append-only: live counts never diverge from the inclusion freqs
+    np.testing.assert_array_equal(fam.live_freqs, fam.stratum_freqs)
+    np.testing.assert_array_equal(np.sort(fam.live_freqs),
+                                  np.sort(oracle.live_freqs))
 
 
 @pytest.mark.parametrize("case_seed", [0, 1, 2])
