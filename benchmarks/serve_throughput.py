@@ -1,0 +1,161 @@
+"""Service-layer throughput: coalesced admission scheduling vs naive serving.
+
+N concurrent "sessions" (threads) each submit a stream of BlinkQL text
+queries — instantiations of one template, the §2.1 template-stable workload.
+Two serving disciplines over the SAME warm engine:
+
+* **naive**: each request runs `BlinkDB.query()` under a global lock (the
+  engine is single-caller) — one family scan per request, requests queue
+  behind each other;
+* **coalesced**: requests go through `BlinkQLService.submit()` — the
+  admission scheduler batches everything in flight inside its window into
+  one `query_batch` shared scan per (table, family, template) group
+  (docs/SERVICE.md). The answer cache is DISABLED so the comparison measures
+  scheduling+scan amortization, not memoization.
+
+Reports queries/sec plus p50/p99 per-request latency at 1/8/32 sessions and
+emits BENCH_serve.json (CI-tracked). The ISSUE-4 acceptance floor is
+coalesced qps ≥ 3× naive at 32 sessions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+try:
+    from benchmarks import _bootstrap  # noqa: F401  (module mode)
+except ImportError:
+    import _bootstrap  # noqa: F401  (script mode: benchmarks/ is sys.path[0])
+
+from repro.service import BlinkQLService, ServiceConfig
+from benchmarks import common
+
+SESSION_COUNTS = (1, 8, 32)
+
+
+def _texts(db, n: int) -> list[str]:
+    cities = db.tables["sessions"].dictionaries["City"]
+    return [
+        f"SELECT COUNT(*) FROM sessions WHERE City = "
+        f"'{cities[i % len(cities)]}' ERROR WITHIN 10% CONFIDENCE 95%"
+        for i in range(n)
+    ]
+
+
+def _run_sessions(n_sessions: int, per_session: int, texts: list[str],
+                  answer_fn) -> tuple[float, np.ndarray]:
+    """Drive n_sessions threads, each submitting per_session queries
+    round-robin from `texts`. Returns (elapsed_s, per-request latencies)."""
+    latencies = np.zeros(n_sessions * per_session)
+    barrier = threading.Barrier(n_sessions + 1)
+
+    def session(sid: int):
+        barrier.wait()
+        for j in range(per_session):
+            i = sid * per_session + j
+            t0 = time.perf_counter()
+            answer_fn(texts[i % len(texts)])
+            latencies[i] = time.perf_counter() - t0
+
+    threads = [threading.Thread(target=session, args=(s,))
+               for s in range(n_sessions)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0, latencies
+
+
+def run(n_rows: int = 400_000, session_counts=SESSION_COUNTS,
+        per_session: int = 16, batch_window_s: float = 0.01,
+        json_path: str | None = None) -> list[dict]:
+    db = common.conviva_db(n_rows=n_rows)
+    if ("City",) not in db.families["sessions"]:
+        db.add_family("sessions", ("City",))
+    texts = _texts(db, 64)
+
+    # Warm everything the timing should exclude: striping, the sequential
+    # program/ELP caches for the template, and the batched program per
+    # power-of-two pad class the scheduler's batches can hit.
+    from repro.service.parser import parse_blinkql
+    warm_queries = [parse_blinkql(t, db).normalized() for t in texts]
+    db.query(warm_queries[0])
+    q_pad = 1
+    while q_pad <= 64:
+        db.query_batch(warm_queries[:q_pad])
+        q_pad *= 2
+
+    lock = threading.Lock()
+
+    def naive(text: str):
+        q = parse_blinkql(text, db).normalized()
+        with lock:
+            return db.query(q)
+
+    rows = []
+    for n_sessions in session_counts:
+        total = n_sessions * per_session
+        svc = BlinkQLService(db, config=ServiceConfig(
+            batch_window_s=batch_window_s, use_cache=False))
+        t_coal, lat_coal = _run_sessions(n_sessions, per_session, texts,
+                                         svc.submit)
+        coalescing = svc.stats()["coalescing"]
+        svc.close()
+        t_naive, lat_naive = _run_sessions(n_sessions, per_session, texts,
+                                           naive)
+        qps_coal = total / t_coal
+        qps_naive = total / t_naive
+        speedup = qps_coal / qps_naive
+        rows.append({
+            "name": f"serve_throughput_s{n_sessions}",
+            "us_per_call": t_coal / total * 1e6,
+            "derived": (f"qps_coalesced={qps_coal:.1f} "
+                        f"qps_naive={qps_naive:.1f} "
+                        f"speedup={speedup:.2f}x "
+                        f"batchsize={coalescing:.1f} "
+                        f"p99_coal={np.percentile(lat_coal, 99) * 1e3:.1f}ms"),
+            "n_sessions": n_sessions,
+            "queries_per_session": per_session,
+            "qps_coalesced": qps_coal,
+            "qps_naive": qps_naive,
+            "speedup": speedup,
+            "mean_batch_size": coalescing,
+            "latency_p50_coalesced_ms": float(np.percentile(lat_coal, 50) * 1e3),
+            "latency_p99_coalesced_ms": float(np.percentile(lat_coal, 99) * 1e3),
+            "latency_p50_naive_ms": float(np.percentile(lat_naive, 50) * 1e3),
+            "latency_p99_naive_ms": float(np.percentile(lat_naive, 99) * 1e3),
+            "batch_window_s": batch_window_s,
+            "n_rows": n_rows,
+        })
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_serve.json")
+    ap.add_argument("--n-rows", type=int, default=400_000)
+    ap.add_argument("--quick", action="store_true",
+                    help="small data + fewer queries (CI smoke)")
+    args = ap.parse_args()
+    kw = dict(json_path=args.json)
+    if args.quick:
+        kw.update(n_rows=60_000, per_session=8)
+    else:
+        kw.update(n_rows=args.n_rows)
+    rows = run(**kw)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+
+
+if __name__ == "__main__":
+    main()

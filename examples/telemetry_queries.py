@@ -1,9 +1,10 @@
-"""BlinkDB × LM training: bounded-error queries over training telemetry.
+"""BlinkDB × LM training: bounded-error BlinkQL over training telemetry.
 
 Trains a tiny model for a few steps, streams (step, domain, loss) records
-into a BlinkDB table, and answers ops-style questions with error bounds —
-the paper's technique applied to the training framework's own data plane
-(DESIGN.md §3 'first-class feature').
+into a BlinkDB table, and answers ops-style questions — submitted as
+BlinkQL TEXT through the service layer (parser → admission scheduler →
+coalesced shared scans → answer cache; docs/SERVICE.md) — the paper's §2
+user contract applied to the training framework's own data plane.
 
     PYTHONPATH=src python examples/telemetry_queries.py
 """
@@ -13,11 +14,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (AggOp, Atom, BlinkDB, CmpOp, EngineConfig, ErrorBound,
-                        Predicate, Query, QueryTemplate)
+from repro.core import (BlinkDB, EngineConfig, QueryTemplate)
 from repro.core import table as table_lib
 from repro.data.tokens import DataConfig, SyntheticTokenStream
 from repro.models import model as model_lib
+from repro.service import BlinkQLService, ServiceConfig
 from repro.train import optim as optim_lib
 from repro.train import step as step_lib
 from repro.train.loop import LoopConfig, Telemetry, train
@@ -52,25 +53,31 @@ def main() -> None:
                      [QueryTemplate(frozenset({"domain"}), 1.0)],
                      storage_budget_fraction=0.5)
 
-    # Ops question 1: per-domain mean loss, 10% error bound.
-    q = Query("telemetry", AggOp.AVG, "loss", group_by=("domain",),
-              bound=ErrorBound(0.10, 0.95))
-    ans = db.query(q)
-    print("\nper-domain AVG(loss) within 10%@95%:")
-    for g in sorted(ans.groups, key=lambda g: g.key)[:4]:
-        print(f"  domain {g.key[0]}: {g.estimate:.3f} ± {1.96*g.stderr:.3f}")
+    with BlinkQLService(db, config=ServiceConfig(batch_window_s=0.002)) as svc:
+        # Ops question 1: per-domain mean loss, 10% error bound.
+        ans = svc.submit(
+            "SELECT AVG(loss) FROM telemetry GROUP BY domain "
+            "ERROR WITHIN 10% AT CONFIDENCE 95%")
+        print("\nper-domain AVG(loss) within 10%@95%:")
+        for g in sorted(ans.groups, key=lambda g: g.key)[:4]:
+            print(f"  domain {g.key[0]}: {g.estimate:.3f} "
+                  f"± {1.96*g.stderr:.3f}")
 
-    # Ops question 2: how many late-phase high-grad-norm events?
-    q2 = Query("telemetry", AggOp.COUNT,
-               predicate=Predicate.where(Atom("step", CmpOp.GE, 30.0),
-                                         Atom("grad_norm", CmpOp.GT, 1.0)),
-               bound=ErrorBound(0.2, 0.95))
-    a2 = db.query(q2)
-    if a2.groups:
-        print(f"\nlate high-grad events ~= {a2.groups[0].estimate:.0f} "
-              f"± {1.96*a2.groups[0].stderr:.0f}")
-    else:
-        print("\nno late high-grad events in sample")
+        # Ops question 2: how many late-phase high-grad-norm events?
+        a2 = svc.submit(
+            "SELECT COUNT(*) FROM telemetry WHERE step >= 30 "
+            "AND grad_norm > 1.0 ERROR WITHIN 20% CONFIDENCE 95%")
+        if a2.groups:
+            print(f"\nlate high-grad events ~= {a2.groups[0].estimate:.0f} "
+                  f"± {1.96*a2.groups[0].stderr:.0f}")
+        else:
+            print("\nno late high-grad events in sample")
+
+        # Repeat of question 1: served from the answer cache (generation-
+        # validated — a telemetry append would evict it).
+        svc.submit("SELECT AVG(loss) FROM telemetry GROUP BY domain "
+                   "ERROR WITHIN 10% AT CONFIDENCE 95%")
+        print(f"\nservice stats: {svc.stats()}")
 
 
 if __name__ == "__main__":

@@ -68,9 +68,15 @@ def pick_k_for_error(fam: SampleFamily, n_probe_selected, n_required,
 
 
 def pick_k_for_time(fam: SampleFamily, model: LatencyModel,
-                    seconds: float) -> float:
-    """Largest K whose prefix is predicted to run within the bound."""
-    max_rows = model.max_rows_within(seconds)
+                    seconds: float, headroom_s: float = 0.0) -> float:
+    """Largest K whose prefix is predicted to run within the bound.
+
+    `headroom_s` is subtracted from the bound before projecting — the
+    admission scheduler passes its batching-window length here, so a
+    deadline-bound query that waits up to one window for coalescing still
+    lands inside the user's bound: the scan budget is what remains AFTER the
+    wait, not the full bound (docs/SERVICE.md)."""
+    max_rows = model.max_rows_within(max(seconds - headroom_s, 0.0))
     best = min(fam.ks)
     for k, n_rows in zip(fam.ks, fam.prefix_sizes):  # ks descending
         if n_rows <= max_rows:

@@ -120,7 +120,58 @@ class BlinkDB:
         self._elp_cache: dict = {}
         self._fk_maps: dict = {}      # (fact, dim, fk) -> np fk->row map
         self._append_epochs: dict[str, int] = {}  # table -> appends so far
+        # Sample-generation counters (service answer-cache validity,
+        # docs/SERVICE.md): one per (table, family), bumped whenever the
+        # family's CONTENT changes — merge, tombstone, rebuild, compaction,
+        # join-gather refresh — i.e. exactly where the invalidation matrix
+        # (docs/MAINTENANCE.md) retires derived state. A per-table FAMILY-SET
+        # generation additionally bumps when families are added/dropped, so a
+        # cached answer can also detect that §4.1 selection would now pick a
+        # different family.
+        self._generations: dict[tuple[str, tuple[str, ...]], int] = {}
+        self._family_set_gen: dict[str, int] = {}
+        # Hooks fired on every generation bump with (table, phi) — the
+        # service answer cache subscribes for eager eviction.
+        self._invalidation_listeners: list[Callable[[str, tuple[str, ...]], None]] = []
         self.last_solution: opt_lib.Solution | None = None
+
+    # ------------------------------------------------ generations & hooks
+    def family_generation(self, table_name: str, phi: tuple[str, ...]) -> int:
+        """Monotone content version of one sample family (0 = never built)."""
+        return self._generations.get((table_name, phi), 0)
+
+    def family_set_generation(self, table_name: str) -> int:
+        """Monotone version of the SET of families on a table — bumps when a
+        family is added or dropped (a cached answer's §4.1 selection could
+        change even if its own family's rows didn't)."""
+        return self._family_set_gen.get(table_name, 0)
+
+    def add_invalidation_listener(
+            self, fn: Callable[[str, tuple[str, ...]], None]) -> None:
+        """Subscribe to generation bumps. `fn(table, phi)` fires synchronously
+        on every family-content change; `fn(table, None)` on family-set
+        changes. Listeners must not call back into the engine."""
+        self._invalidation_listeners.append(fn)
+
+    def remove_invalidation_listener(
+            self, fn: Callable[[str, tuple[str, ...]], None]) -> None:
+        """Unsubscribe (no-op if not registered) — a closed service must not
+        leave its cache hooked on a long-lived engine."""
+        try:
+            self._invalidation_listeners.remove(fn)
+        except ValueError:
+            pass
+
+    def _bump_generation(self, table_name: str,
+                         phi: tuple[str, ...] | None) -> None:
+        if phi is None:
+            self._family_set_gen[table_name] = \
+                self._family_set_gen.get(table_name, 0) + 1
+        else:
+            key = (table_name, phi)
+            self._generations[key] = self._generations.get(key, 0) + 1
+        for fn in self._invalidation_listeners:
+            fn(table_name, phi)
 
     # ------------------------------------------------------------- offline
     def register_table(self, name: str, tbl: table_lib.Table) -> None:
@@ -139,6 +190,9 @@ class BlinkDB:
                 del cache[k]
         for k in [k for k in self._fk_maps if name in k[:2]]:
             del self._fk_maps[k]
+        for phi in self.families.get(name, {}):
+            self._bump_generation(name, phi)
+        self._bump_generation(name, None)
         self._invalidate_as_dimension(name)
 
     def _invalidate_as_dimension(self, name: str) -> None:
@@ -161,6 +215,10 @@ class BlinkDB:
                 if fam_stale:
                     self._striped.pop((fact_name, p), None)
                     self._drop_programs(fact_name, p)
+                    # The dimension's data changed under this fact family's
+                    # gathered join columns — answers computed through them
+                    # are stale (service cache rides this bump).
+                    self._bump_generation(fact_name, p)
 
     def candidate_stats(self, table_name: str) -> Callable[[frozenset[str]], tuple[float, float, float]]:
         """stats(phi) -> (Store(φ), |D(φ)|, Δ(φ)) from table statistics."""
@@ -219,14 +277,21 @@ class BlinkDB:
             del self.families[table_name][phi]
             self._striped.pop((table_name, phi), None)
             self._drop_programs(table_name, phi)
+            self._bump_generation(table_name, phi)
         for phi in sorted(wanted - current):
             fam = samp_lib.build_family(tbl, phi, self.config.k1, self.config.c,
                                         self.config.m, seed=seed)
             self.families[table_name][phi] = fam
+            self._bump_generation(table_name, phi)
+        set_changed = bool((current - wanted) or (wanted - current))
         if () not in self.families[table_name]:
             self.families[table_name][()] = samp_lib.build_uniform_family(
                 tbl, self.config.uniform_fraction, self.config.c,
                 self.config.m, seed=seed)
+            self._bump_generation(table_name, ())
+            set_changed = True
+        if set_changed:
+            self._bump_generation(table_name, None)
         return sol
 
     def add_family(self, table_name: str, phi: Sequence[str],
@@ -244,10 +309,14 @@ class BlinkDB:
             fam = samp_lib.build_family(tbl, phi_t, self.config.k1,
                                         self.config.c, self.config.m,
                                         seed=seed)
-        self.families.setdefault(table_name, {})[phi_t] = fam
+        is_new = phi_t not in self.families.setdefault(table_name, {})
+        self.families[table_name][phi_t] = fam
         # Replacing a family orphans anything compiled against its columns.
         self._striped.pop((table_name, phi_t), None)
         self._drop_programs(table_name, phi_t)
+        self._bump_generation(table_name, phi_t)
+        if is_new:
+            self._bump_generation(table_name, None)
 
     def append_rows(self, table_name: str, raw: Mapping[str, np.ndarray],
                     seed: int | None = None) -> AppendReport:
@@ -357,6 +426,7 @@ class BlinkDB:
                     start_row=delta.start_row)
             fams[phi] = merged
             freqs[phi] = (old_freqs, merged.live_freqs)
+            self._bump_generation(table_name, phi)
             key = (table_name, phi)
             striped = self._striped.get(key)
             if striped is not None:
@@ -435,6 +505,7 @@ class BlinkDB:
             fams[phi] = fam2
             report.freqs[phi] = (fam.live_freqs, fam2.live_freqs)
             report.tombstoned_sampled[phi] = tblock.n_sampled
+            self._bump_generation(table_name, phi)
             key = (table_name, phi)
             striped = self._striped.get(key)
             if striped is not None:
@@ -466,6 +537,7 @@ class BlinkDB:
         self._striped[key] = fresh
         if fresh.shape_class != striped.shape_class:
             self._drop_programs(table_name, phi)
+        self._bump_generation(table_name, phi)
         return True
 
     # ------------------------------------------------------------- runtime
@@ -721,10 +793,13 @@ class BlinkDB:
                                          rows_read, dt, confidence)
 
     def _pick_k_for_time(self, table_name: str, q: Query,
-                         phi: tuple[str, ...]) -> float:
+                         phi: tuple[str, ...],
+                         headroom_s: float = 0.0) -> float:
         """§4.2 latency profile: calibrate t(rows) on the smallest
         resolutions, then pick the largest K inside the bound. Shared by
-        query() and query_batch() (timing probes are inherently sequential)."""
+        query() and query_batch() (timing probes are inherently sequential).
+        `headroom_s` shrinks the bound's scan budget — the admission
+        scheduler reserves its batching window this way (docs/SERVICE.md)."""
         fam = self.families[table_name][phi]
         probes = elp_lib.run_probes(
             fam,
@@ -734,7 +809,8 @@ class BlinkDB:
         model = elp_lib.fit_latency([p.rows_read for p in probes],
                                     [p.elapsed_s for p in probes])
         self._latency[(table_name, phi)] = model
-        return elp_lib.pick_k_for_time(fam, model, q.bound.seconds)
+        return elp_lib.pick_k_for_time(fam, model, q.bound.seconds,
+                                       headroom_s=headroom_s)
 
     # ------------------------------------------------- batched shared scans
     def _plan_batch_job(self, parent: int, order: int, q: Query,
@@ -813,7 +889,8 @@ class BlinkDB:
         dt = time.perf_counter() - t0
         return jax.tree.map(lambda x: x[:n_q], mom), dt
 
-    def query_batch(self, queries: Sequence[Query]) -> list[Answer]:
+    def query_batch(self, queries: Sequence[Query],
+                    deadline_headroom_s: float = 0.0) -> list[Answer]:
         """Execute N concurrent queries, sharing one family scan per
         (table, family, template) group.
 
@@ -825,6 +902,13 @@ class BlinkDB:
         per-query moment slices unpack into ordinary Answers. Estimates are
         identical to sequential query() calls — only the HBM traffic and
         dispatch overhead are amortized. See docs/BATCHING.md.
+
+        `deadline_headroom_s` (the admission scheduler's batching window)
+        tightens every TimeBound query's scan budget by that amount, so a
+        query that waited up to one window for coalescing still meets its
+        bound end to end. TimeBound ELP decisions made under a nonzero
+        headroom are cached under a headroom-qualified key — they must not
+        leak into direct query() calls projecting against the full bound.
         """
         queries = list(queries)
         if not queries:
@@ -836,6 +920,11 @@ class BlinkDB:
             for sq in rewrite_disjuncts(q):
                 jobs.append(self._plan_batch_job(pi, n_subs[pi], sq, sel_cache))
                 n_subs[pi] += 1
+        if deadline_headroom_s:
+            for job in jobs:
+                if isinstance(job.q.bound, TimeBound):
+                    job.elp_key = job.elp_key + (
+                        round(float(deadline_headroom_s), 6),)
 
         # ELP resolution (§4.2/§4.4): cached templates skip straight to K;
         # uncached ErrorBound queries share one batched probe scan per group;
@@ -848,7 +937,8 @@ class BlinkDB:
             elif isinstance(job.q.bound, ErrorBound):
                 probe_groups.setdefault(job.scan_key, []).append(job)
             elif isinstance(job.q.bound, TimeBound):
-                job.k = self._pick_k_for_time(job.table, job.q, job.phi)
+                job.k = self._pick_k_for_time(job.table, job.q, job.phi,
+                                              headroom_s=deadline_headroom_s)
                 self._elp_cache[job.elp_key] = job.k
             else:
                 job.k = fam.ks[0]  # no bound: most accurate available sample

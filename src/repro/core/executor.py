@@ -215,14 +215,26 @@ def stripe_family(fam: SampleFamily, n_shards: int,
             a = np.concatenate([a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
         return np.ascontiguousarray(a.reshape(n_local, n_shards).T)  # [S, n_local]
 
-    unit = (np.asarray(fam.unit) if fam.unit is not None
-            else np.asarray(fam.entry_key) / np.maximum(np.asarray(fam.freq), 1e-30))
+    # Read host mirrors wherever they exist (the family's own device arrays
+    # are LAZY — sampling._LazyFamilyColumns — and the striping pass must not
+    # be what materializes them; gathered join columns have no host mirror
+    # and fall back to a device read, exactly as before).
     strat = (fam.row_strata if fam.row_strata is not None
              else np.zeros(n, dtype=np.int64))
+    entry_key = (fam.entry_key_host if fam.entry_key_host is not None
+                 else np.asarray(fam.entry_key))
+    freq = (fam.stratum_freqs.astype(np.float32)[fam.row_strata]
+            if fam.row_strata is not None else np.asarray(fam.freq))
+    if fam.unit_host is not None:
+        unit = fam.unit_host
+    elif fam.unit is not None:   # legacy eagerly-built family
+        unit = np.asarray(fam.unit)
+    else:
+        unit = entry_key / np.maximum(freq, 1e-30)
     host_block = {
-        "cols": {c: stripe(v, 0) for c, v in fam.columns.items()},
-        "freq": stripe(fam.freq, 1.0),
-        "entry_key": stripe(fam.entry_key, np.inf),
+        "cols": {c: stripe(fam.host_column(c), 0) for c in fam.columns},
+        "freq": stripe(freq, 1.0),
+        "entry_key": stripe(entry_key, np.inf),
         "valid": stripe(np.ones(n, dtype=bool), False),
         "unit": stripe(unit.astype(np.float32), np.inf),
         "strat": stripe(strat.astype(np.int32), 0),

@@ -58,6 +58,7 @@ def distribution_drift(old_freqs: np.ndarray, new_freqs: np.ndarray) -> float:
 class MaintenanceConfig:
     drift_threshold: float = 0.05     # TV distance triggering re-optimization
     change_fraction: float = 0.3      # Eq. 5 r: ≤30% of sample bytes may churn
+    storage_budget_fraction: float = 0.5   # §3.2 Eq. 3 budget per epoch
     period_s: float = 86400.0         # paper: daily
     # Ghost+tombstone slot fraction past which a family's striped block is
     # compacted (periodic restripe — not only on block growth). Rescale
@@ -156,6 +157,39 @@ class SampleMaintainer:
                     compacted.append(phi)
         return compacted
 
+    # -- workload-only epoch (template churn, no data delta) -------------------
+    def run_workload_epoch(self, new_templates: Sequence[QueryTemplate],
+                           seed: int | None = None) -> dict:
+        """§3.2 re-optimization driven purely by OBSERVED workload drift
+        (service WorkloadMonitor): the template set/weights changed but the
+        data did not, so the optimizer re-solves under the Eq.-5 change
+        budget and only the family SET moves — surviving families keep their
+        rows untouched (no data delta ⇒ no staleness, nothing to resample),
+        dropped ones free budget, newly chosen ones build fresh with the
+        epoch seed. Closes the ROADMAP workload-drift-epoch item: the §3.2
+        framework now reacts to template churn end-to-end, not only to data
+        deltas."""
+        self.epochs += 1
+        epoch_seed = (self.base_seed + self.epochs) if seed is None else seed
+        before = set(self.db.families[self.table_name])
+        new_templates = list(new_templates)
+        sol = self.db.build_samples(
+            self.table_name, new_templates,
+            storage_budget_fraction=self.config.storage_budget_fraction,
+            change_fraction=self.config.change_fraction,
+            seed=epoch_seed)
+        # Commit only on optimizer success: a failed epoch must not leave
+        # the maintainer switched onto templates the optimizer never
+        # consumed (later data-delta epochs would silently adopt them while
+        # the monitor's drift baseline says they were never adopted).
+        self.templates = new_templates
+        after = set(self.db.families[self.table_name])
+        return {"added": sorted(after - before),
+                "dropped": sorted(before - after),
+                "kept": sorted(after & before),
+                "objective": sol.objective, "storage": sol.storage_used,
+                "compacted": self.compact()}
+
     # -- one maintenance epoch -------------------------------------------------
     def run_epoch(self, new_table: table_lib.Table | None = None,
                   new_templates: Sequence[QueryTemplate] | None = None,
@@ -195,7 +229,7 @@ class SampleMaintainer:
                 # families (offline-sampling staleness fix, §2.1).
                 sol = self.db.build_samples(
                     self.table_name, self.templates,
-                    storage_budget_fraction=0.5,
+                    storage_budget_fraction=self.config.storage_budget_fraction,
                     change_fraction=self.config.change_fraction,
                     seed=epoch_seed)
                 for phi in stale:
@@ -231,7 +265,7 @@ class SampleMaintainer:
                  if d > self.config.drift_threshold]
         sol = self.db.build_samples(
             self.table_name, self.templates,
-            storage_budget_fraction=0.5,
+            storage_budget_fraction=self.config.storage_budget_fraction,
             change_fraction=self.config.change_fraction,
             seed=epoch_seed)
         if dicts_changed:

@@ -33,14 +33,66 @@ from repro.core import table as table_lib
 from repro.core.types import ColumnKind
 
 
+class _LazyFamilyColumns(table_lib._LazyColumns):
+    """Family-level lazy mirror (shares the refresh semantics with the
+    table-level one — table._LazyColumns).
+
+    The serving path reads only the STRIPED block (built host-side), so a
+    family produced by `merge_family`/`apply_tombstones`/`_assemble_family`
+    never needs its own device arrays unless someone asks — deferring them
+    cuts per-mutation host→device traffic to the striped scatters alone
+    (ROADMAP lazy-mirror item). Keys are always present (membership,
+    iteration, and deletion are host-only); only values upload lazily.
+    """
+
+    def __init__(self, mapping, owner: "SampleFamily", stale=()):
+        super().__init__(mapping)
+        self._owner = owner
+        self._stale = set(stale)
+
+    def _stale_keys(self) -> set:
+        return self._stale
+
+    def _host(self, key):
+        return self._owner.columns_host[key]
+
+    def __delitem__(self, key):
+        self._stale.discard(key)
+        super().__delitem__(key)
+
+    @property
+    def resident(self) -> frozenset[str]:
+        """Column names whose device buffers exist (materialized)."""
+        return frozenset(k for k in super().keys() if k not in self._stale)
+
+    def clone_for(self, owner: "SampleFamily") -> "_LazyFamilyColumns":
+        out = _LazyFamilyColumns({}, owner, self._stale)
+        for k in super().keys():
+            dict.__setitem__(out, k, dict.__getitem__(self, k))
+        return out
+
+
+# Device-mirror fields that materialize lazily from host state when a family
+# is constructed with them set to None (see SampleFamily.__getattribute__).
+_LAZY_DEVICE_FIELDS = ("columns", "freq", "entry_key", "unit")
+
+
 @dataclasses.dataclass
 class SampleFamily:
-    """Materialized SFam(φ): the largest sample + metadata for all resolutions."""
+    """Materialized SFam(φ): the largest sample + metadata for all resolutions.
+
+    The device-mirror fields (`columns`, `freq`, `entry_key`, `unit`) may be
+    constructed as None when the corresponding host mirrors are present: they
+    then materialize lazily on first attribute access. Queries read only the
+    striped executor block, so the incremental merge/tombstone paths never
+    pay the upload (`device_resident()` reports what has materialized).
+    """
     phi: tuple[str, ...]              # stratification columns (sorted)
     ks: tuple[float, ...]             # resolutions, descending: K_1 > K_1/c > ...
-    columns: dict[str, jax.Array]     # sampled rows, sorted by entry_key
-    freq: jax.Array                   # f32[n] stratum frequency F(x) per row
-    entry_key: jax.Array              # f32[n] = u * F(x), ascending
+    # sampled rows, sorted by entry_key (None ⇒ lazy from columns_host)
+    columns: dict[str, jax.Array] | None
+    freq: jax.Array | None            # f32[n] stratum frequency F(x) per row
+    entry_key: jax.Array | None       # f32[n] = u * F(x), ascending
     prefix_sizes: tuple[int, ...]     # |S(φ, K_i)| for each K_i (row counts)
     n_rows: int                       # rows materialized (= prefix_sizes[0])
     table_rows: int                   # LIVE rows in the original table
@@ -69,6 +121,79 @@ class SampleFamily:
     # (drift/stats; decremented by tombstones while stratum_freqs is not).
     row_ids: np.ndarray | None = None      # int64[n]
     stratum_live: np.ndarray | None = None # int64[D]; None ⇒ == stratum_freqs
+
+    def __getattribute__(self, name):
+        # Deliberate tradeoff: intercepting every attribute read costs one
+        # extra Python call + tuple test on hot-path reads (fam.ks etc.) —
+        # negligible next to the ms-scale scans those paths drive — in
+        # exchange for full transparency: no constructor or consumer
+        # changes, legacy eager families keep working. Generic all-field
+        # readers (repr, asdict, debuggers) DO materialize the mirrors;
+        # use lazy_replace/device_resident where that matters.
+        if name in _LAZY_DEVICE_FIELDS:
+            val = object.__getattribute__(self, name)
+            if val is None:
+                val = object.__getattribute__(self, "_materialize")(name)
+            return val
+        return object.__getattribute__(self, name)
+
+    def _materialize(self, name):
+        """Build one device mirror from host state; returns None when the
+        host source is absent (legacy pre-incremental families keep their
+        `unit=None` semantics)."""
+        raw = object.__getattribute__
+        if name == "columns":
+            hosts = raw(self, "columns_host")
+            if hosts is None:
+                return None
+            val = _LazyFamilyColumns({k: None for k in hosts}, self,
+                                     stale=hosts)
+        elif name == "freq":
+            strata = raw(self, "row_strata")
+            if strata is None:
+                return None
+            val = jnp.asarray(self.stratum_freqs.astype(np.float32)[strata])
+        elif name == "entry_key":
+            ek = raw(self, "entry_key_host")
+            if ek is None:
+                return None
+            val = jnp.asarray(ek)
+        else:  # unit
+            uh = raw(self, "unit_host")
+            if uh is None:
+                return None
+            val = jnp.asarray(uh)
+        setattr(self, name, val)
+        return val
+
+    def device_resident(self) -> frozenset[str]:
+        """Names of device mirrors that have actually materialized — empty
+        right after an incremental merge/tombstone pass (the laziness the
+        ROADMAP item asks for; tests assert on this)."""
+        raw = object.__getattribute__
+        out = set()
+        for name in ("freq", "entry_key", "unit"):
+            if raw(self, name) is not None:
+                out.add(name)
+        cols = raw(self, "columns")
+        if isinstance(cols, _LazyFamilyColumns):
+            out |= {f"columns.{c}" for c in cols.resident}
+        elif cols is not None:
+            out |= {f"columns.{c}" for c in cols}
+        return frozenset(out)
+
+    def lazy_replace(self, **changes) -> "SampleFamily":
+        """dataclasses.replace without touching (= materializing) the lazy
+        device mirrors; un-materialized fields stay un-materialized on the
+        copy."""
+        raw = object.__getattribute__
+        kw = {f.name: raw(self, f.name) for f in dataclasses.fields(self)}
+        kw.update(changes)
+        cols = kw["columns"]
+        out = SampleFamily(**kw)
+        if isinstance(cols, _LazyFamilyColumns):
+            out.columns = cols.clone_for(out)
+        return out
 
     def host_column(self, name: str) -> np.ndarray:
         if self.columns_host is not None and name in self.columns_host:
@@ -186,12 +311,10 @@ def _assemble_family(phi: tuple[str, ...], ks: tuple[float, ...],
     unit_host = units.astype(np.float32)[idx]
     return SampleFamily(
         phi=phi, ks=ks,
-        columns={name: jnp.asarray(a) for name, a in cols_host.items()},
-        freq=jnp.asarray(row_freq[idx]),
-        entry_key=jnp.asarray(ek),
+        columns=None, freq=None, entry_key=None,   # lazy device mirrors
         prefix_sizes=prefixes, n_rows=int(idx.size), table_rows=table_rows,
         n_distinct=len(incl_freqs), stratum_freqs=incl_freqs,
-        unit=jnp.asarray(unit_host),
+        unit=None,
         strata_keys=key_matrix, row_strata=codes[idx],
         entry_key_host=ek, columns_host=cols_host, unit_host=unit_host,
         row_ids=idx.astype(np.int64), stratum_live=freqs)
@@ -364,13 +487,10 @@ def merge_family(fam: SampleFamily, delta_columns: Mapping[str, np.ndarray],
                    else np.full(len(old_units), -1, dtype=np.int64))
     merged = SampleFamily(
         phi=phi, ks=ks,
-        columns={name: jnp.asarray(a) for name, a in cols_host.items()},
-        freq=jnp.asarray(merge_col(old_freq, block.freq)),
-        entry_key=jnp.asarray(ek_sorted),
+        columns=None, freq=None, entry_key=None, unit=None,  # lazy mirrors
         prefix_sizes=prefixes, n_rows=int(ek_sorted.size),
         table_rows=fam.table_rows + len(dcodes),
         n_distinct=len(new_freqs), stratum_freqs=new_freqs,
-        unit=jnp.asarray(unit_host),
         strata_keys=key_matrix,
         row_strata=merge_col(old_strata, block.strata.astype(np.int64)),
         entry_key_host=ek_sorted, columns_host=cols_host,
@@ -437,8 +557,9 @@ def apply_tombstones(fam: SampleFamily, row_ids: np.ndarray,
     block = TombstoneBlock(row_ids=fam.row_ids[dead], n_tombstoned=n_dead)
     table_rows = fam.table_rows - n_dead
     if not dead.any():
-        out = dataclasses.replace(fam, stratum_live=new_live,
-                                  table_rows=table_rows)
+        # lazy_replace, not dataclasses.replace: replace() reads every field
+        # and would materialize the device mirrors this path never needs.
+        out = fam.lazy_replace(stratum_live=new_live, table_rows=table_rows)
         return out, block
 
     keep = ~dead
@@ -447,16 +568,12 @@ def apply_tombstones(fam: SampleFamily, row_ids: np.ndarray,
     unit_host = (fam.unit_host if fam.unit_host is not None
                  else np.asarray(fam.unit))[keep]
     row_strata = fam.row_strata[keep]
-    row_freq = fam.stratum_freqs.astype(np.float32)[row_strata]
     prefixes = tuple(int(np.searchsorted(ek, k, side="left")) for k in fam.ks)
     out = SampleFamily(
         phi=fam.phi, ks=fam.ks,
-        columns={name: jnp.asarray(a) for name, a in cols_host.items()},
-        freq=jnp.asarray(row_freq),
-        entry_key=jnp.asarray(ek),
+        columns=None, freq=None, entry_key=None, unit=None,  # lazy mirrors
         prefix_sizes=prefixes, n_rows=int(ek.size), table_rows=table_rows,
         n_distinct=fam.n_distinct, stratum_freqs=fam.stratum_freqs,
-        unit=jnp.asarray(unit_host),
         strata_keys=fam.strata_keys, row_strata=row_strata,
         entry_key_host=ek, columns_host=cols_host, unit_host=unit_host,
         row_ids=fam.row_ids[keep], stratum_live=new_live)

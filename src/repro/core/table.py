@@ -25,25 +25,28 @@ _NP_CMP = {
 }
 
 
-class _LazyDeviceColumns(dict):
-    """Device-column dict whose appended entries re-upload lazily.
+class _LazyColumns(dict):
+    """Base for device-column dicts whose entries materialize lazily from a
+    host mirror on first ACCESS (item/values/items). Subclasses provide the
+    stale-key set and the host lookup. Shared by the table- and family-level
+    mirrors so the lazy-refresh semantics cannot drift apart.
 
-    `Table.append` only touches the host mirrors and marks the column stale;
-    the device copy refreshes on first ACCESS (item/values/items). The
-    sampled serving path never reads full base-table columns — only the
-    exact path and join gathers do — so steady-state ingest costs O(delta)
-    in host→device traffic instead of re-uploading the table each epoch.
+    Sharp edge (applies to every subclass): dict fast paths that bypass
+    `__getitem__` — `dict(d)`, `{**d}`, `d.get(k)` — skip the refresh;
+    consumers must stick to the overridden accessors.
     """
 
-    def __init__(self, mapping, owner: "Table"):
-        super().__init__(mapping)
-        self._owner = owner
+    def _stale_keys(self) -> set:
+        raise NotImplementedError
+
+    def _host(self, key):
+        raise NotImplementedError
 
     def _refresh(self, key) -> None:
-        owner = self._owner
-        if key in owner._stale_device:
-            super().__setitem__(key, jnp.asarray(owner.columns_host[key]))
-            owner._stale_device.discard(key)
+        stale = self._stale_keys()
+        if key in stale:
+            super().__setitem__(key, jnp.asarray(self._host(key)))
+            stale.discard(key)
 
     def __getitem__(self, key):
         self._refresh(key)
@@ -58,6 +61,25 @@ class _LazyDeviceColumns(dict):
         for k in list(super().keys()):
             self._refresh(k)
         return super().values()
+
+
+class _LazyDeviceColumns(_LazyColumns):
+    """Table-level lazy mirror: `Table.append` only touches the host mirrors
+    and marks the column stale; the device copy refreshes on first access.
+    The sampled serving path never reads full base-table columns — only the
+    exact path and join gathers do — so steady-state ingest costs O(delta)
+    in host→device traffic instead of re-uploading the table each epoch.
+    """
+
+    def __init__(self, mapping, owner: "Table"):
+        super().__init__(mapping)
+        self._owner = owner
+
+    def _stale_keys(self) -> set:
+        return self._owner._stale_device
+
+    def _host(self, key):
+        return self._owner.columns_host[key]
 
 
 @dataclasses.dataclass

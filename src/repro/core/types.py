@@ -128,6 +128,28 @@ def cmp_fns():
     }
 
 
+def _canon_value(v) -> Any:
+    """Canonical hashable Python scalar for a predicate constant: numpy
+    scalars fold onto their Python equivalents so `Atom("c", EQ, np.str_("x"))`
+    and `Atom("c", EQ, "x")` hash identically (cache keys and QCS stats must
+    not split on the producer's array library)."""
+    if isinstance(v, (bool, np.bool_)):
+        return bool(v)
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        return float(v)
+    if isinstance(v, (str, np.str_)):
+        return str(v)
+    return v
+
+
+def _atom_order(a: "Atom") -> tuple:
+    """Total order over atoms of arbitrary value types (repr breaks ties
+    across types where `<` would raise)."""
+    return (a.column, a.op.value, type(a.value).__name__, repr(a.value))
+
+
 @dataclasses.dataclass(frozen=True)
 class Atom:
     """A single comparison predicate: `column <op> value`.
@@ -139,6 +161,10 @@ class Atom:
     op: CmpOp
     value: Any
 
+    def normalized(self) -> "Atom":
+        v = _canon_value(self.value)
+        return self if v is self.value else dataclasses.replace(self, value=v)
+
 
 @dataclasses.dataclass(frozen=True)
 class Conjunction:
@@ -148,6 +174,15 @@ class Conjunction:
     @property
     def columns(self) -> frozenset[str]:
         return frozenset(a.column for a in self.atoms)
+
+    def normalized(self) -> "Conjunction":
+        """Canonical atom order + duplicate-atom elimination (AND is
+        idempotent): syntactic permutations of one conjunction compare and
+        hash equal."""
+        atoms = sorted((a.normalized() for a in self.atoms), key=_atom_order)
+        out: list[Atom] = [a for i, a in enumerate(atoms)
+                           if i == 0 or a != atoms[i - 1]]
+        return Conjunction(tuple(out))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,6 +205,16 @@ class Predicate:
         for d in self.disjuncts:
             out |= d.columns
         return out
+
+    def normalized(self) -> "Predicate":
+        """Sorted conjunct order + per-conjunct canonical atom order +
+        duplicate-disjunct elimination (OR is idempotent). Disjunct order is
+        NOT semantic for the union rewrite, so sorting is answer-preserving."""
+        conjs = sorted((c.normalized() for c in self.disjuncts),
+                       key=lambda c: tuple(_atom_order(a) for a in c.atoms))
+        out: list[Conjunction] = [c for i, c in enumerate(conjs)
+                                  if i == 0 or c != conjs[i - 1]]
+        return Predicate(tuple(out))
 
 
 class AggOp(enum.Enum):
@@ -215,6 +260,32 @@ class Query:
     def where_group_columns(self) -> frozenset[str]:
         """Query template columns: WHERE ∪ GROUP BY (paper's φ^T)."""
         return self.predicate.columns | frozenset(self.group_by)
+
+    def normalized(self) -> "Query":
+        """Canonical, hashable form: normalized predicate plus semantically
+        inert fields folded to defaults (COUNT ignores the value column;
+        `quantile` only matters for QUANTILE), so cache keys and QCS stats
+        never split on syntactic permutations of one query. Idempotent."""
+        bound = self.bound
+        if isinstance(bound, ErrorBound):
+            bound = ErrorBound(float(bound.eps), float(bound.confidence),
+                               bool(bound.relative))
+        elif isinstance(bound, TimeBound):
+            bound = TimeBound(float(bound.seconds), float(bound.confidence))
+        return dataclasses.replace(
+            self,
+            predicate=self.predicate.normalized(),
+            value_column=None if self.agg is AggOp.COUNT else self.value_column,
+            group_by=tuple(str(c) for c in self.group_by),
+            quantile=(float(self.quantile) if self.agg is AggOp.QUANTILE
+                      else 0.5),
+            bound=bound,
+            joins=tuple(self.joins))
+
+
+def normalize_query(q: Query) -> Query:
+    """Module-level alias of Query.normalized (service cache/workload keys)."""
+    return q.normalized()
 
 
 @dataclasses.dataclass(frozen=True)

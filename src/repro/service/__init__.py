@@ -1,0 +1,17 @@
+"""BlinkQL service layer: the paper's user-facing contract (§2) on top of the
+core engine — a SQL dialect with `ERROR WITHIN x% CONFIDENCE y%` /
+`WITHIN n SECONDS` clauses, served to many concurrent sessions through an
+admission scheduler that coalesces compatible queries into shared scans,
+backed by a generation-validated answer cache and a workload monitor that
+drives §3.2 re-optimization on template churn. See docs/SERVICE.md."""
+from repro.service.cache import AnswerCache, CacheStats
+from repro.service.parser import BlinkQLError, parse_blinkql
+from repro.service.scheduler import (AdmissionError, BlinkQLService,
+                                     ServiceConfig)
+from repro.service.workload import WorkloadConfig, WorkloadMonitor
+
+__all__ = [
+    "AnswerCache", "CacheStats", "BlinkQLError", "parse_blinkql",
+    "AdmissionError", "BlinkQLService", "ServiceConfig",
+    "WorkloadConfig", "WorkloadMonitor",
+]

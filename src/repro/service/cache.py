@@ -1,0 +1,145 @@
+"""Generation-validated answer cache.
+
+Keys are NORMALIZED queries (types.Query.normalized — canonical atom/conjunct
+order, hashable), so syntactic permutations of one query share an entry.
+Values carry the sample generations the answer was computed under:
+
+* the generation of the family the answer ran on (`Answer.sample_phi`), and
+* the table's FAMILY-SET generation (a family added/dropped since could make
+  §4.1 selection pick a different family for the same query).
+
+Invalidation rides the engine's per-family invalidation matrix
+(docs/MAINTENANCE.md): every point where the matrix retires derived state —
+delta merges, tombstone passes, compactions, rebuilds, dimension-driven
+join-gather refreshes — bumps that family's generation counter and fires the
+engine's invalidation hooks. The cache subscribes, so appends/deletes/
+compactions evict exactly the entries whose family changed; entries on
+untouched families keep serving. Generations are re-checked on every `get`
+as well, so even a cache that missed a hook (constructed without one) can
+never serve a stale answer.
+
+Disjunctive (multi-conjunct) queries union sub-answers that may come from
+several families; their entries conservatively depend on every family of the
+table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+
+from repro.core.types import Answer, Query
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    invalidations: int = 0    # entries evicted by generation bumps
+    evictions: int = 0        # entries evicted by LRU capacity
+
+
+@dataclasses.dataclass
+class _Entry:
+    answer: Answer
+    table: str
+    # (phi, generation) dependencies + the table's family-set generation
+    fam_deps: tuple[tuple[tuple[str, ...], int], ...]
+    set_gen: int
+
+
+class AnswerCache:
+    """LRU answer cache over one BlinkDB instance. Thread-safe; `get`/`put`
+    take normalized queries (the caller normalizes once for cache + workload
+    keys)."""
+
+    def __init__(self, db, capacity: int = 1024, subscribe: bool = True):
+        self.db = db
+        self.capacity = int(capacity)
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+        self._entries: OrderedDict[Query, _Entry] = OrderedDict()
+        self._subscribed = subscribe
+        if subscribe:
+            db.add_invalidation_listener(self._on_invalidate)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def detach(self) -> None:
+        """Unhook from the engine and drop entries — a closed service's cache
+        must not keep paying eviction scans on every future mutation."""
+        if self._subscribed:
+            self.db.remove_invalidation_listener(self._on_invalidate)
+            self._subscribed = False
+        with self._lock:
+            self._entries.clear()
+
+    # -- engine hook ---------------------------------------------------------
+    def _on_invalidate(self, table: str, phi: tuple[str, ...] | None) -> None:
+        """Eager eviction on a generation bump: exactly the entries that
+        depend on (table, phi) — or, for a family-set change (phi None),
+        every entry on the table (selection could now differ)."""
+        with self._lock:
+            stale = [
+                q for q, e in self._entries.items()
+                if e.table == table
+                and (phi is None or any(p == phi for p, _ in e.fam_deps))
+            ]
+            for q in stale:
+                del self._entries[q]
+            self.stats.invalidations += len(stale)
+
+    # -- lookup / insert -----------------------------------------------------
+    def _current(self, entry: _Entry) -> bool:
+        if self.db.family_set_generation(entry.table) != entry.set_gen:
+            return False
+        return all(self.db.family_generation(entry.table, p) == g
+                   for p, g in entry.fam_deps)
+
+    def get(self, key: Query) -> Answer | None:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.stats.misses += 1
+                return None
+            if not self._current(entry):   # belt-and-braces vs missed hooks
+                del self._entries[key]
+                self.stats.invalidations += 1
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return entry.answer
+
+    def snapshot(self, table: str) -> dict:
+        """Generations of a table's family set as of NOW — taken by the
+        scheduler BEFORE executing a batch, so an answer computed against
+        pre-mutation samples can never be stamped with post-mutation
+        generations (a put-time read would validate it as current and serve
+        stale forever if a mutation landed mid-execution)."""
+        return {
+            "set": self.db.family_set_generation(table),
+            "fams": {p: self.db.family_generation(table, p)
+                     for p in self.db.families.get(table, {})},
+        }
+
+    def put(self, key: Query, answer: Answer,
+            snapshot: dict | None = None) -> None:
+        table = key.table
+        snap = snapshot if snapshot is not None else self.snapshot(table)
+        if len(key.predicate.disjuncts) > 1:
+            # Union answer: sub-answers may span several families.
+            phis = list(snap["fams"])
+        else:
+            phis = [tuple(answer.sample_phi)]
+        entry = _Entry(
+            answer=answer, table=table,
+            fam_deps=tuple((p, snap["fams"].get(p, 0)) for p in phis),
+            set_gen=snap["set"])
+        with self._lock:
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1

@@ -1,0 +1,337 @@
+"""Concurrent admission scheduler: many sessions, shared scans.
+
+The paper's serving story (§2, §4.4) assumes many analysts firing templated
+queries concurrently; the engine's `query_batch` already amortizes one family
+scan per (table, family, template) group but takes a pre-assembled batch from
+ONE caller. This scheduler closes the gap:
+
+* **Admission**: `submit()` is thread-safe and blocking-per-caller. Each
+  request is parsed (BlinkQL text) / taken as a `Query`, normalized
+  (types.Query.normalized), checked against the answer cache, and enqueued.
+  A full queue (`max_queue`) rejects with `AdmissionError` instead of
+  accepting work it cannot serve — a-priori admission control.
+* **Coalescing**: a single dispatcher thread drains the queue in batches: it
+  waits up to `batch_window_s` after the first pending request (so
+  near-simultaneous requests from different sessions land in one batch),
+  flushes early when `max_batch` requests are pending or a deadline-bound
+  request cannot afford the wait, deduplicates identical normalized queries,
+  and executes ONE `query_batch` call — the engine groups compatible queries
+  by (table, family, template) into shared scans (docs/BATCHING.md).
+* **Deadlines**: the batching window is threaded into ELP resolution
+  selection as headroom (`query_batch(deadline_headroom_s=window)`): a
+  TimeBound query that waited up to one window still picks a K whose scan
+  fits the REMAINING budget (§4.2); a bound tighter than the window flushes
+  the batch immediately rather than queuing past its deadline.
+* **Workload loop**: every answered query is recorded in the
+  `WorkloadMonitor`; when QCS drift crosses the threshold and a
+  `SampleMaintainer` is attached, the dispatcher runs a workload-only
+  re-optimization epoch (`run_workload_epoch`) between batches — template
+  churn alone (no data delta) re-shapes the sample set (§3.2).
+
+All engine execution happens on the dispatcher thread, so the engine's
+single-caller contract is preserved no matter how many sessions submit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Sequence
+
+from repro.core.types import Answer, Query, TimeBound
+from repro.service.cache import AnswerCache
+from repro.service.parser import parse_blinkql
+from repro.service.workload import WorkloadConfig, WorkloadMonitor
+
+
+class AdmissionError(RuntimeError):
+    """Queue depth exceeded: the request was rejected at admission."""
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    batch_window_s: float = 0.005   # coalescing window after first request
+    max_batch: int = 64             # flush threshold (engine chunks past 64)
+    max_queue: int = 1024           # admission bound
+    use_cache: bool = True
+    cache_capacity: int = 1024
+    workload: WorkloadConfig = dataclasses.field(default_factory=WorkloadConfig)
+    reoptimize: bool = True         # run workload epochs when drift triggers
+
+
+@dataclasses.dataclass
+class _Request:
+    query: Query                    # normalized (cache/workload key)
+    done: threading.Event
+    t_submit: float
+    answer: Answer | None = None
+    error: BaseException | None = None
+
+
+class BlinkQLService:
+    """The BlinkQL frontend over one BlinkDB engine.
+
+        svc = BlinkQLService(db, maintainer=maintainer)
+        ans = svc.submit("SELECT AVG(SessionTime) FROM sessions "
+                         "WHERE City = 'x' ERROR WITHIN 10% CONFIDENCE 95%")
+        ...
+        svc.close()
+
+    Context-manager friendly; `submit` may be called from any number of
+    threads ("sessions").
+    """
+
+    def __init__(self, db, maintainer=None,
+                 config: ServiceConfig | None = None):
+        self.db = db
+        self.maintainer = maintainer
+        self.config = config or ServiceConfig()
+        self.cache = (AnswerCache(db, self.config.cache_capacity)
+                      if self.config.use_cache else None)
+        if maintainer is not None:
+            self.monitor = WorkloadMonitor.from_templates(
+                maintainer.templates, self.config.workload)
+        else:
+            self.monitor = WorkloadMonitor(self.config.workload)
+        self.workload_epochs: list[dict] = []
+        self.n_batches = 0
+        self.n_queries = 0
+        self._queue: deque[_Request] = deque()
+        self._cond = threading.Condition()
+        self._stop = False
+        self._epoch_pending = False   # cache-hit path saw drift: wake & check
+        # Adaptive window: a size-1 batch means traffic is currently solo
+        # (one blocking session can never have two requests in flight), so
+        # the next batch flushes immediately instead of waiting a window
+        # nothing will fill. Any coalesced batch re-arms the window.
+        self._last_batch_size = self.config.max_batch
+        self._dispatcher = threading.Thread(target=self._dispatch_loop,
+                                            name="blinkql-dispatcher",
+                                            daemon=True)
+        self._dispatcher.start()
+
+    # ----------------------------------------------------------- lifecycle
+    def __enter__(self) -> "BlinkQLService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        self._dispatcher.join(timeout=10.0)
+        if self.cache is not None:
+            self.cache.detach()   # don't leave hooks on a long-lived engine
+
+    # ----------------------------------------------------------- admission
+    def submit(self, query: str | Query,
+               timeout: float | None = None) -> Answer:
+        """Parse (if text), admit, and block until answered.
+
+        Raises BlinkQLError on parse/resolution failures, AdmissionError when
+        the queue is full, and re-raises any engine-side execution error."""
+        t0 = time.monotonic()
+        if isinstance(query, str):
+            query = parse_blinkql(query, self.db)
+        q = query.normalized()
+        if self.cache is not None:
+            hit = self.cache.get(q)
+            if hit is not None:
+                # Deadline stats judge the SERVE time (≈0 for a hit), not
+                # the original scan's elapsed_s.
+                self.monitor.record(q, hit, cache_hit=True,
+                                    elapsed_s=time.monotonic() - t0)
+                # A cached workload still drifts: wake the dispatcher so the
+                # reoptimize trigger is evaluated even when nothing executes.
+                if self.config.reoptimize and self.maintainer is not None \
+                        and self.monitor.should_reoptimize(
+                            self.maintainer.table_name):
+                    with self._cond:
+                        self._epoch_pending = True
+                        self._cond.notify_all()
+                return hit
+        req = _Request(q, threading.Event(), time.monotonic())
+        with self._cond:
+            if self._stop:
+                raise RuntimeError("service is closed")
+            if len(self._queue) >= self.config.max_queue:
+                raise AdmissionError(
+                    f"admission queue full ({self.config.max_queue} pending)")
+            self._queue.append(req)
+            self._cond.notify_all()
+        if not req.done.wait(timeout):
+            # Free the admission slot: an abandoned request must not occupy
+            # max_queue (a no-op if the dispatcher already dequeued it).
+            with self._cond:
+                try:
+                    self._queue.remove(req)
+                except ValueError:
+                    pass
+            raise TimeoutError("query was not answered within the timeout")
+        if req.error is not None:
+            raise req.error
+        assert req.answer is not None
+        return req.answer
+
+    def submit_many(self, queries: Sequence[str | Query],
+                    timeout: float | None = None) -> list[Answer]:
+        """Convenience: submit a pre-assembled batch from one session (each
+        request still coalesces with everything else in flight)."""
+        return [self.submit(q, timeout) for q in queries]
+
+    # ----------------------------------------------------------- dispatcher
+    def _flush_deadline(self, batch: list[_Request], t_first: float) -> float:
+        """Latest time the pending batch may keep waiting: one window after
+        the first request, tightened by any TimeBound that cannot afford the
+        full window (its wait counts against its own bound)."""
+        if self._last_batch_size <= 1 and len(batch) <= 1:
+            return t_first   # solo traffic: flush now, don't tax latency
+        deadline = t_first + self.config.batch_window_s
+        for r in batch:
+            if isinstance(r.query.bound, TimeBound):
+                deadline = min(deadline,
+                               r.t_submit + 0.5 * r.query.bound.seconds)
+        return deadline
+
+    def _collect_batch(self) -> list[_Request]:
+        """Block until requests are pending, then drain for up to one
+        batching window (or max_batch / deadline pressure)."""
+        with self._cond:
+            while not self._queue and not self._stop \
+                    and not self._epoch_pending:
+                self._cond.wait()
+            if not self._queue:
+                return []
+            batch = [self._queue.popleft()]
+            t_first = batch[0].t_submit
+            while len(batch) < self.config.max_batch:
+                while self._queue and len(batch) < self.config.max_batch:
+                    batch.append(self._queue.popleft())
+                if len(batch) >= self.config.max_batch or self._stop:
+                    break
+                remaining = self._flush_deadline(batch, t_first) \
+                    - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cond.wait(timeout=remaining)
+                if not self._queue:
+                    # woke on timeout (or spurious): re-check clock
+                    if self._flush_deadline(batch, t_first) \
+                            <= time.monotonic():
+                        break
+        return batch
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            batch = self._collect_batch()
+            if batch:
+                self._execute(batch)
+            with self._cond:
+                self._epoch_pending = False
+                if self._stop and not self._queue:
+                    return
+            if self.config.reoptimize and self.maintainer is not None \
+                    and self.monitor.should_reoptimize(
+                        self.maintainer.table_name):
+                self._run_workload_epoch()
+
+    def _execute(self, batch: list[_Request]) -> None:
+        """One coalesced engine call for the whole batch. Identical
+        normalized queries collapse onto one slot (the scan answers once;
+        every duplicate request gets the same Answer)."""
+        self._last_batch_size = len(batch)
+        slots: dict[Query, int] = {}
+        unique: list[Query] = []
+        for r in batch:
+            if r.query not in slots:
+                slots[r.query] = len(unique)
+                unique.append(r.query)
+        # Generation snapshots BEFORE execution: an answer computed against
+        # pre-mutation samples must be cached under pre-mutation generations
+        # (a concurrent mutation then invalidates it instead of blessing it).
+        snapshots = ({t: self.cache.snapshot(t)
+                      for t in {q.table for q in unique}}
+                     if self.cache is not None else {})
+        try:
+            answers: list = self.db.query_batch(
+                unique, deadline_headroom_s=self.config.batch_window_s)
+        except BaseException:                # noqa: BLE001
+            # One bad query must not poison every session in the batch:
+            # fall back to per-query execution so each request gets its OWN
+            # answer or error (the error reaches only its submitter).
+            answers = []
+            for q in unique:
+                try:
+                    answers.append(self.db.query_batch(
+                        [q],
+                        deadline_headroom_s=self.config.batch_window_s)[0])
+                except BaseException as e:   # noqa: BLE001 — per-query
+                    answers.append(e)
+        self.n_batches += 1
+        self.n_queries += len(batch)
+        for q, ans in zip(unique, answers):
+            if self.cache is not None and not isinstance(ans, BaseException):
+                self.cache.put(q, ans, snapshot=snapshots[q.table])
+        claimed: set[int] = set()
+        for r in batch:
+            result = answers[slots[r.query]]
+            if isinstance(result, BaseException):
+                if id(result) in claimed:
+                    # Deduped requests must not share one exception object —
+                    # concurrent raises from several session threads would
+                    # fight over __traceback__.
+                    try:
+                        copy = type(result)(*result.args)
+                        copy.__cause__ = result
+                        result = copy
+                    except Exception:   # exotic ctor: fall back to sharing
+                        pass
+                claimed.add(id(result))
+                r.error = result
+            else:
+                r.answer = result
+                self.monitor.record(
+                    r.query, result,
+                    elapsed_s=time.monotonic() - r.t_submit)
+            r.done.set()
+
+    def _run_workload_epoch(self) -> None:
+        """Template churn past the drift threshold: §3.2 re-optimization with
+        the OBSERVED workload, no data delta (docs/SERVICE.md). Runs on the
+        dispatcher thread, serialized with query execution."""
+        templates = self.monitor.templates(self.maintainer.table_name)
+        if not templates:
+            # Nothing stratifiable in the window (pure aggregates): rebase so
+            # the trigger doesn't re-fire on every subsequent request.
+            self.monitor.rebase(table=self.maintainer.table_name)
+            return
+        try:
+            report = self.maintainer.run_workload_epoch(templates)
+            report["drift_score"] = self.monitor.drift_score(
+                self.maintainer.table_name)
+        except Exception as e:   # noqa: BLE001 — an epoch failure must not
+            # kill the dispatcher. Do NOT rebase: the optimizer never
+            # consumed these templates, so the drift signal must survive.
+            # Resetting the evidence counter backs the retry off until
+            # another min_queries of traffic accrues.
+            self.workload_epochs.append({"error": repr(e)})
+            self.monitor.defer()
+            return
+        self.workload_epochs.append(report)
+        self.monitor.rebase(templates)
+
+    # ----------------------------------------------------------- stats
+    def stats(self) -> dict:
+        out = {
+            "batches": self.n_batches,
+            "queries": self.n_queries,
+            "coalescing": (self.n_queries / self.n_batches
+                           if self.n_batches else 0.0),
+            "workload_epochs": len(self.workload_epochs),
+        }
+        if self.cache is not None:
+            out["cache"] = dataclasses.asdict(self.cache.stats)
+        return out

@@ -11,7 +11,8 @@ from repro.core import estimators as est_lib
 from repro.core import sampling as samp_lib
 from repro.core import table as table_lib
 from repro.core.optimizer import Candidate, Workload, solve_greedy
-from repro.core.types import AggOp, QueryTemplate
+from repro.core.types import (AggOp, Atom, CmpOp, Conjunction, ErrorBound,
+                              Predicate, Query, QueryTemplate, TimeBound)
 from repro.train import optim as optim_lib
 
 
@@ -118,6 +119,59 @@ def test_int8_moment_roundtrip(seed, nd, last):
     err = np.abs(np.asarray(back) - np.asarray(x))
     bound = np.asarray(jnp.max(jnp.abs(x))) / 127.0 + 1e-7
     assert err.max() <= bound * 1.01
+
+
+@st.composite
+def queries(draw):
+    """Random DNF queries with numpy/python-mixed literal types."""
+    def atom(_):
+        col = draw(st.sampled_from(["a", "b", "c", "d"]))
+        op = draw(st.sampled_from(list(CmpOp)))
+        val = draw(st.one_of(
+            st.floats(-10, 10, allow_nan=False).map(np.float32),
+            st.floats(-10, 10, allow_nan=False),
+            st.integers(-5, 5),
+            st.sampled_from(["x", "y"]).map(np.str_)))
+        return Atom(col, op, val)
+    conjs = tuple(
+        Conjunction(tuple(atom(None)
+                          for _ in range(draw(st.integers(0, 3)))))
+        for _ in range(draw(st.integers(1, 3))))
+    bound = draw(st.one_of(
+        st.none(),
+        st.floats(0.01, 0.5, allow_nan=False).map(
+            lambda e: ErrorBound(e, 0.95)),
+        st.floats(0.1, 5.0, allow_nan=False).map(TimeBound)))
+    return Query("t", draw(st.sampled_from([AggOp.COUNT, AggOp.SUM])),
+                 draw(st.sampled_from([None, "v"])),
+                 Predicate(conjs),
+                 group_by=draw(st.sampled_from([(), ("g",)])),
+                 bound=bound)
+
+
+@settings(max_examples=60, deadline=None)
+@given(queries(), st.randoms())
+def test_query_normalization_idempotent_and_permutation_invariant(q, rnd):
+    """normalized() is idempotent, hashable, and invariant under shuffling
+    conjunct/atom order — the invariant the service answer cache and QCS
+    stats rely on to not split entries on syntactic permutations."""
+    n1 = q.normalized()
+    assert n1.normalized() == n1              # idempotent
+    assert hash(n1.normalized()) == hash(n1)
+    shuffled_conjs = []
+    for conj in q.predicate.disjuncts:
+        atoms = list(conj.atoms)
+        rnd.shuffle(atoms)
+        shuffled_conjs.append(Conjunction(tuple(atoms)))
+    rnd.shuffle(shuffled_conjs)
+    q_perm = Query(q.table, q.agg, q.value_column,
+                   Predicate(tuple(shuffled_conjs)), q.group_by,
+                   q.quantile, q.bound)
+    n2 = q_perm.normalized()
+    assert n1 == n2 and hash(n1) == hash(n2)
+    # the semantic template is preserved
+    assert n1.where_group_columns == q.where_group_columns
+    assert n1.table == q.table and n1.agg is q.agg
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,585 @@
+"""BlinkQL service layer: parser, answer cache, workload monitor, admission
+scheduler — including the end-to-end contract: BlinkQL text in → parsed Query
+→ scheduler-coalesced shared scan → Answer bit-identical to the programmatic
+BlinkDB.query() path, and template-churn-only workloads triggering §3.2
+re-optimization epochs."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (AggOp, Atom, BlinkDB, CmpOp, EngineConfig, ErrorBound,
+                        Conjunction, Predicate, Query, QueryTemplate,
+                        TimeBound)
+from repro.core import elp as elp_lib
+from repro.core import table as table_lib
+from repro.core.maintenance import MaintenanceConfig, SampleMaintainer
+from repro.data import synth
+from repro.service import (AdmissionError, BlinkQLService, BlinkQLError,
+                           ServiceConfig, WorkloadConfig, WorkloadMonitor,
+                           parse_blinkql)
+from repro.service.cache import AnswerCache
+
+
+def _db(n_rows=20_000, seed=2, k1=400.0):
+    tbl = table_lib.from_columns("sessions",
+                                 synth.sessions_table(n_rows, seed=seed))
+    db = BlinkDB(EngineConfig(k1=k1, m=3, seed=1))
+    db.register_table("sessions", tbl)
+    db.add_family("sessions", ("City",))
+    db.add_family("sessions", ("OS",))
+    db.add_family("sessions", ())
+    return db
+
+
+def _assert_bit_identical(a, b):
+    assert a.sample_phi == b.sample_phi
+    assert a.sample_k == b.sample_k
+    ka = {g.key: g for g in a.groups}
+    kb = {g.key: g for g in b.groups}
+    assert ka.keys() == kb.keys()
+    for key in ka:
+        assert ka[key].estimate == kb[key].estimate
+        assert ka[key].stderr == kb[key].stderr
+        assert ka[key].ci_low == kb[key].ci_low
+        assert ka[key].ci_high == kb[key].ci_high
+
+
+# ---------------------------------------------------------------- parser
+
+def test_parse_full_statement():
+    db = _db()
+    city = db.tables["sessions"].dictionaries["City"][3]
+    q = parse_blinkql(
+        f"SELECT AVG(SessionTime) FROM sessions WHERE City = '{city}' "
+        f"AND Bitrate >= 700 GROUP BY OS ERROR WITHIN 10% AT CONFIDENCE 99%",
+        db)
+    assert q.table == "sessions" and q.agg is AggOp.AVG
+    assert q.value_column == "SessionTime"
+    assert q.group_by == ("OS",)
+    assert q.predicate == Predicate.where(Atom("City", CmpOp.EQ, str(city)),
+                                          Atom("Bitrate", CmpOp.GE, 700.0))
+    assert q.bound == ErrorBound(0.10, 0.99, relative=True)
+
+
+def test_parse_dnf_time_bound_and_quantile():
+    db = _db()
+    q = parse_blinkql(
+        "SELECT COUNT(*) FROM sessions WHERE OS = 'os1' AND Bitrate > 900 "
+        "OR OS = 'os2' WITHIN 2 SECONDS", db)
+    assert q.agg is AggOp.COUNT and q.value_column is None
+    assert len(q.predicate.disjuncts) == 2
+    assert q.predicate.disjuncts[0].atoms == (
+        Atom("OS", CmpOp.EQ, "os1"), Atom("Bitrate", CmpOp.GT, 900.0))
+    assert q.bound == TimeBound(2.0, 0.95)
+    q2 = parse_blinkql(
+        "SELECT QUANTILE(SessionTime, 0.9) FROM sessions", db)
+    assert q2.agg is AggOp.QUANTILE and q2.quantile == 0.9
+    assert q2.bound is None and q2.predicate == Predicate.true()
+
+
+def test_parse_absolute_error_bound():
+    db = _db()
+    q = parse_blinkql(
+        "SELECT SUM(Bitrate) FROM sessions ERROR WITHIN 500 CONFIDENCE 90%",
+        db)
+    assert q.bound == ErrorBound(500.0, 0.90, relative=False)
+
+
+@pytest.mark.parametrize("text,fragment", [
+    ("SELECT COUNT(*) FROM nope", "unknown table"),
+    ("SELECT COUNT(*) FROM sessions WHERE Cty = 'x'", "did you mean 'City'"),
+    ("SELECT AVG(SessionTime) FROM sessions GROUP BY SessionTime",
+     "must be categorical"),
+    ("SELECT AVG(SessionTime) FROM sessions GROUP BY City, OS",
+     "single column"),
+    ("SELECT MEDIAN(SessionTime) FROM sessions", "unknown aggregate"),
+    ("SELECT AVG(*) FROM sessions", "only valid for COUNT"),
+    ("SELECT COUNT(*) FROM sessions WHERE SessionTime = 'fast'",
+     "is numeric"),
+    ("SELECT COUNT(*) FROM sessions WHERE SessionTime = fast",
+     "does not parse as a number"),
+    ("SELECT COUNT(*) FROM sessions WHERE City ", "comparison operator"),
+    ("SELECT COUNT(*) FROM sessions ERROR WITHIN -5%", "must be positive"),
+    ("SELECT COUNT(*) FROM sessions WITHIN 2", "expected SECONDS"),
+    ("SELECT COUNT(*) FROM sessions trailing", "trailing"),
+    ("SELECT QUANTILE(SessionTime, 1.5) FROM sessions", "in (0, 1)"),
+    ("SELECT AVG(City) FROM sessions", "categorical column"),
+])
+def test_parse_errors_are_precise(text, fragment):
+    db = _db()
+    with pytest.raises(BlinkQLError, match=".*"):
+        try:
+            parse_blinkql(text, db)
+        except BlinkQLError as e:
+            assert fragment in str(e), f"{fragment!r} not in {e}"
+            raise
+
+
+def test_parse_unescapes_string_literals():
+    db = _db()
+    q = parse_blinkql(
+        r"SELECT COUNT(*) FROM sessions WHERE City = 'O\'Hare'", db)
+    assert q.predicate.disjuncts[0].atoms[0].value == "O'Hare"
+
+
+def test_parse_rejects_fractional_literal_on_int_dictionary():
+    db = _db()
+    tbl = table_lib.from_columns(
+        "ints", {"k": np.array([17, 18, 17], np.int64),
+                 "v": np.array([1.0, 2.0, 3.0], np.float32)},
+        categorical=["k"])
+    db.register_table("ints", tbl)
+    q = parse_blinkql("SELECT SUM(v) FROM ints WHERE k = 17", db)
+    assert q.predicate.disjuncts[0].atoms[0].value == 17
+    with pytest.raises(BlinkQLError, match="fractional"):
+        parse_blinkql("SELECT SUM(v) FROM ints WHERE k = 17.9", db)
+
+
+# ------------------------------------------------------- normalization
+
+def test_normalized_is_permutation_invariant_and_hashable():
+    a1 = Atom("City", CmpOp.EQ, np.str_("x"))
+    a2 = Atom("OS", CmpOp.NE, "os1")
+    a3 = Atom("Bitrate", CmpOp.GT, np.float32(700.0))
+    p = Predicate((Conjunction((a1, a2, a3)), Conjunction((a2,))))
+    p_perm = Predicate((Conjunction((a2,)), Conjunction((a3, a2, a1))))
+    q1 = Query("t", AggOp.COUNT, "x", p).normalized()
+    q2 = Query("t", AggOp.COUNT, None, p_perm).normalized()
+    assert q1 == q2 and hash(q1) == hash(q2)
+    assert q1.normalized() == q1          # idempotent
+    # COUNT folds the value column; non-COUNT must NOT
+    q3 = Query("t", AggOp.SUM, "x", p).normalized()
+    q4 = Query("t", AggOp.SUM, "y", p).normalized()
+    assert q3 != q4
+
+
+# ------------------------------------------------------- answer cache
+
+def test_cache_hit_and_per_family_invalidation():
+    db = _db()
+    cache = AnswerCache(db)
+    cities = db.tables["sessions"].dictionaries["City"]
+    q_city = Query("sessions", AggOp.COUNT,
+                   predicate=Predicate.where(Atom("City", CmpOp.EQ,
+                                                  cities[0])),
+                   bound=ErrorBound(0.1)).normalized()
+    q_os = Query("sessions", AggOp.AVG, "SessionTime",
+                 group_by=("OS",), bound=ErrorBound(0.1)).normalized()
+    a_city, a_os = db.query(q_city), db.query(q_os)
+    assert a_city.sample_phi == ("City",) and a_os.sample_phi == ("OS",)
+    cache.put(q_city, a_city)
+    cache.put(q_os, a_os)
+    assert cache.get(q_city) is a_city and cache.get(q_os) is a_os
+    # Compacting ONLY the City family evicts exactly the City entry.
+    db.query(q_city)   # materialize the striped block
+    assert db.compact_family("sessions", ("City",))
+    assert cache.get(q_city) is None
+    assert cache.get(q_os) is a_os
+    assert cache.stats.invalidations == 1
+
+
+def test_cache_rides_append_delete_invalidation():
+    db = _db()
+    cache = AnswerCache(db)
+    # second table: its entries must survive mutations of the first
+    other = table_lib.from_columns(
+        "other", {"k": np.array(["a", "b", "a", "c"]),
+                  "v": np.array([1.0, 2.0, 3.0, 4.0], np.float32)})
+    db.register_table("other", other)
+    db.add_family("other", ())
+    q1 = Query("sessions", AggOp.COUNT, bound=ErrorBound(0.2)).normalized()
+    q2 = Query("other", AggOp.SUM, "v").normalized()
+    cache.put(q1, db.query(q1))
+    cache.put(q2, db.query(q2))
+    raw = {c: np.asarray(v)[:200]
+           for c, v in synth.sessions_table(200, seed=9).items()}
+    db.append_rows("sessions", raw)     # merges every sessions family
+    assert cache.get(q1) is None        # evicted by the merge bump
+    assert cache.get(q2) is not None    # other table untouched
+    cache.put(q1, db.query(q1))
+    db.delete_rows("sessions",
+                   Predicate.where(Atom("OS", CmpOp.EQ, "os1")))
+    assert cache.get(q1) is None        # evicted by the tombstone bump
+    assert cache.get(q2) is not None
+
+
+def test_cache_snapshot_prevents_mid_execution_mutation_race():
+    """An answer computed against pre-mutation samples must be stored under
+    PRE-mutation generations: if a mutation lands between execution and
+    put(), the entry is born stale and the next get() rejects it."""
+    db = _db()
+    cache = AnswerCache(db)
+    q = Query("sessions", AggOp.COUNT, bound=ErrorBound(0.2)).normalized()
+    snap = cache.snapshot("sessions")        # scheduler: before execution
+    ans = db.query(q)                        # "execution"
+    raw = {c: np.asarray(v)[:100]
+           for c, v in synth.sessions_table(100, seed=5).items()}
+    db.append_rows("sessions", raw)          # mutation lands mid-flight
+    cache.put(q, ans, snapshot=snap)         # stamped with OLD generations
+    assert cache.get(q) is None              # never served as current
+
+
+def test_cache_lazy_validation_without_hooks():
+    """A cache constructed without the engine hook still never serves stale:
+    generations are re-checked on get."""
+    db = _db()
+    cache = AnswerCache(db, subscribe=False)
+    q = Query("sessions", AggOp.COUNT, bound=ErrorBound(0.2)).normalized()
+    cache.put(q, db.query(q))
+    raw = {c: np.asarray(v)[:100]
+           for c, v in synth.sessions_table(100, seed=3).items()}
+    db.append_rows("sessions", raw)
+    assert cache.get(q) is None
+
+
+# ------------------------------------------------------- workload monitor
+
+def test_workload_monitor_drift_and_templates():
+    mon = WorkloadMonitor.from_templates(
+        [QueryTemplate(frozenset({"City"}), 1.0)],
+        WorkloadConfig(window=64, min_queries=8, drift_threshold=0.4))
+    q_city = Query("sessions", AggOp.COUNT,
+                   predicate=Predicate.where(Atom("City", CmpOp.EQ, "c")))
+    q_osurl = Query("sessions", AggOp.COUNT,
+                    predicate=Predicate.where(Atom("OS", CmpOp.EQ, "o"),
+                                              Atom("URL", CmpOp.EQ, "u")))
+    for _ in range(4):
+        mon.record(q_city)
+    assert mon.drift_score("sessions") == 0.0
+    assert not mon.should_reoptimize("sessions")   # no drift yet
+    for _ in range(12):
+        mon.record(q_osurl)
+    assert mon.drift_score("sessions") == pytest.approx(12 / 16)
+    assert mon.should_reoptimize("sessions")
+    tpl = mon.templates("sessions")
+    assert tpl[0].columns == frozenset({"OS", "URL"})
+    assert tpl[0].weight == pytest.approx(12 / 16)
+    mon.rebase(tpl)
+    assert not mon.should_reoptimize("sessions")   # evidence reset
+
+
+def test_workload_monitor_target_stats():
+    mon = WorkloadMonitor()
+    q = Query("sessions", AggOp.COUNT,
+              predicate=Predicate.where(Atom("City", CmpOp.EQ, "c")),
+              bound=ErrorBound(0.1))
+    db = _db()
+    ans = db.query(Query("sessions", AggOp.COUNT,
+                         predicate=Predicate.where(
+                             Atom("City", CmpOp.EQ,
+                                  db.tables["sessions"].dictionaries["City"][0])),
+                         bound=ErrorBound(0.1)))
+    mon.record(q, ans)
+    st = mon.template_stats[("sessions", frozenset({"City"}))]
+    assert st.n == 1 and st.bound_met + st.bound_missed == 1
+
+
+def test_met_bound_uses_ci_half_width():
+    """The bound contract is on z·stderr (what required_n_for_error targets),
+    not the bare stderr: rel err 0.08 at 95% (half-width 0.157) MISSES a 10%
+    bound."""
+    from repro.core.types import GroupResult
+    from repro.service.workload import _met_bound
+    q = Query("t", AggOp.AVG, "v", bound=ErrorBound(0.10, 0.95))
+    groups = [GroupResult((), 100.0, 8.0, 0.0, 0.0, 50.0)]  # stderr/est=0.08
+    from repro.core.types import Answer
+    ans = Answer(q, groups, ("x",), 1.0, 10, 100, 0.01, 0.95)
+    assert _met_bound(q, ans) is False      # 1.96*0.08 = 0.157 > 0.10
+    groups_ok = [GroupResult((), 100.0, 4.0, 0.0, 0.0, 50.0)]  # 0.078 < 0.10
+    assert _met_bound(q, Answer(q, groups_ok, ("x",), 1.0, 10, 100,
+                                0.01, 0.95)) is True
+
+
+# ------------------------------------------------------- scheduler
+
+def test_service_end_to_end_matches_programmatic_query():
+    """Acceptance: BlinkQL text → parse → coalesced shared scan → Answer
+    bit-identical to BlinkDB.query() on the same engine."""
+    db = _db()
+    cities = db.tables["sessions"].dictionaries["City"]
+    texts = [
+        f"SELECT SUM(SessionTime) FROM sessions WHERE City = '{c}' "
+        f"ERROR WITHIN 10% CONFIDENCE 95%" for c in cities[:6]
+    ] + ["SELECT AVG(SessionTime) FROM sessions GROUP BY OS ERROR WITHIN 10%",
+         "SELECT COUNT(*) FROM sessions WHERE OS = 'os1' OR OS = 'os2'"]
+    with BlinkQLService(db, config=ServiceConfig(batch_window_s=0.02,
+                                                 use_cache=False)) as svc:
+        barrier = threading.Barrier(len(texts))
+        got: dict[int, object] = {}
+
+        def session(i):
+            barrier.wait()
+            got[i] = svc.submit(texts[i])
+
+        threads = [threading.Thread(target=session, args=(i,))
+                   for i in range(len(texts))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert svc.n_batches < len(texts), "nothing coalesced"
+    for i, text in enumerate(texts):
+        want = db.query(parse_blinkql(text, db).normalized())
+        _assert_bit_identical(want, got[i])
+
+
+def test_service_concurrent_mixed_bounds_and_deadline_k():
+    """Threaded clients with mixed error/time bounds: coalesced answers match
+    sequential query(); the deadline-bounded query picks the K that §4.2's
+    pick_k_for_time projects from the fitted latency model (same choice
+    _pick_k_for_time makes), under the scheduler's window headroom."""
+    db = _db()
+    cities = db.tables["sessions"].dictionaries["City"]
+    window = 0.01
+    bounds = [ErrorBound(0.1), ErrorBound(0.05, 0.99), None,
+              TimeBound(5.0), ErrorBound(0.2)]
+    queries = [
+        Query("sessions", AggOp.SUM, "SessionTime",
+              predicate=Predicate.where(Atom("City", CmpOp.EQ, cities[i])),
+              bound=b)
+        for i, b in enumerate(bounds)
+    ]
+    with BlinkQLService(db, config=ServiceConfig(batch_window_s=window,
+                                                 use_cache=False)) as svc:
+        got: dict[int, object] = {}
+        barrier = threading.Barrier(len(queries))
+
+        def session(i):
+            barrier.wait()
+            got[i] = svc.submit(queries[i])
+
+        threads = [threading.Thread(target=session, args=(i,))
+                   for i in range(len(queries))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for i, q in enumerate(queries):
+        if isinstance(q.bound, TimeBound):
+            continue   # wall-clock probes are not replayable
+        _assert_bit_identical(db.query(q.normalized()), got[i])
+    # Deadline query: K must equal the §4.2 projection from the model the
+    # service's probes fitted, with the batching window as headroom.
+    i_time = next(i for i, b in enumerate(bounds)
+                  if isinstance(b, TimeBound))
+    ans = got[i_time]
+    fam = db.families["sessions"][tuple(ans.sample_phi)]
+    model = db._latency[("sessions", tuple(ans.sample_phi))]
+    want_k = elp_lib.pick_k_for_time(fam, model, bounds[i_time].seconds,
+                                     headroom_s=window)
+    assert ans.sample_k == want_k
+
+
+def test_service_cache_serves_repeats_and_invalidates_on_append():
+    db = _db()
+    city = db.tables["sessions"].dictionaries["City"][0]
+    text = (f"SELECT COUNT(*) FROM sessions WHERE City = '{city}' "
+            f"ERROR WITHIN 10%")
+    with BlinkQLService(db, config=ServiceConfig(batch_window_s=0.0)) as svc:
+        a1 = svc.submit(text)
+        a2 = svc.submit("select count(*) FROM sessions "
+                        f"WHERE City = '{city}' ERROR WITHIN 10%")
+        assert a2 is a1                       # normalized-text cache hit
+        assert svc.cache.stats.hits == 1
+        raw = {c: np.asarray(v)[:300]
+               for c, v in synth.sessions_table(300, seed=7).items()}
+        db.append_rows("sessions", raw)
+        a3 = svc.submit(text)
+        assert a3 is not a1                   # evicted by the merge bump
+        assert a3.rows_total == a1.rows_total + 300
+
+
+def test_service_admission_control_rejects_past_max_queue():
+    db = _db(n_rows=5_000)
+    release = threading.Event()
+    orig = db.query_batch
+
+    def slow_batch(queries, **kw):
+        release.wait(5.0)
+        return orig(queries, **kw)
+
+    db.query_batch = slow_batch
+    cities = db.tables["sessions"].dictionaries["City"]
+    cfg = ServiceConfig(batch_window_s=0.0, max_queue=2, max_batch=1,
+                        use_cache=False)
+    with BlinkQLService(db, config=cfg) as svc:
+        errors, answers = [], []
+
+        def session(i):
+            q = Query("sessions", AggOp.COUNT,
+                      predicate=Predicate.where(
+                          Atom("City", CmpOp.EQ, cities[i])))
+            try:
+                answers.append(svc.submit(q))
+            except AdmissionError as e:
+                errors.append(e)
+
+        threads = [threading.Thread(target=session, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        time.sleep(0.3)       # let the queue saturate against the slow batch
+        release.set()
+        for t in threads:
+            t.join()
+    assert errors, "queue never rejected despite max_queue=2"
+    assert answers, "admitted requests must still be answered"
+
+
+def test_service_propagates_engine_errors():
+    db = _db(n_rows=5_000)
+    with BlinkQLService(db, config=ServiceConfig(batch_window_s=0.0,
+                                                 use_cache=False)) as svc:
+        with pytest.raises(ValueError, match="additive"):
+            # AVG over OR disjuncts is rejected by rewrite_disjuncts.
+            svc.submit("SELECT AVG(SessionTime) FROM sessions "
+                       "WHERE OS = 'os1' OR OS = 'os2'")
+        # dispatcher survives: next query answers fine
+        assert svc.submit("SELECT COUNT(*) FROM sessions").groups
+
+
+def test_bad_query_does_not_poison_coalesced_batch():
+    """A failing query in a shared window must error ONLY its submitter;
+    every other session's request still answers (per-query fallback)."""
+    db = _db(n_rows=8_000)
+    with BlinkQLService(db, config=ServiceConfig(batch_window_s=0.05,
+                                                 use_cache=False)) as svc:
+        outcomes: dict[int, object] = {}
+        barrier = threading.Barrier(4)
+
+        def good(i):
+            barrier.wait()
+            outcomes[i] = svc.submit(
+                "SELECT COUNT(*) FROM sessions WHERE OS = 'os1'")
+
+        def bad(i):
+            barrier.wait()
+            try:
+                svc.submit("SELECT AVG(SessionTime) FROM sessions "
+                           "WHERE OS = 'os1' OR OS = 'os2'")
+                outcomes[i] = "no error"
+            except ValueError as e:
+                outcomes[i] = e
+
+        threads = ([threading.Thread(target=good, args=(i,))
+                    for i in range(3)]
+                   + [threading.Thread(target=bad, args=(3,))])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for i in range(3):
+        assert outcomes[i].groups, f"session {i} was poisoned"
+    assert isinstance(outcomes[3], ValueError)
+
+
+def test_close_detaches_cache_listener():
+    db = _db(n_rows=5_000)
+    n_before = len(db._invalidation_listeners)
+    svc = BlinkQLService(db, config=ServiceConfig(batch_window_s=0.0))
+    assert len(db._invalidation_listeners) == n_before + 1
+    svc.submit("SELECT COUNT(*) FROM sessions")
+    svc.close()
+    assert len(db._invalidation_listeners) == n_before
+    assert len(svc.cache) == 0
+
+
+def test_failed_epoch_keeps_drift_baseline():
+    """If the optimizer epoch fails, the baseline must NOT move (the drift
+    signal survives); evidence resets so the retry backs off."""
+    mon = WorkloadMonitor.from_templates(
+        [QueryTemplate(frozenset({"City"}), 1.0)],
+        WorkloadConfig(window=32, min_queries=4, drift_threshold=0.3))
+    q = Query("sessions", AggOp.COUNT,
+              predicate=Predicate.where(Atom("OS", CmpOp.EQ, "o")))
+    for _ in range(8):
+        mon.record(q)
+    assert mon.should_reoptimize("sessions")
+    drift_before = mon.drift_score("sessions")
+    mon.defer()                                   # epoch attempt failed
+    assert mon.drift_score("sessions") == drift_before   # baseline kept
+    assert not mon.should_reoptimize("sessions")  # evidence reset
+    for _ in range(8):
+        mon.record(q)
+    assert mon.should_reoptimize("sessions")      # re-fires on new evidence
+
+
+def test_workload_churn_triggers_reoptimization_epoch():
+    """Acceptance: a template-churn-only workload (no data delta) triggers a
+    §3.2 re-optimization epoch that changes the family set."""
+    tbl = table_lib.from_columns("sessions",
+                                 synth.sessions_table(30_000, seed=2))
+    db = BlinkDB(EngineConfig(k1=400.0, m=3, seed=1))
+    db.register_table("sessions", tbl)
+    templates = [QueryTemplate(frozenset({"City"}), 1.0)]
+    db.build_samples("sessions", templates, storage_budget_fraction=1.0)
+    maint = SampleMaintainer(
+        db, "sessions", templates,
+        MaintenanceConfig(change_fraction=1.0, storage_budget_fraction=1.0))
+    cfg = ServiceConfig(batch_window_s=0.0,
+                        workload=WorkloadConfig(window=64, min_queries=10,
+                                                drift_threshold=0.4))
+    before = set(db.families["sessions"])
+    n_rows_before = db.tables["sessions"].n_rows
+    with BlinkQLService(db, maintainer=maint, config=cfg) as svc:
+        urls = db.tables["sessions"].dictionaries["URL"]
+        for i in range(40):
+            svc.submit("SELECT COUNT(*) FROM sessions WHERE OS = 'os1' "
+                       f"AND URL = '{urls[i % 8]}' ERROR WITHIN 20%")
+        deadline = time.monotonic() + 5.0
+        while not svc.workload_epochs and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert svc.workload_epochs, "drifted workload never triggered"
+        report = svc.workload_epochs[0]
+        assert "error" not in report
+        assert report["added"] or report["dropped"]
+        after = set(db.families["sessions"])
+        assert after != before
+        assert db.tables["sessions"].n_rows == n_rows_before  # no data delta
+        # service still answers on the reshaped family set
+        assert svc.submit("SELECT COUNT(*) FROM sessions "
+                          "WHERE OS = 'os1' ERROR WITHIN 20%").groups
+
+
+# ------------------------------------------------------- elp headroom
+
+def test_pick_k_for_time_headroom_monotone():
+    db = _db(n_rows=10_000)
+    fam = db.families["sessions"][("City",)]
+    model = elp_lib.LatencyModel(a=1e-4, b=0.0)
+    ks = [elp_lib.pick_k_for_time(fam, model, 0.5, headroom_s=h)
+          for h in (0.0, 0.2, 0.45, 0.5)]
+    assert ks == sorted(ks, reverse=True)      # more headroom ⇒ smaller K
+    assert ks[0] >= ks[-1]
+    assert elp_lib.pick_k_for_time(fam, model, 0.5) == ks[0]
+
+
+# ------------------------------------------------------- lazy mirrors
+
+def test_families_stay_device_lazy_through_mutations():
+    """ROADMAP lazy-mirror item: merge/tombstone passes build NO family
+    device arrays — serving reads only the striped block — and answers are
+    unchanged."""
+    db = _db()
+    q = Query("sessions", AggOp.COUNT, bound=ErrorBound(0.2)).normalized()
+    db.query(q)
+    raw = {c: np.asarray(v)[:400]
+           for c, v in synth.sessions_table(400, seed=11).items()}
+    db.append_rows("sessions", raw)
+    for phi, fam in db.families["sessions"].items():
+        assert fam.device_resident() == frozenset(), (phi, fam.device_resident())
+    a_after_append = db.query(q)
+    for phi, fam in db.families["sessions"].items():
+        assert fam.device_resident() == frozenset(), phi
+    db.delete_rows("sessions", Predicate.where(Atom("OS", CmpOp.EQ, "os2")))
+    for phi, fam in db.families["sessions"].items():
+        assert fam.device_resident() == frozenset(), phi
+    a_after_delete = db.query(q)
+    assert a_after_delete.rows_total < a_after_append.rows_total
+    # lazy materialization still works on demand (oracle/test paths)
+    fam = db.families["sessions"][("City",)]
+    ek = np.asarray(fam.entry_key)
+    assert np.all(np.diff(ek) >= 0)
+    assert "entry_key" in fam.device_resident()
