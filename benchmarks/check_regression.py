@@ -1,0 +1,213 @@
+"""CI benchmark-regression gate: fresh BENCH_*.json vs committed baselines.
+
+Every CI run regenerates the quick-mode benchmark JSONs; this script compares
+them against the committed snapshots in `benchmarks/baselines/` and FAILS the
+workflow when a gated metric regresses. Three kinds of gate, because the
+metrics have very different noise profiles on shared CI runners:
+
+* **absolute floors/ceilings** on dimensionless ratios (speedups, relative
+  errors) — machine-independent invariants the PRs promised (e.g. the
+  admission scheduler's solo bypass keeps `serve_throughput_s1` speedup
+  ≥ 1.0×, coalescing keeps s32 ≥ 3×);
+* **tight relative bands** on DETERMINISTIC metrics (storage bytes
+  reclaimed, sampled-row counts — functions of the seed, not the machine):
+  any drift here is a code change, not noise;
+* **wide relative bands** on raw timings, generous enough that runner
+  jitter passes but an order-of-magnitude regression (a dropped program
+  cache, an accidental eager restripe) does not.
+
+Re-baselining: when a change legitimately moves a gated metric (new
+machine-independent floor, intentionally different storage accounting),
+regenerate the quick benchmarks locally and run
+
+    PYTHONPATH=src python -m benchmarks.check_regression --rebaseline
+
+then commit the updated `benchmarks/baselines/*.json` with a note in the PR
+describing WHY the baseline moved. Baselines must come from the same
+`--quick` invocations CI uses (the deterministic metrics depend on the
+benchmark's n_rows).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import shutil
+import sys
+
+BENCH_FILES = ("BENCH_batch.json", "BENCH_ingest.json",
+               "BENCH_mutation.json", "BENCH_serve.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """One gated (file, row, metric). `higher` is the good direction.
+
+    rel_tol: allowed fractional slack vs the BASELINE value (None = no
+    relative check). floor/ceiling: absolute bounds on the FRESH value.
+    A row prefix ending in '*' gates every row whose name matches.
+    """
+    file: str
+    row: str
+    metric: str
+    higher: bool = True
+    rel_tol: float | None = None
+    floor: float | None = None
+    ceiling: float | None = None
+
+
+GATES = [
+    # ---- serve (admission scheduler): machine-independent speedup floors.
+    # s1 is the solo-bypass acceptance bar: with the bypass both disciplines
+    # do identical per-request work, so the TRUE ratio is parity (committed
+    # baseline ≥ 1.0) and observed values are parity ± runner noise. The
+    # floor sits at 0.9 — far above the 0.80x window-tax regression this PR
+    # fixed (and the ~0.5x it becomes at the default 5 ms window), but below
+    # the parity noise band, so the gate catches the regression CLASS
+    # without flaking on a coin-flip metric.
+    Gate("BENCH_serve.json", "serve_throughput_s1", "speedup", floor=0.9,
+         rel_tol=0.35),
+    Gate("BENCH_serve.json", "serve_throughput_s8", "speedup", floor=0.9),
+    Gate("BENCH_serve.json", "serve_throughput_s32", "speedup", floor=3.0),
+    # ---- batched shared scans: parity is exact, amortization holds at Q=16
+    Gate("BENCH_batch.json", "batch_throughput_b*",
+         "max_rel_err_vs_sequential", higher=False, ceiling=0.0),
+    Gate("BENCH_batch.json", "batch_throughput_b16", "speedup", floor=2.5),
+    # ---- ingest: delta epochs stay an order of magnitude under rebuilds
+    Gate("BENCH_ingest.json", "ingest_delta*", "speedup", floor=5.0),
+    Gate("BENCH_ingest.json", "ingest_delta*", "rel_err_vs_exact",
+         higher=False, ceiling=0.15),
+    # ---- mutation + reclamation: tombstone epochs beat rebuilds; the
+    # storage metrics are DETERMINISTIC (seeded) -> tight bands; timings
+    # get wide bands (they only need to catch order-of-magnitude breaks,
+    # e.g. programs no longer surviving a base compaction).
+    Gate("BENCH_mutation.json", "mutation_delete*", "speedup", floor=1.5),
+    Gate("BENCH_mutation.json", "mutation_delete*",
+         "storage_reclaimed_frac", rel_tol=0.02),
+    Gate("BENCH_mutation.json", "mutation_delete*",
+         "sample_rows_restored", rel_tol=0.02),
+    Gate("BENCH_mutation.json", "mutation_delete*", "rel_err_vs_exact",
+         higher=False, ceiling=0.25),
+    Gate("BENCH_mutation.json", "mutation_delete*",
+         "query_after_base_compact_s", higher=False, rel_tol=3.0),
+    Gate("BENCH_mutation.json", "mutation_delete*",
+         "query_after_decay_s", higher=False, rel_tol=3.0),
+]
+
+
+def _load(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r for r in rows}
+
+
+def _match_rows(gate: Gate, names) -> list[str]:
+    if gate.row.endswith("*"):
+        return sorted(n for n in names if n.startswith(gate.row[:-1]))
+    return [gate.row] if gate.row in names else []
+
+
+def _check_one(gate: Gate, name: str, fresh: dict, base: dict | None
+               ) -> list[str]:
+    """Violation messages for one (gate, row)."""
+    out = []
+    val = fresh.get(name, {}).get(gate.metric)
+    if val is None:
+        return [f"{gate.file}:{name}:{gate.metric} missing from fresh run "
+                "(benchmark coverage must not silently vanish)"]
+    if gate.floor is not None and val < gate.floor:
+        out.append(f"{gate.file}:{name}:{gate.metric} = {val:.4g} "
+                   f"below absolute floor {gate.floor:.4g}")
+    if gate.ceiling is not None and val > gate.ceiling:
+        out.append(f"{gate.file}:{name}:{gate.metric} = {val:.4g} "
+                   f"above absolute ceiling {gate.ceiling:.4g}")
+    if gate.rel_tol is not None:
+        if base is None or name not in base \
+                or gate.metric not in base[name]:
+            out.append(f"{gate.file}:{name}:{gate.metric} has no committed "
+                       "baseline — run with --rebaseline and commit "
+                       "benchmarks/baselines/")
+            return out
+        ref = base[name][gate.metric]
+        if gate.higher:
+            bound = ref * (1.0 - gate.rel_tol)
+            if val < bound:
+                out.append(
+                    f"{gate.file}:{name}:{gate.metric} = {val:.4g} "
+                    f"regressed below {bound:.4g} "
+                    f"(baseline {ref:.4g} - {gate.rel_tol:.0%})")
+        else:
+            bound = ref * (1.0 + gate.rel_tol)
+            if val > bound:
+                out.append(
+                    f"{gate.file}:{name}:{gate.metric} = {val:.4g} "
+                    f"regressed above {bound:.4g} "
+                    f"(baseline {ref:.4g} + {gate.rel_tol:.0%})")
+    return out
+
+
+def check(bench_dir: str, baseline_dir: str) -> int:
+    violations: list[str] = []
+    checked = 0
+    for file in BENCH_FILES:
+        fresh_path = os.path.join(bench_dir, file)
+        base_path = os.path.join(baseline_dir, file)
+        gates = [g for g in GATES if g.file == file]
+        if not gates:
+            continue
+        if not os.path.exists(fresh_path):
+            violations.append(f"{file}: fresh benchmark output missing — "
+                              "did a benchmark step fail or get removed?")
+            continue
+        fresh = _load(fresh_path)
+        base = _load(base_path) if os.path.exists(base_path) else None
+        for gate in gates:
+            names = _match_rows(gate, fresh.keys())
+            if not names:
+                violations.append(
+                    f"{file}: no rows match gate {gate.row!r} "
+                    "(benchmark coverage must not silently vanish)")
+                continue
+            for name in names:
+                checked += 1
+                violations.extend(_check_one(gate, name, fresh, base))
+    print(f"check_regression: {checked} gated metrics checked, "
+          f"{len(violations)} violation(s)")
+    for v in violations:
+        print(f"  REGRESSION: {v}")
+    if not violations:
+        print("  all gates passed")
+    return 1 if violations else 0
+
+
+def rebaseline(bench_dir: str, baseline_dir: str) -> int:
+    os.makedirs(baseline_dir, exist_ok=True)
+    for file in BENCH_FILES:
+        src = os.path.join(bench_dir, file)
+        if os.path.exists(src):
+            shutil.copy(src, os.path.join(baseline_dir, file))
+            print(f"rebaselined {file}")
+        else:
+            print(f"skipped {file} (no fresh output)")
+    return 0
+
+
+def main() -> None:
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-dir", default=os.path.dirname(here),
+                    help="directory holding the fresh BENCH_*.json")
+    ap.add_argument("--baselines", default=os.path.join(here, "baselines"),
+                    help="directory holding the committed baselines")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="copy the fresh BENCH_*.json over the baselines "
+                         "instead of checking")
+    args = ap.parse_args()
+    if args.rebaseline:
+        sys.exit(rebaseline(args.bench_dir, args.baselines))
+    sys.exit(check(args.bench_dir, args.baselines))
+
+
+if __name__ == "__main__":
+    main()

@@ -135,8 +135,15 @@ def run_mutation(n_rows: int = 200_000, delete_fracs=DELETE_FRACS,
     table (host tombstones + per-family ghosting + the device bitmask
     scatter), the first query after it (compiled programs must survive), a
     ghost-reclaiming compaction, and the query after THAT — against the
-    pre-mutation alternative of a full replacement rebuild. Emits
-    BENCH_mutation.json."""
+    pre-mutation alternative of a full replacement rebuild. Then the
+    storage-reclamation epochs: base-table compaction (physical drop of the
+    dead rows + row-id remap; steady-state base storage returns to live
+    bytes) and inclusion-frequency decay (thinned strata resampled under
+    reset freqs), each followed by a warm query — compiled programs must
+    survive the base compaction outright. The storage metrics are
+    DETERMINISTIC given the seed, so check_regression.py gates them tightly;
+    the timings get wide bands. Emits BENCH_mutation.json (a gated
+    baseline)."""
     rows = []
     for frac in delete_fracs:
         db, maint, q = _setup(n_rows)
@@ -159,6 +166,27 @@ def run_mutation(n_rows: int = 200_000, delete_fracs=DELETE_FRACS,
                      and db.compact_family("sessions", phi)])
         _, t_q_comp = _timed(lambda: db.query(q))
 
+        # -- storage reclamation: base compaction + inclusion decay ------
+        base_bytes_before = tbl.row_bytes() * tbl.n_rows
+        comp, t_base = _timed(lambda: db.compact_table("sessions"))
+        base_bytes_after = tbl.row_bytes() * tbl.n_rows
+        _, t_q_base = _timed(lambda: db.query(q))
+        fam = db.families["sessions"][("City",)]
+        sample_rows_thinned = fam.n_rows
+        from repro.core.maintenance import strata_to_decay
+
+        def run_decay():
+            out = {}
+            for phi in list(db.families["sessions"]):
+                f = db.families["sessions"][phi]
+                strata = strata_to_decay(f, 1.05)   # any ≥5% dead weight
+                if strata.size:
+                    out[phi] = db.decay_family("sessions", phi, strata)
+            return out
+        decayed_fams, t_decay = _timed(run_decay)
+        sample_rows_restored = db.families["sessions"][("City",)].n_rows
+        _, t_q_decay = _timed(lambda: db.query(q))
+
         # pre-mutation alternative: rebuild the table without the dead rows
         db_full, maint_full, qf = _setup(n_rows)
         keep = ~np.isin(db_full.tables["sessions"].host_column("dt"),
@@ -172,6 +200,7 @@ def run_mutation(n_rows: int = 200_000, delete_fracs=DELETE_FRACS,
         got = db.query(q).groups[0].estimate
         rel_err = abs(got - exact) / max(exact, 1.0)
         speedup = t_full / t_delete
+        reclaimed = comp.n_dropped if comp is not None else 0
         rows.append({
             "name": f"mutation_delete{int(frac * 100)}pct",
             "us_per_call": t_delete * 1e6,
@@ -180,7 +209,12 @@ def run_mutation(n_rows: int = 200_000, delete_fracs=DELETE_FRACS,
                         f"speedup={speedup:.1f}x "
                         f"q_after_delete={t_q_del * 1e3:.1f}ms "
                         f"compact={t_compact * 1e3:.1f}ms "
-                        f"q_after_compact={t_q_comp * 1e3:.1f}ms "
+                        f"base_compact={t_base * 1e3:.1f}ms "
+                        f"reclaimed={base_bytes_before - base_bytes_after}B "
+                        f"decay={t_decay * 1e3:.1f}ms "
+                        f"sample_rows={sample_rows_thinned}"
+                        f"->{sample_rows_restored} "
+                        f"q_after_base={t_q_base * 1e3:.1f}ms "
                         f"rel_err={rel_err:.1e}"),
             "delete_fraction": frac,
             "deleted_rows": int(report.mutation.n_tombstoned),
@@ -192,6 +226,20 @@ def run_mutation(n_rows: int = 200_000, delete_fracs=DELETE_FRACS,
             "query_after_compact_s": t_q_comp,
             "ghost_fraction_before_compact": max(fracs.values(), default=0.0),
             "compacted": [list(p) for p in compacted],
+            # storage reclamation (deterministic given the seed — gated
+            # tightly by check_regression.py)
+            "base_bytes_before_compact": base_bytes_before,
+            "base_bytes_steady_state": base_bytes_after,
+            "storage_reclaimed_frac": (base_bytes_before - base_bytes_after)
+                                      / max(base_bytes_before, 1),
+            "reclaimed_rows": int(reclaimed),
+            "sample_rows_thinned": int(sample_rows_thinned),
+            "sample_rows_restored": int(sample_rows_restored),
+            "decayed_families": [list(p) for p in decayed_fams],
+            "base_compact_s": t_base,
+            "decay_s": t_decay,
+            "query_after_base_compact_s": t_q_base,
+            "query_after_decay_s": t_q_decay,
             "rel_err_vs_exact": rel_err,
             "n_rows": n_rows,
         })

@@ -14,8 +14,15 @@ Two serving disciplines over the SAME warm engine:
   scheduling+scan amortization, not memoization.
 
 Reports queries/sec plus p50/p99 per-request latency at 1/8/32 sessions and
-emits BENCH_serve.json (CI-tracked). The ISSUE-4 acceptance floor is
-coalesced qps ≥ 3× naive at 32 sessions.
+emits BENCH_serve.json (CI-tracked, gated by benchmarks/check_regression.py).
+The ISSUE-4 acceptance floor is coalesced qps ≥ 3× naive at 32 sessions; the
+ISSUE-5 floor is speedup ≥ 1.0× at 1 session (the scheduler's solo bypass —
+a lone analyst must not pay the batching window; with the bypass the two
+disciplines do identical per-request work, so the true ratio is parity and
+any sustained shortfall means the window tax came back). The n_sessions=1
+row is the tight regression-gate row, so it is measured as a pooled-median
+latency ratio over 5 repeats of both disciplines (the multi-session rows
+have x-fold margins; one wall-clock run suffices).
 """
 from __future__ import annotations
 
@@ -101,14 +108,36 @@ def run(n_rows: int = 400_000, session_counts=SESSION_COUNTS,
     rows = []
     for n_sessions in session_counts:
         total = n_sessions * per_session
+        repeats = 5 if n_sessions == 1 else 1
         svc = BlinkQLService(db, config=ServiceConfig(
             batch_window_s=batch_window_s, use_cache=False))
-        t_coal, lat_coal = _run_sessions(n_sessions, per_session, texts,
-                                         svc.submit)
+        # INTERLEAVE the disciplines (alternating which goes first) instead
+        # of running all-coalesced-then-all-naive: the container's clock
+        # speed drifts on a seconds scale, and sequential phases would
+        # attribute that drift to whichever discipline ran second.
+        runs_c, runs_n = [], []
+        for r in range(repeats):
+            pair = [("c", svc.submit), ("n", naive)]
+            if r % 2:
+                pair.reverse()
+            for kind, fn in pair:
+                (runs_c if kind == "c" else runs_n).append(
+                    _run_sessions(n_sessions, per_session, texts, fn))
         coalescing = svc.stats()["coalescing"]
         svc.close()
-        t_naive, lat_naive = _run_sessions(n_sessions, per_session, texts,
-                                           naive)
+        if n_sessions == 1:
+            # The tight regression-gate row: with one blocking session,
+            # throughput IS 1/latency, and the pooled per-request MEDIAN is
+            # robust to this container's multi-ms scheduling spikes in a way
+            # a sum-of-8-calls total is not. Multi-session rows keep
+            # wall-clock totals (coalescing is a whole-batch effect).
+            lat_coal = np.concatenate([lat for _, lat in runs_c])
+            lat_naive = np.concatenate([lat for _, lat in runs_n])
+            t_coal = float(np.median(lat_coal)) * total
+            t_naive = float(np.median(lat_naive)) * total
+        else:
+            t_coal, lat_coal = min(runs_c, key=lambda r: r[0])
+            t_naive, lat_naive = min(runs_n, key=lambda r: r[0])
         qps_coal = total / t_coal
         qps_naive = total / t_naive
         speedup = qps_coal / qps_naive

@@ -120,6 +120,7 @@ class BlinkDB:
         self._elp_cache: dict = {}
         self._fk_maps: dict = {}      # (fact, dim, fk) -> np fk->row map
         self._append_epochs: dict[str, int] = {}  # table -> appends so far
+        self._decay_epochs: dict[str, int] = {}   # table -> decay passes
         # Sample-generation counters (service answer-cache validity,
         # docs/SERVICE.md): one per (table, family), bumped whenever the
         # family's CONTENT changes — merge, tombstone, rebuild, compaction,
@@ -539,6 +540,117 @@ class BlinkDB:
             self._drop_programs(table_name, phi)
         self._bump_generation(table_name, phi)
         return True
+
+    # --------------------------------------------- storage reclamation epochs
+    def dead_fraction(self, table_name: str) -> float:
+        """Fraction of the base table's physical rows that are tombstoned —
+        the base-compaction trigger metric (storage the table holds for rows
+        no query can ever return)."""
+        tbl = self.tables[table_name]
+        return 1.0 - tbl.n_live / max(tbl.n_rows, 1)
+
+    def compact_table(self, table_name: str
+                      ) -> table_lib.TableCompaction | None:
+        """Base-table compaction epoch: physically drop tombstoned rows and
+        ship the old→new row-id remap to every layer keyed on physical ids
+        (docs/MAINTENANCE.md reclamation protocol).
+
+        Sample CONTENT is untouched — a compaction relabels the positions of
+        live rows, it does not change which rows exist or how they were
+        keyed — so families only re-key their `row_ids` host mirror and
+        striped blocks their `slot_row_ids` mirror: zero device traffic, and
+        every AOT-compiled sampled-path program stays valid (the block's
+        arrays and shape class never move). Inclusion frequencies keep
+        counting the reclaimed rows (monotonicity is what keeps HT rates
+        exact); only a decay epoch ever resets them.
+
+        Invalidation: exact-path programs for this table drop (physical
+        length changed — the old-length entries are unreachable anyway);
+        join state refreshes when this table serves as a dimension (fk maps
+        hold the OLD row indices). Every family's generation bumps — cached
+        answers stamped `rows_total = n_live` are still numerically right,
+        but the conservative bump keeps the cache contract simple: content
+        owners changed identity, dependents revalidate.
+
+        Returns the TableCompaction (None when there was nothing to
+        reclaim).
+        """
+        tbl = self.tables[table_name]
+        fams = self.families.get(table_name, {})
+        # Validate BEFORE the table mutates: a family that cannot be
+        # remapped (legacy, no usable row_ids) must fail the epoch with the
+        # engine untouched, not leave it half-compacted with stale ids.
+        for phi, fam in fams.items():
+            if fam.row_ids is None or (fam.row_ids < 0).any():
+                raise ValueError(
+                    f"family {phi!r} has no (or sentinel) row_ids — built "
+                    "before mutation support; rebuild it to enable base "
+                    "compaction")
+        comp = tbl.compact()
+        if comp is None:
+            return None
+        for phi, fam in list(fams.items()):
+            fams[phi] = samp_lib.remap_family_row_ids(fam, comp.remap)
+            self._bump_generation(table_name, phi)
+            key = (table_name, phi)
+            striped = self._striped.get(key)
+            if striped is not None:
+                self._striped[key] = exec_lib.remap_slot_row_ids(
+                    striped, comp.remap)
+        for k in [k for k in self._exact_programs if k[0] == table_name]:
+            del self._exact_programs[k]
+        for k in [k for k in self._fk_maps if k[1] == table_name]:
+            del self._fk_maps[k]
+        self._invalidate_as_dimension(table_name)
+        return comp
+
+    def decay_family(self, table_name: str, phi: tuple[str, ...],
+                     strata, seed: int | None = None
+                     ) -> samp_lib.DecayBlock | None:
+        """Inclusion-frequency decay epoch for one family: reset the named
+        strata's inclusion frequencies to their live counts and resample
+        them from the base table (sampling.decay_strata) under fresh units
+        drawn from the per-table decay stream — deterministic in
+        (seed, decay epoch), so the mutation oracle can replay it.
+
+        Invalidation rides the compaction matrix row: the family content
+        changed (generation bump + program-cache hygiene via restripe), and
+        the striped block is rebuilt with PINNED geometry — decay admits
+        rows, so if the restored rows outgrow the old padded shape the shape
+        class changes and that family's compiled programs drop instead of
+        being served stale. Returns the DecayBlock (None for an empty
+        stratum list).
+        """
+        strata = np.unique(np.asarray(strata, dtype=np.int64))
+        if not strata.size:
+            return None
+        tbl = self.tables[table_name]
+        phi = tuple(phi)
+        fam = self.families[table_name][phi]
+        # Gathered join attributes can't be resampled from the base table —
+        # strip them (regathered lazily), as the delta path does.
+        gathered = [c for c in fam.columns if "." in c]
+        for c in gathered:
+            del fam.columns[c]
+        epoch = self._decay_epochs.get(table_name, 0) + 1
+        self._decay_epochs[table_name] = epoch
+        unit_seed = self.config.seed if seed is None else seed
+        units = samp_lib.decay_units(tbl.n_rows, unit_seed, epoch)
+        new_fam, block = samp_lib.decay_strata(fam, tbl, strata, units)
+        block.epoch = epoch
+        self.families[table_name][phi] = new_fam
+        self._bump_generation(table_name, phi)
+        key = (table_name, phi)
+        striped = self._striped.get(key)
+        if striped is not None:
+            fresh = exec_lib.stripe_family(new_fam, self._n_shards(),
+                                           min_local=striped.n_local)
+            self._striped[key] = fresh
+            if fresh.shape_class != striped.shape_class:
+                self._drop_programs(table_name, phi)
+        elif gathered:
+            self._drop_programs(table_name, phi)
+        return block
 
     # ------------------------------------------------------------- runtime
     def _n_shards(self) -> int:

@@ -399,6 +399,23 @@ def stripe_tombstone(striped: StripedFamily, dead_row_ids: np.ndarray,
         table_rows=table_rows)
 
 
+def remap_slot_row_ids(striped: StripedFamily,
+                       remap: np.ndarray) -> StripedFamily:
+    """Re-key the striped block's host slot_row_ids mirror through a
+    base-table compaction remap (old physical id -> new id, -1 = dropped).
+    Purely a host-mirror rewrite: the device arrays reference no physical
+    ids, so a base compaction ships ZERO device traffic through the striped
+    layer and every compiled program stays valid. Ghosted slots stay -1;
+    rescale-ghost slots still name live rows and remap like occupied ones
+    (a later tombstone of such a row must still find its slot)."""
+    ids = striped.slot_row_ids
+    if ids is None:
+        return striped
+    remap = np.asarray(remap, dtype=np.int64)
+    new_ids = np.where(ids >= 0, remap[np.maximum(ids, 0)], -1)
+    return dataclasses.replace(striped, slot_row_ids=new_ids)
+
+
 def run_query_striped(striped: StripedFamily, bound_pred, value_col: str | None,
                       group_col: str | None, n_groups: int, k: float,
                       mesh: Mesh | None = None, data_axes: tuple[str, ...] = ("data",),

@@ -17,9 +17,14 @@ Two ingestion modes (docs/MAINTENANCE.md):
 
 Deletes/updates flow through `BlinkDB.delete_rows`/`update_rows` (tombstone
 protocol, docs/MAINTENANCE.md); every epoch additionally runs the
-ghost-slot compaction policy (`compact()`): families whose striped blocks
-accumulated more than `compact_threshold` self-excluded slots (rescale
-ghosts + tombstoned rows) are restriped into their existing geometry.
+storage-reclamation pass (`reclaim()`): (1) base-table compaction once the
+dead-row fraction passes `base_compact_threshold` (physically drop
+tombstoned base rows, remap row ids everywhere), (2) inclusion-frequency
+decay of strata whose cumulative/live ratio passes `decay_ratio` (re-key +
+resample under reset inclusion freqs), and (3) the ghost-slot compaction
+policy (`compact()`): families whose striped blocks accumulated more than
+`compact_threshold` self-excluded slots (rescale ghosts + tombstoned rows)
+are restriped into their existing geometry.
 
 Epoch randomness is threaded explicitly (base_seed + epoch number) — the
 shared EngineConfig.seed is never mutated.
@@ -54,6 +59,19 @@ def distribution_drift(old_freqs: np.ndarray, new_freqs: np.ndarray) -> float:
     return float(0.5 * np.abs(pa - pb).sum())
 
 
+def strata_to_decay(fam, ratio: float) -> np.ndarray:
+    """Stable stratum ids whose cumulative inclusion frequency reached
+    `ratio` × the live count (and strictly exceeds it — equal means no dead
+    weight to forgive). A fully-dead stratum (live 0, cumulative > 0) always
+    qualifies: its inclusion count is pure dead weight."""
+    if fam.stratum_live is None or not fam.phi:
+        return np.zeros(0, dtype=np.int64)   # append-only / uniform: no decay
+    freqs = fam.stratum_freqs
+    live = fam.live_freqs
+    return np.flatnonzero((freqs >= ratio * live)
+                          & (freqs > live)).astype(np.int64)
+
+
 @dataclasses.dataclass
 class MaintenanceConfig:
     drift_threshold: float = 0.05     # TV distance triggering re-optimization
@@ -65,6 +83,16 @@ class MaintenanceConfig:
     # ghosts and tombstoned rows self-exclude from every scan but still
     # occupy slots, so scan efficiency decays with churn until reclaimed.
     compact_threshold: float = 0.3
+    # Dead-row fraction of the BASE table past which an epoch runs the
+    # base-table compaction (Table.compact + row-id remap to every family —
+    # docs/MAINTENANCE.md). Tombstones reclaim sample slots but base columns
+    # keep holding dead rows forever without this.
+    base_compact_threshold: float = 0.3
+    # Cumulative-vs-live inclusion-frequency ratio past which a stratum is
+    # decayed (re-keyed + resampled under reset inclusion freqs). Churn
+    # inflates F_cum while live rows dwindle, thinning the stratum's sample
+    # to live·K/F_cum; decay restores it toward min(live, K). <= 1 disables.
+    decay_ratio: float = 3.0
 
 
 class SampleMaintainer:
@@ -157,6 +185,43 @@ class SampleMaintainer:
                     compacted.append(phi)
         return compacted
 
+    # -- storage-reclamation epochs (base compaction + inclusion decay) --------
+    def decay(self) -> dict[tuple[str, ...], list[int]]:
+        """Decay every stratum whose cumulative inclusion frequency exceeds
+        `decay_ratio` × its live count (docs/MAINTENANCE.md): churn-heavy
+        strata thin their samples under the monotone inclusion freqs; the
+        decay pass re-keys + resamples them under reset freqs, restoring
+        utilization with HT rates exact by construction. Returns
+        {family: [stable stratum ids decayed]}."""
+        ratio = self.config.decay_ratio
+        out: dict[tuple[str, ...], list[int]] = {}
+        if ratio is None or ratio <= 1.0:
+            return out
+        for phi, fam in list(self.db.families[self.table_name].items()):
+            strata = strata_to_decay(fam, ratio)
+            if strata.size:
+                block = self.db.decay_family(self.table_name, phi, strata)
+                if block is not None:
+                    out[phi] = [int(s) for s in block.strata]
+        return out
+
+    def reclaim(self) -> dict:
+        """One storage-reclamation pass, run by every epoch: (1) base-table
+        compaction once the dead-row fraction passes the threshold — the
+        row-id remap ships to every family/striped mirror with zero device
+        traffic; (2) inclusion-frequency decay of over-ratio strata; (3) the
+        existing ghost-slot compaction of striped blocks (decay restripes
+        its families itself, so it runs first)."""
+        report = {"base_compacted": 0, "decayed": {}}
+        if self.db.dead_fraction(self.table_name) \
+                > self.config.base_compact_threshold:
+            comp = self.db.compact_table(self.table_name)
+            if comp is not None:
+                report["base_compacted"] = comp.n_dropped
+        report["decayed"] = self.decay()
+        report["compacted"] = self.compact()
+        return report
+
     # -- workload-only epoch (template churn, no data delta) -------------------
     def run_workload_epoch(self, new_templates: Sequence[QueryTemplate],
                            seed: int | None = None) -> dict:
@@ -188,7 +253,7 @@ class SampleMaintainer:
                 "dropped": sorted(before - after),
                 "kept": sorted(after & before),
                 "objective": sol.objective, "storage": sol.storage_used,
-                "compacted": self.compact()}
+                **self.reclaim()}
 
     # -- one maintenance epoch -------------------------------------------------
     def run_epoch(self, new_table: table_lib.Table | None = None,
@@ -239,7 +304,7 @@ class SampleMaintainer:
             return {"drift": drift, "rebuilt": stale,
                     "merged": report.merged, "restriped": report.restriped,
                     "appended_rows": report.delta.n_rows,
-                    "compacted": self.compact(),
+                    **self.reclaim(),
                     "objective": sol.objective if sol else None,
                     "storage": sol.storage_used if sol else None}
 
@@ -278,7 +343,7 @@ class SampleMaintainer:
             if phi in self.db.families[self.table_name]:
                 self.db.add_family(self.table_name, phi, seed=epoch_seed)
         return {"drift": drift, "rebuilt": stale,
-                "compacted": self.compact(), "objective": sol.objective,
+                **self.reclaim(), "objective": sol.objective,
                 "storage": sol.storage_used}
 
     # -- background thread (low-priority task per §4.5) -----------------------

@@ -282,6 +282,19 @@ def delta_units(n: int, seed: int, epoch: int, *,
     return np.maximum(rng.random(n, dtype=np.float32), np.float32(1e-7))
 
 
+def decay_units(n: int, seed: int, epoch: int) -> np.ndarray:
+    """Per-row priorities for inclusion-frequency decay epoch `epoch`
+    (1-based): one full-table-length draw, indexed by PHYSICAL row id, from
+    which a decay pass reads only the rows of the strata it resets.
+    Deterministic in (seed, epoch) and salted away from the append streams —
+    so the from-scratch oracle can reproduce any decay by redrawing the same
+    stream (host numpy RNG, like delta_units: no device compile on the
+    maintenance path)."""
+    rng = np.random.default_rng(np.random.SeedSequence(
+        [seed & 0xFFFFFFFFFFFFFFFF, epoch, 2]))
+    return np.maximum(rng.random(n, dtype=np.float32), np.float32(1e-7))
+
+
 def _assemble_family(phi: tuple[str, ...], ks: tuple[float, ...],
                      host_cols: Mapping[str, np.ndarray], units: np.ndarray,
                      codes: np.ndarray, freqs: np.ndarray,
@@ -323,7 +336,8 @@ def _assemble_family(phi: tuple[str, ...], ks: tuple[float, ...],
 def build_family(tbl: table_lib.Table, phi: Sequence[str], k1: float,
                  c: float = 2.0, m: int | None = None, *,
                  seed: int = 0, units: np.ndarray | None = None,
-                 cumulative_inclusion: bool = False) -> SampleFamily:
+                 cumulative_inclusion: bool = False,
+                 incl_freqs: np.ndarray | None = None) -> SampleFamily:
     """Construct SFam(φ) from a table (offline sample creation, §2.2.1).
 
     `units` overrides the seeded per-row priorities — the host ORACLE for the
@@ -335,6 +349,10 @@ def build_family(tbl: table_lib.Table, phi: Sequence[str], k1: float,
     `cumulative_inclusion=True` keys under the cumulative PHYSICAL histogram
     instead — the oracle for the incremental mutation path, where inclusion
     frequencies count every row ever inserted and never decrement.
+    `incl_freqs` overrides the inclusion histogram outright (aligned to
+    combined_codes' stratum numbering) — the oracle for the DECAY path,
+    where some strata's inclusion counts were reset to live counts and the
+    cumulative histogram no longer describes them.
     """
     phi = tuple(sorted(phi))
     for col in phi:
@@ -345,8 +363,11 @@ def build_family(tbl: table_lib.Table, phi: Sequence[str], k1: float,
     live = tbl.live
     live_freqs = table_lib.stratum_frequencies(
         codes if live is None else codes[live], n_distinct)
-    incl = (table_lib.stratum_frequencies(codes, n_distinct)
-            if cumulative_inclusion else None)
+    if incl_freqs is not None:
+        incl = np.asarray(incl_freqs, dtype=np.int64)
+    else:
+        incl = (table_lib.stratum_frequencies(codes, n_distinct)
+                if cumulative_inclusion else None)
 
     if m is None:
         m = max(1, int(math.floor(math.log(max(k1, 2.0), c))))
@@ -577,6 +598,127 @@ def apply_tombstones(fam: SampleFamily, row_ids: np.ndarray,
         strata_keys=fam.strata_keys, row_strata=row_strata,
         entry_key_host=ek, columns_host=cols_host, unit_host=unit_host,
         row_ids=fam.row_ids[keep], stratum_live=new_live)
+    return out, block
+
+
+def remap_family_row_ids(fam: SampleFamily,
+                         remap: np.ndarray) -> SampleFamily:
+    """Re-key a family's physical row ids through a base-table compaction
+    remap (types.TableCompaction). Sample CONTENT is untouched — entry keys,
+    units, inclusion frequencies, prefixes all stay put, because compaction
+    only relabels physical positions of live rows. Every family row is live
+    (tombstone passes drop dead sampled rows), so no id maps to -1."""
+    if fam.row_ids is None or (fam.row_ids < 0).any():
+        # -1 ids are the sentinel merge_family writes for rows of a LEGACY
+        # (pre-mutation-support) family — they name no physical row, so
+        # there is nothing to remap them through.
+        raise ValueError("family has no (or sentinel) row_ids — built "
+                         "before mutation support; rebuild it to enable "
+                         "base compaction")
+    new_ids = np.asarray(remap, dtype=np.int64)[fam.row_ids]
+    if (new_ids < 0).any():
+        raise ValueError("family holds rows the compaction dropped — "
+                         "tombstones were not applied before compacting")
+    return fam.lazy_replace(row_ids=new_ids)
+
+
+@dataclasses.dataclass
+class DecayBlock:
+    """What one inclusion-frequency decay pass did to a family: the strata it
+    reset and the row churn (dropped old sampled rows + freshly admitted
+    ones). The striped-block consequence is a full restripe — unlike a
+    tombstone pass, decay both removes and ADMITS rows, so there is no small
+    scatter that covers it."""
+    strata: np.ndarray             # int64: stable stratum ids reset
+    n_dropped: int                 # old sampled rows removed (their strata)
+    n_admitted: int                # fresh rows admitted under the reset freqs
+    epoch: int = 0                 # decay epoch that drew the fresh units
+
+
+def decay_strata(fam: SampleFamily, tbl: table_lib.Table,
+                 strata: np.ndarray, units_full: np.ndarray
+                 ) -> tuple[SampleFamily, DecayBlock]:
+    """Inclusion-frequency decay (docs/MAINTENANCE.md): reset the inclusion
+    frequencies of `strata` to their LIVE counts and resample those strata
+    from the base table under fresh entry keys.
+
+    Churn-heavy strata inflate the cumulative inclusion histogram F while
+    live rows dwindle: surviving rows keep rate min(1, K/F_cum), so the
+    stratum's expected sample size decays to live·K/F_cum even though
+    min(live, K) rows could be held. Tombstone passes cannot fix this —
+    raising a rate pulls never-materialized base rows IN, which only a pass
+    over the base table can supply. This one:
+
+      * drops the family's current rows of the decayed strata,
+      * draws fresh units for every LIVE base row of those strata from
+        `units_full` (decay_units — indexed by physical row id, so the
+        from-scratch oracle reproduces the draw exactly),
+      * keys them entry_key = u·F_live and admits entry_key < K₁ — a fresh
+        Poisson stratified sample of each stratum, HT rates min(1, K/F_live)
+        exact by construction,
+      * leaves every other stratum's rows, keys, and rates bit-identical.
+
+    The family's sampled set GROWS back toward min(live, K₁) per stratum —
+    restored utilization is the point. Requires the mutation-era metadata
+    (row_ids/strata_keys); raises on legacy families.
+    """
+    if fam.row_ids is None or fam.strata_keys is None or not fam.phi:
+        raise ValueError("decay needs a stratified family with mutation "
+                         "metadata (row_ids + strata_keys)")
+    strata = np.unique(np.asarray(strata, dtype=np.int64))
+    new_freqs = fam.stratum_freqs.copy()
+    live_freqs = fam.live_freqs
+    new_freqs[strata] = live_freqs[strata]
+
+    # Map every base row to the family's STABLE stratum ids.
+    mat = np.stack([tbl.host_column(c).astype(np.int32) for c in fam.phi],
+                   axis=1)
+    codes, keys = table_lib.map_codes_stable(mat, fam.strata_keys)
+    if len(keys) != len(fam.strata_keys):
+        raise ValueError("table holds strata this family has never seen — "
+                         "merge the pending delta before decaying")
+    sel = np.isin(codes, strata)
+    if tbl.live is not None:
+        sel &= tbl.live
+    idx = np.flatnonzero(sel).astype(np.int64)
+
+    freqs_f32 = new_freqs.astype(np.float32)
+    u = np.asarray(units_full, dtype=np.float32)[idx]
+    ek_new = u * freqs_f32[codes[idx]]
+    keep_new = ek_new < fam.ks[0]
+
+    keep_old = ~np.isin(fam.row_strata, strata)
+    ek_m = np.concatenate([fam.entry_key_host[keep_old], ek_new[keep_new]])
+    order = np.argsort(ek_m, kind="stable")
+    ek_sorted = ek_m[order]
+    prefixes = tuple(int(np.searchsorted(ek_sorted, k, side="left"))
+                     for k in fam.ks)
+
+    def merge_col(old_arr, new_arr):
+        old_h = np.asarray(old_arr)[keep_old]
+        return np.concatenate(
+            [old_h, np.asarray(new_arr, dtype=old_h.dtype)])[order]
+
+    cols_host = {name: merge_col(fam.host_column(name),
+                                 tbl.host_column(name)[idx][keep_new])
+                 for name in fam.columns}
+    old_units = (fam.unit_host if fam.unit_host is not None
+                 else np.asarray(fam.unit))
+    out = SampleFamily(
+        phi=fam.phi, ks=fam.ks,
+        columns=None, freq=None, entry_key=None, unit=None,  # lazy mirrors
+        prefix_sizes=prefixes, n_rows=int(ek_sorted.size),
+        table_rows=fam.table_rows,
+        n_distinct=len(new_freqs), stratum_freqs=new_freqs,
+        strata_keys=fam.strata_keys,
+        row_strata=merge_col(fam.row_strata, codes[idx][keep_new]),
+        entry_key_host=ek_sorted, columns_host=cols_host,
+        unit_host=merge_col(old_units, u[keep_new]),
+        row_ids=merge_col(fam.row_ids, idx[keep_new]),
+        stratum_live=fam.stratum_live)
+    block = DecayBlock(strata=strata,
+                       n_dropped=int((~keep_old).sum()),
+                       n_admitted=int(keep_new.sum()))
     return out, block
 
 

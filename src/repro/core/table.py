@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import (CmpOp, ColumnKind, ColumnSchema, Predicate,
-                              TableDelta, TableMutation, TableSchema)
+                              TableCompaction, TableDelta, TableMutation,
+                              TableSchema)
 
 # numpy comparator table for host-side predicate evaluation (mirrors
 # types.cmp_fns, which is the jnp table used on device)
@@ -317,6 +318,46 @@ class Table:
         delta = self.append(raw) if len(idx) else None
         self._tombstone(idx)
         return TableMutation(self.schema.name, idx, tomb_cols, delta)
+
+    def compact(self) -> TableCompaction | None:
+        """Physically drop every tombstoned row — the base-table compaction
+        epoch (docs/MAINTENANCE.md). This is the ONE place physical rows
+        move: every row id changes, so the returned remap (old id -> new id,
+        -1 for dropped rows) must be shipped to every layer keying on
+        physical ids before the table is used again — `BlinkDB.compact_table`
+        drives that. Live rows keep their relative order, so remapped sorted
+        id arrays stay sorted. Dictionaries are untouched (codes never move;
+        a value whose rows all died keeps its code at zero frequency).
+
+        Host-only: the compacted columns land in the host mirrors and the
+        device copies refresh lazily on next access, exactly like an append —
+        the sampled serving path never reads base columns, so steady-state
+        reclamation ships no device traffic of its own. Returns None when
+        there is nothing to reclaim (no tombstones).
+        """
+        if self.live is None or self.n_live == self.n_rows:
+            return None
+        live = self.live
+        n_before = self.n_rows
+        remap = np.where(live, np.cumsum(live) - 1, -1).astype(np.int64)
+        # Gathered join attributes ("dim.col") are device-only columns of the
+        # old physical length — strip them (the engine regathers lazily),
+        # mirroring Table.append's schema-only-delta rule.
+        for c in [c for c in self.columns if "." in c]:
+            del self.columns[c]
+            if self.columns_host is not None:
+                self.columns_host.pop(c, None)
+        if self.columns_host is None:
+            self.columns_host = {}
+        for cname in self.schema.column_names:
+            self.columns_host[cname] = self.host_column(cname)[live]
+            self._stale_device.add(cname)
+        self.n_rows = int(live.sum())
+        self.live = None
+        self._live_count = None
+        self._live_device = None
+        return TableCompaction(self.schema.name, remap, n_before,
+                               n_before - self.n_rows)
 
 
 def get_or_assign_codes(keys: list, lookup: dict) -> tuple[np.ndarray, list]:

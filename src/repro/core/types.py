@@ -107,6 +107,29 @@ class TableMutation:
         return self.delta.n_rows if self.delta is not None else 0
 
 
+@dataclasses.dataclass
+class TableCompaction:
+    """One base-table compaction's worth of physically dropped rows.
+
+    The reclamation protocol (docs/MAINTENANCE.md): `Table.compact` drops
+    every tombstoned row from the host columns — the one place physical rows
+    DO move — and returns this record so every layer keyed on physical row
+    ids (sample-family `row_ids`, striped-block `slot_row_ids`) can re-key
+    through `remap` without rereading anything. `remap[old_id]` is the row's
+    new physical index, or -1 for a dropped (dead) row; live rows keep their
+    relative order, so remapped id arrays stay sorted wherever they were.
+    """
+    table: str
+    # int64[n_rows_before]: old physical id -> new physical id (-1 = dropped)
+    remap: np.ndarray
+    n_rows_before: int
+    n_dropped: int
+
+    @property
+    def n_rows_after(self) -> int:
+        return self.n_rows_before - self.n_dropped
+
+
 class CmpOp(enum.Enum):
     EQ = "=="
     NE = "!="

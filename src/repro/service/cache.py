@@ -11,12 +11,18 @@ Values carry the sample generations the answer was computed under:
 Invalidation rides the engine's per-family invalidation matrix
 (docs/MAINTENANCE.md): every point where the matrix retires derived state —
 delta merges, tombstone passes, compactions, rebuilds, dimension-driven
-join-gather refreshes — bumps that family's generation counter and fires the
-engine's invalidation hooks. The cache subscribes, so appends/deletes/
-compactions evict exactly the entries whose family changed; entries on
-untouched families keep serving. Generations are re-checked on every `get`
-as well, so even a cache that missed a hook (constructed without one) can
-never serve a stale answer.
+join-gather refreshes, and the storage-reclamation epochs (base-table
+compaction relabels the physical rows a family's ids point at; an
+inclusion-frequency decay changes which rows are sampled at all) — bumps
+that family's generation counter and fires the engine's invalidation hooks.
+The cache subscribes, so appends/deletes/compactions/decays evict exactly
+the entries whose family changed; entries on untouched families keep
+serving. (A base compaction's bump is conservative — answers over live rows
+are numerically unchanged by relabeling — but the cache deliberately does
+not special-case it: one contract, "generation moved ⇒ revalidate", beats a
+second code path that must stay correct forever.) Generations are re-checked
+on every `get` as well, so even a cache that missed a hook (constructed
+without one) can never serve a stale answer.
 
 Disjunctive (multi-conjunct) queries union sub-answers that may come from
 several families; their entries conservatively depend on every family of the

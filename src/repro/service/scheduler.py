@@ -17,6 +17,14 @@ ONE caller. This scheduler closes the gap:
   request cannot afford the wait, deduplicates identical normalized queries,
   and executes ONE `query_batch` call — the engine groups compatible queries
   by (table, family, template) into shared scans (docs/BATCHING.md).
+* **Solo bypass**: when traffic is demonstrably solo — nothing queued, and
+  the previous batch had at most one request (a single blocking session can
+  never have two requests in flight) — `submit()` executes inline on the
+  caller thread under the execution lock, skipping the queue handoff, the
+  dispatcher wakeup, and the batching window entirely. A lone analyst pays
+  naive-`query()` latency instead of +window+handoff (the 0.80× single-
+  session regression in BENCH_serve); the moment a second session's request
+  races in, the bypass lock misses and everything coalesces as before.
 * **Deadlines**: the batching window is threaded into ELP resolution
   selection as headroom (`query_batch(deadline_headroom_s=window)`): a
   TimeBound query that waited up to one window still picks a K whose scan
@@ -58,6 +66,7 @@ class ServiceConfig:
     cache_capacity: int = 1024
     workload: WorkloadConfig = dataclasses.field(default_factory=WorkloadConfig)
     reoptimize: bool = True         # run workload epochs when drift triggers
+    solo_bypass: bool = True        # inline execution when traffic is solo
 
 
 @dataclasses.dataclass
@@ -101,11 +110,17 @@ class BlinkQLService:
         self._cond = threading.Condition()
         self._stop = False
         self._epoch_pending = False   # cache-hit path saw drift: wake & check
+        # Serializes ALL engine execution — the dispatcher's batches, the
+        # workload epochs, and the solo-bypass inline path (the engine is
+        # single-caller; the lock is what lets submit() run it directly).
+        self._exec_lock = threading.Lock()
         # Adaptive window: a size-1 batch means traffic is currently solo
         # (one blocking session can never have two requests in flight), so
         # the next batch flushes immediately instead of waiting a window
         # nothing will fill. Any coalesced batch re-arms the window.
-        self._last_batch_size = self.config.max_batch
+        # Starts at 1 — "assume solo until concurrency shows up" — so the
+        # FIRST request of a quiet service doesn't eat a full window either.
+        self._last_batch_size = 1
         self._dispatcher = threading.Thread(target=self._dispatch_loop,
                                             name="blinkql-dispatcher",
                                             daemon=True)
@@ -153,6 +168,14 @@ class BlinkQLService:
                         self._epoch_pending = True
                         self._cond.notify_all()
                 return hit
+        # Inline execution cannot honor a caller timeout (the caller IS the
+        # executor — there is no one to stop waiting on), so timed submits
+        # always take the queued path, whose done.wait(timeout) contract
+        # raises TimeoutError as documented.
+        if self.config.solo_bypass and timeout is None:
+            ans = self._try_solo_bypass(q, t0)
+            if ans is not None:
+                return ans
         req = _Request(q, threading.Event(), time.monotonic())
         with self._cond:
             if self._stop:
@@ -181,6 +204,43 @@ class BlinkQLService:
         """Convenience: submit a pre-assembled batch from one session (each
         request still coalesces with everything else in flight)."""
         return [self.submit(q, timeout) for q in queries]
+
+    def _try_solo_bypass(self, q: Query, t0: float) -> Answer | None:
+        """Inline execution for demonstrably solo traffic: nothing queued
+        and the previous batch had ≤ 1 request. Returns None (caller falls
+        back to the queued path) when another request is in flight, the
+        execution lock is contended, or the service is draining — the bypass
+        may only ever SKIP waiting, never serialize ahead of a batch that
+        exists. Runs on the caller thread under the execution lock, so the
+        engine's single-caller contract holds."""
+        if self._last_batch_size > 1 or self._queue:
+            return None
+        if not self._exec_lock.acquire(blocking=False):
+            return None
+        try:
+            with self._cond:
+                if self._queue or self._stop:
+                    return None   # raced: coalesce normally / reject at admit
+            snapshot = (self.cache.snapshot(q.table)
+                        if self.cache is not None else None)
+            # An engine error propagates to this caller alone — exactly the
+            # per-query error contract of the batched fallback path.
+            ans = self.db.query(q)
+            self._last_batch_size = 1
+            self.n_batches += 1
+            self.n_queries += 1
+            if self.cache is not None:
+                self.cache.put(q, ans, snapshot=snapshot)
+            self.monitor.record(q, ans, elapsed_s=time.monotonic() - t0)
+        finally:
+            self._exec_lock.release()
+        if self.config.reoptimize and self.maintainer is not None \
+                and self.monitor.should_reoptimize(self.maintainer.table_name):
+            # Epochs stay on the dispatcher thread (serialized with batches).
+            with self._cond:
+                self._epoch_pending = True
+                self._cond.notify_all()
+        return ans
 
     # ----------------------------------------------------------- dispatcher
     def _flush_deadline(self, batch: list[_Request], t_first: float) -> float:
@@ -241,7 +301,12 @@ class BlinkQLService:
     def _execute(self, batch: list[_Request]) -> None:
         """One coalesced engine call for the whole batch. Identical
         normalized queries collapse onto one slot (the scan answers once;
-        every duplicate request gets the same Answer)."""
+        every duplicate request gets the same Answer). Holds the execution
+        lock end to end — the solo bypass serializes against it."""
+        with self._exec_lock:
+            self._execute_batch(batch)
+
+    def _execute_batch(self, batch: list[_Request]) -> None:
         self._last_batch_size = len(batch)
         slots: dict[Query, int] = {}
         unique: list[Query] = []
@@ -309,7 +374,8 @@ class BlinkQLService:
             self.monitor.rebase(table=self.maintainer.table_name)
             return
         try:
-            report = self.maintainer.run_workload_epoch(templates)
+            with self._exec_lock:
+                report = self.maintainer.run_workload_epoch(templates)
             report["drift_score"] = self.monitor.drift_score(
                 self.maintainer.table_name)
         except Exception as e:   # noqa: BLE001 — an epoch failure must not

@@ -1,15 +1,21 @@
 """Full mutation lifecycle: tombstone deletes/updates, ghost-row compaction
-epochs, and a randomized mutation-sequence harness (docs/MAINTENANCE.md).
+epochs, storage-reclamation epochs (base-table compaction +
+inclusion-frequency decay), and a randomized mutation-sequence harness
+(docs/MAINTENANCE.md).
 
 The load-bearing property extends the PR-2 append oracle to ARBITRARY
-insert/delete/update/compact interleavings: after any mutation sequence the
-incrementally maintained family must be bit-identical to `build_family` on
-the mutated table with the concatenated per-epoch unit segments and
-CUMULATIVE inclusion frequencies (the physical histogram — a row's inclusion
-probability was fixed by the frequencies it was keyed under, so tombstoning
-its neighbours never re-keys or re-weights it). Plus cache validity: neither
-tombstones nor a geometry-preserving compaction may drop — or worse, serve
-stale — a compiled query program.
+insert/delete/update/sample-compact/base-compact/decay interleavings: after
+any mutation sequence the incrementally maintained family must be
+bit-identical to `build_family` on the row HISTORY (every row ever inserted
+— base compaction physically drops dead base rows, so the oracle rebuilds
+from a shadow history table and re-keys its row ids through the composed
+compaction remap) with the per-epoch unit segments (decay epochs overwrite
+the affected rows' units with the deterministic decay stream) and inclusion
+frequencies that are CUMULATIVE except where a decay reset them (the mirror
+"forgives" exactly the dead rows each decayed stratum held at decay time).
+Plus cache validity: neither tombstones, a geometry-preserving compaction,
+nor a base compaction may drop — or worse, serve stale — a compiled query
+program.
 
 The hypothesis harness is optional (importorskip-style guard, matching
 tests/test_properties.py); the deterministic interleavings below it run in
@@ -119,33 +125,76 @@ def _mk_db(n0=4000, k1=300.0, seed=SEED, **synth_kw):
     return db
 
 
+def _clone_table(tbl: table_lib.Table) -> table_lib.Table:
+    """Host-side snapshot of a table (the mirror's shadow history table —
+    it only ever runs host paths: append/delete/update/host_column)."""
+    cols = {c: None for c in tbl.schema.column_names}
+    out = table_lib.Table(
+        tbl.schema, cols,
+        {k: v.copy() for k, v in tbl.dictionaries.items()},
+        tbl.n_rows,
+        columns_host={c: np.array(tbl.host_column(c))
+                      for c in tbl.schema.column_names},
+        live=None if tbl.live is None else tbl.live.copy())
+    out._stale_device = set(tbl.schema.column_names)
+    return out
+
+
 class MutationMirror:
-    """Drives engine mutations while recording the per-epoch unit segments,
-    so the from-scratch oracle can be rebuilt after every step."""
+    """Drives engine mutations while recording everything the from-scratch
+    oracle needs after every step: the per-row unit vector (append segments,
+    overwritten by decay draws), a shadow HISTORY table holding every row
+    ever inserted (base compaction drops dead rows from the real table but
+    the inclusion-frequency story is defined over the history), the composed
+    history→current row-id remap, and per-stratum decay "forgiveness" (how
+    many dead rows each decayed stratum shed from its inclusion count)."""
 
     def __init__(self, db: BlinkDB, table: str = "s"):
         self.db, self.table = db, table
-        n0 = db.tables[table].n_rows
+        tbl = db.tables[table]
+        n0 = tbl.n_rows
         seed = db.config.seed
-        self.units = [samp.base_units(n0, seed)]
-        self.uunits = [samp.base_units(n0, seed, uniform=True)]
+        # Per-FAMILY unit vectors: append epochs extend every stratified
+        # family with the same shared delta draw, but a decay redraws units
+        # for ONE family's strata — afterwards the families' streams diverge.
+        self.units = {phi: samp.base_units(n0, seed)
+                      for phi in db.families[table] if phi}
+        self.uunits = samp.base_units(n0, seed, uniform=True)
+        self.history = _clone_table(tbl)
+        self.h2c = np.arange(n0, dtype=np.int64)   # history id -> current id
+        # phi -> {stratum key tuple: dead rows forgiven at last decay}
+        self.forgiven: dict[tuple[str, ...], dict[tuple, int]] = {}
 
     def _draw(self, d: int, epoch: int) -> None:
         seed = self.db.config.seed
-        self.units.append(samp.delta_units(d, seed, epoch))
-        self.uunits.append(samp.delta_units(d, seed, epoch, uniform=True))
+        seg = samp.delta_units(d, seed, epoch)
+        self.units = {phi: np.concatenate([u, seg])
+                      for phi, u in self.units.items()}
+        self.uunits = np.concatenate(
+            [self.uunits, samp.delta_units(d, seed, epoch, uniform=True)])
+
+    def _extend_remap(self, start_row: int, d: int) -> None:
+        self.h2c = np.concatenate(
+            [self.h2c, start_row + np.arange(d, dtype=np.int64)])
 
     def append(self, raw):
         rep = self.db.append_rows(self.table, raw)
+        self.history.append(raw)
+        self._extend_remap(rep.delta.start_row, rep.delta.n_rows)
         self._draw(rep.delta.n_rows, rep.epoch)
         return rep
 
     def delete(self, pred):
-        return self.db.delete_rows(self.table, pred)
+        rep = self.db.delete_rows(self.table, pred)
+        self.history.delete(pred)
+        return rep
 
     def update(self, pred, assignments):
         rep = self.db.update_rows(self.table, pred, assignments)
+        self.history.update(pred, assignments)
         if rep.epoch is not None:
+            self._extend_remap(rep.mutation.delta.start_row,
+                               rep.mutation.delta.n_rows)
             self._draw(rep.mutation.delta.n_rows, rep.epoch)
         return rep
 
@@ -153,18 +202,74 @@ class MutationMirror:
         return [phi for phi in list(self.db.ghost_fractions(self.table))
                 if self.db.compact_family(self.table, phi)]
 
-    def oracle(self, phi: tuple[str, ...]) -> samp.SampleFamily:
-        """From-scratch rebuild on the mutated table: same unit segments,
-        CUMULATIVE (physical-histogram) inclusion frequencies, same caps."""
+    def base_compact(self):
+        comp = self.db.compact_table(self.table)
+        if comp is not None:
+            self.h2c = np.where(self.h2c >= 0,
+                                comp.remap[np.maximum(self.h2c, 0)], -1)
+        return comp
+
+    def decay(self, ratio: float = 1.5):
+        """Engine decay of every over-ratio stratum (the maintainer policy),
+        mirrored into the oracle state: the affected LIVE history rows take
+        their units from the deterministic decay stream (indexed by CURRENT
+        physical id), and each decayed stratum forgives exactly the dead
+        rows it held right now."""
+        from repro.core.maintenance import strata_to_decay
         tbl = self.db.tables[self.table]
+        out = {}
+        for phi in list(self.db.families[self.table]):
+            fam = self.db.families[self.table][phi]
+            strata = strata_to_decay(fam, ratio)
+            if not strata.size:
+                continue
+            keys = [tuple(int(v) for v in fam.strata_keys[s])
+                    for s in strata]
+            block = self.db.decay_family(self.table, phi, strata)
+            draw = samp.decay_units(tbl.n_rows, self.db.config.seed,
+                                    block.epoch)
+            # history rows of the decayed strata, via stable stratum ids
+            mat = np.stack([self.history.host_column(c).astype(np.int32)
+                            for c in phi], axis=1)
+            codes, _ = table_lib.map_codes_stable(mat, fam.strata_keys)
+            member = np.isin(codes, strata)
+            live = (self.history.live if self.history.live is not None
+                    else np.ones(self.history.n_rows, dtype=bool))
+            alive = np.flatnonzero(member & live)
+            self.units[phi][alive] = draw[self.h2c[alive]]
+            fg = self.forgiven.setdefault(phi, {})
+            for s, key in zip(strata, keys):
+                fg[key] = int((member & ~live
+                               & (codes == s)).sum())
+            out[phi] = strata
+        return out
+
+    def oracle(self, phi: tuple[str, ...]) -> samp.SampleFamily:
+        """From-scratch rebuild on the row HISTORY: same units (decay draws
+        included), inclusion frequencies cumulative minus forgiveness, same
+        caps — then row ids re-keyed into CURRENT physical coordinates
+        through the composed compaction remap."""
+        hist = self.history
         fam = self.db.families[self.table][phi]
         if phi == ():
-            return samp.build_uniform_family(
-                tbl, 0.0, m=len(fam.ks), units=np.concatenate(self.uunits),
+            ofam = samp.build_uniform_family(
+                hist, 0.0, m=len(fam.ks), units=self.uunits,
                 k1=fam.ks[0], cumulative_inclusion=True)
-        return samp.build_family(
-            tbl, phi, k1=fam.ks[0], m=len(fam.ks),
-            units=np.concatenate(self.units), cumulative_inclusion=True)
+        else:
+            codes, key_matrix = table_lib.combined_codes(hist, phi)
+            nd = int(codes.max()) + 1 if len(codes) else 0
+            incl = table_lib.stratum_frequencies(codes, nd)
+            for key, dead in self.forgiven.get(phi, {}).items():
+                i = np.flatnonzero(
+                    (key_matrix == np.asarray(key, np.int32)).all(axis=1))
+                assert i.size == 1, (key, key_matrix)
+                incl[i[0]] -= dead
+            ofam = samp.build_family(
+                hist, phi, k1=fam.ks[0], m=len(fam.ks),
+                units=self.units[phi], incl_freqs=incl)
+        new_ids = self.h2c[ofam.row_ids]
+        assert (new_ids >= 0).all(), "oracle sampled a dropped row"
+        return ofam.lazy_replace(row_ids=new_ids)
 
     def check(self):
         for phi in self.db.families[self.table]:
@@ -242,6 +347,10 @@ def _apply_op(mirror: MutationMirror, op) -> None:
             mirror.update(pred, {"Bitrate": 100.0 + assign})
     elif kind == "compact":
         mirror.compact()
+    elif kind == "basecompact":
+        mirror.base_compact()
+    elif kind == "decay":
+        mirror.decay(ratio=1.5)
     else:                                    # pragma: no cover
         raise AssertionError(op)
 
@@ -257,6 +366,8 @@ if HAVE_HYPOTHESIS:
         st.tuples(st.just("update"), st.sampled_from(["City", "OS"]),
                   st.integers(0, 60), st.integers(0, 5)),
         st.tuples(st.just("compact")),
+        st.tuples(st.just("basecompact")),
+        st.tuples(st.just("decay")),
     )
 
     @needs_hypothesis
@@ -264,9 +375,10 @@ if HAVE_HYPOTHESIS:
               deadline=None)
     @given(seq=st.lists(_ops, min_size=1, max_size=6))
     def test_randomized_mutation_sequences_match_oracle(seq):
-        """Any interleaving of append/delete/update/compact leaves every
-        family bit-identical to the from-scratch rebuild oracle — checked
-        after EVERY step, so a bad intermediate state can't cancel out."""
+        """Any interleaving of append/delete/update/sample-compact/
+        base-compact/decay leaves every family bit-identical to the
+        from-scratch rebuild oracle — checked after EVERY step, so a bad
+        intermediate state can't cancel out."""
         mirror = MutationMirror(_mk_db(n0=2500))
         mirror.check()
         for op in seq:
@@ -277,8 +389,9 @@ if HAVE_HYPOTHESIS:
 # -------------------------------- deterministic interleavings (tier-1 safe)
 
 def _random_op(rng: np.random.Generator):
-    kind = rng.choice(["append", "delete", "update", "compact"],
-                      p=[.3, .3, .3, .1])
+    kind = rng.choice(["append", "delete", "update", "compact",
+                       "basecompact", "decay"],
+                      p=[.25, .25, .25, .09, .08, .08])
     if kind == "append":
         return ("append", int(rng.integers(20, 400)),
                 int(rng.integers(10 ** 6)))
@@ -288,7 +401,7 @@ def _random_op(rng: np.random.Generator):
     if kind == "update":
         return ("update", str(rng.choice(["City", "OS"])),
                 int(rng.integers(0, 60)), int(rng.integers(0, 6)))
-    return ("compact",)
+    return (kind,)
 
 
 @pytest.mark.parametrize("case_seed", [0, 1, 2])
@@ -319,20 +432,25 @@ def test_fixed_mutation_sequence_matches_oracle():
         ("update", "City", 1, 1),                # move stratum 1 to upd1
         ("delete", "OS", 2),
         ("compact",),
+        ("decay",),                              # forgive the churned strata
         ("update", "OS", 0, 2),                  # numeric assignment
+        ("basecompact",),                        # drop the dead base rows
         ("append", 150, 456),
         ("delete", "City", 1),                   # stratum 1 now fully dead
+        ("decay",),                              # ...decay empties its freq
         ("compact",),
+        ("basecompact",),
     ]
     mirror.check()
     for op in seq:
         _apply_op(mirror, op)
         mirror.check()
-    # the emptied stratum really is empty — live count 0, inclusion kept
+    # the emptied stratum really is empty — live count 0, and the decay
+    # after the delete forgave its dead inclusion weight entirely
     fam = db.families["s"][("City",)]
     c1 = int(np.nonzero((fam.strata_keys == tbl.encode_value(
         "City", cities[1])).all(axis=1))[0][0])
-    assert fam.live_freqs[c1] == 0 and fam.stratum_freqs[c1] > 0
+    assert fam.live_freqs[c1] == 0 and fam.stratum_freqs[c1] == 0
     # and the engine's device path agrees with the exact path afterwards
     q = Query("s", AggOp.COUNT, group_by=("OS",), bound=ErrorBound(0.2))
     got = {g.key: g.estimate for g in db.query(q).groups}
@@ -435,6 +553,159 @@ def test_run_epoch_compacts_past_threshold():
                                                         n_cities=50))
     assert report["compacted"], report
     assert all(f <= 0.05 for f in db.ghost_fractions("s").values())
+
+
+# --------------------------------- storage reclamation (base compact + decay)
+
+def test_base_compaction_remaps_row_ids_for_every_family():
+    """After Table.compact + BlinkDB.compact_table, EVERY family in play —
+    stratified on one column, on two columns, and the uniform family — has
+    its row_ids re-keyed so they address exactly the same rows in the
+    compacted table, and the striped slot_row_ids mirrors agree."""
+    db = _mk_db(n0=4000, k1=300.0)
+    db.add_family("s", ("City", "OS"))
+    tbl = db.tables["s"]
+    q = Query("s", AggOp.COUNT, group_by=("OS",), bound=ErrorBound(0.2))
+    db.query(q)   # stripe + compile every family's machinery
+    for day in range(8):
+        db.delete_rows("s", Predicate.where(Atom("dt", CmpOp.EQ, day)))
+    before = {phi: {c: db.families["s"][phi].host_column(c).copy()
+                    for c in tbl.schema.column_names}
+              for phi in db.families["s"]}
+    progs = dict(db._programs)
+    comp = db.compact_table("s")
+    assert comp is not None and comp.n_dropped > 0
+    assert tbl.live is None and tbl.n_rows == comp.n_rows_after
+    assert db.compact_table("s") is None   # idempotent: nothing left
+    for phi, cols in before.items():
+        fam = db.families["s"][phi]
+        assert (fam.row_ids >= 0).all() and (fam.row_ids < tbl.n_rows).all()
+        # same rows, new addresses: family columns still match the base rows
+        for c, old in cols.items():
+            np.testing.assert_array_equal(fam.host_column(c), old)
+            np.testing.assert_array_equal(tbl.host_column(c)[fam.row_ids],
+                                          fam.host_column(c))
+        striped = db._striped.get(("s", phi))
+        if striped is not None:
+            ids = striped.slot_row_ids
+            occ = ids[: striped.n_rows]
+            assert (occ < tbl.n_rows).all()
+            live_slots = occ >= 0
+            # every occupied non-ghost slot names a real (remapped) row
+            for c in ("City", "OS"):
+                col = tbl.host_column(c)
+                np.testing.assert_array_equal(
+                    col[occ[live_slots]],
+                    np.asarray(striped.columns[c]).T.reshape(-1)
+                    [: striped.n_rows][live_slots])
+    # zero device invalidation: every compiled program survived
+    assert all(db._programs.get(k) is v for k, v in progs.items()), \
+        "base compaction must not invalidate sampled-path programs"
+    got = {g.key: g.estimate for g in db.query(q).groups}
+    exact = {g.key: g.estimate
+             for g in db.exact_query(Query("s", AggOp.COUNT,
+                                           group_by=("OS",))).groups}
+    for key, est in got.items():
+        assert abs(est - exact[key]) / max(exact[key], 1.0) < 0.25
+
+
+def test_base_compaction_then_mutations_stay_consistent():
+    """The remapped ids keep working: deletes AFTER a base compaction must
+    find their sampled copies (tombstones match on row ids), and appends
+    land at the compacted end."""
+    db = _mk_db(n0=3000, k1=600.0)
+    tbl = db.tables["s"]
+    cities = tbl.dictionaries["City"]
+    counts = np.bincount(tbl.host_column("City"), minlength=len(cities))
+    # largest stratum still CONTAINED in the sample (F < K₁): exact answers,
+    # and populous enough that per-OS deletes never empty it
+    code = int(np.argmax(np.where(counts < 500, counts, -1)))
+    city = cities[code]
+    q = Query("s", AggOp.COUNT,
+              predicate=Predicate.where(Atom("City", CmpOp.EQ, city)))
+    db.query(q)
+    db.delete_rows("s", Predicate.where(Atom("OS", CmpOp.EQ, "os0")))
+    assert db.compact_table("s") is not None
+    # post-compaction delete of a CONTAINED stratum: exact before and after
+    want = int((tbl.host_column("City") == code).sum())
+    assert abs(db.query(q).groups[0].estimate - want) < 1e-3
+    db.delete_rows("s", Predicate.where(Atom("City", CmpOp.EQ, city),
+                                        Atom("OS", CmpOp.EQ, "os1")))
+    want = int(((tbl.host_column("City") == code) & tbl.live).sum())
+    assert abs(db.query(q).groups[0].estimate - want) < 1e-3
+    assert abs(db.exact_query(q).groups[0].estimate - want) < 1e-6
+    db.append_rows("s", synth.sessions_table(200, seed=42, n_cities=50))
+    assert abs(db.exact_query(q).groups[0].estimate
+               - db.query(q).groups[0].estimate) < 1e-3
+
+
+def test_decay_restores_sample_utilization():
+    """Churn thins a stratified family under monotone inclusion freqs; the
+    decay epoch restores its sampled-row count toward the fresh-build level
+    and keeps HT estimates exact for contained strata."""
+    db = _mk_db(n0=6000, k1=400.0)
+    tbl = db.tables["s"]
+    q = Query("s", AggOp.COUNT, group_by=("OS",), bound=ErrorBound(0.2))
+    db.query(q)
+    # churn: delete half the days, refill with fresh rows, repeat
+    for round_ in range(3):
+        for day in range(0, 30, 2):
+            db.delete_rows("s", Predicate.where(Atom("dt", CmpOp.EQ, day)))
+        db.append_rows("s", synth.sessions_table(1500, seed=100 + round_,
+                                                 n_cities=50))
+    fam = db.families["s"][("City",)]
+    thinned = fam.n_rows
+    assert (fam.stratum_freqs.sum() > 1.5 * fam.live_freqs.sum()), \
+        "churn setup should inflate cumulative freqs"
+    from repro.core.maintenance import strata_to_decay
+    strata = strata_to_decay(fam, 1.5)
+    assert strata.size > 0
+    block = db.decay_family("s", ("City",), strata)
+    fam2 = db.families["s"][("City",)]
+    assert block.n_admitted > 0 and fam2.n_rows > thinned, \
+        (thinned, fam2.n_rows)
+    np.testing.assert_array_equal(fam2.stratum_freqs[strata],
+                                  fam2.live_freqs[strata])
+    # rates exact by construction: a contained stratum answers exactly
+    counts = np.bincount(tbl.host_column("City")[np.asarray(tbl.live)]
+                         if tbl.live is not None
+                         else tbl.host_column("City"))
+    code = int(np.argmin(np.where(counts > 0, counts, 1 << 30)))
+    city = tbl.dictionaries["City"][code]
+    qc = Query("s", AggOp.COUNT,
+               predicate=Predicate.where(Atom("City", CmpOp.EQ, city)))
+    got = db.query(qc).groups[0].estimate
+    exact = db.exact_query(qc).groups[0].estimate
+    assert abs(got - exact) < 1e-3, (got, exact)
+
+
+def test_run_epoch_runs_reclamation():
+    """The maintenance epoch drives both reclamation passes from its config
+    knobs: past base_compact_threshold the base table physically shrinks,
+    and over-ratio strata decay — all inside one run_epoch(delta=...)."""
+    db = _mk_db(n0=5000, k1=400.0)
+    db.query(Query("s", AggOp.COUNT, bound=ErrorBound(0.2)))   # stripe
+    maint = SampleMaintainer(
+        db, "s", [QueryTemplate(frozenset({"City"}), 1.0)],
+        MaintenanceConfig(drift_threshold=0.9, compact_threshold=0.05,
+                          base_compact_threshold=0.1, decay_ratio=1.2))
+    for day in range(10):
+        db.delete_rows("s", Predicate.where(Atom("dt", CmpOp.EQ, day)))
+    tbl = db.tables["s"]
+    assert db.dead_fraction("s") > 0.1
+    n_phys_before = tbl.n_rows
+    report = maint.run_epoch(delta=synth.sessions_table(100, seed=5,
+                                                        n_cities=50))
+    assert report["base_compacted"] > 0
+    assert tbl.n_rows < n_phys_before
+    assert tbl.live is None   # compaction must clear the tombstone mask
+    assert report["decayed"].get(("City",)), report
+    fam = db.families["s"][("City",)]
+    assert fam.stratum_freqs.sum() <= 1.2 * fam.live_freqs.sum() + 1e-9
+    # steady state: an immediate second epoch has nothing left to reclaim
+    report2 = maint.run_epoch(delta=synth.sessions_table(50, seed=6,
+                                                         n_cities=50))
+    assert report2["base_compacted"] == 0 and not report2["decayed"]
 
 
 # ------------------------------------------------------- drift (satellite)

@@ -402,8 +402,10 @@ def test_service_admission_control_rejects_past_max_queue():
 
     db.query_batch = slow_batch
     cities = db.tables["sessions"].dictionaries["City"]
+    # solo_bypass off: this test saturates the QUEUE against a slowed
+    # query_batch; the inline bypass would route around both.
     cfg = ServiceConfig(batch_window_s=0.0, max_queue=2, max_batch=1,
-                        use_cache=False)
+                        use_cache=False, solo_bypass=False)
     with BlinkQLService(db, config=cfg) as svc:
         errors, answers = [], []
 
@@ -541,6 +543,83 @@ def test_workload_churn_triggers_reoptimization_epoch():
         # service still answers on the reshaped family set
         assert svc.submit("SELECT COUNT(*) FROM sessions "
                           "WHERE OS = 'os1' ERROR WITHIN 20%").groups
+
+
+# ------------------------------------------------------- solo bypass
+
+def test_solo_bypass_skips_window_and_matches_query():
+    """Single-session traffic must not pay the batching window (the 0.80×
+    regression at n_sessions=1 in BENCH_serve): sequential submits execute
+    inline — far below the deliberately huge window — and answers stay
+    bit-identical to the programmatic path."""
+    db = _db(n_rows=8_000)
+    city = db.tables["sessions"].dictionaries["City"][0]
+    q = Query("sessions", AggOp.COUNT,
+              predicate=Predicate.where(Atom("City", CmpOp.EQ, city)),
+              bound=ErrorBound(0.1)).normalized()
+    db.query(q)   # warm: stripe + compile + ELP (what the benchmark warms)
+    window = 0.5
+    with BlinkQLService(db, config=ServiceConfig(batch_window_s=window,
+                                                 use_cache=False)) as svc:
+        lat = []
+        answers = []
+        for _ in range(5):
+            t0 = time.monotonic()
+            answers.append(svc.submit(q))
+            lat.append(time.monotonic() - t0)
+        stats = svc.stats()
+    # EVERY submit — including the very first — beat the window by a mile.
+    assert max(lat) < window / 2, lat
+    assert stats["queries"] == 5
+    for a in answers:
+        _assert_bit_identical(db.query(q), a)
+
+
+def test_solo_bypass_still_serves_cache_and_monitor():
+    """The bypass is a scheduling shortcut, not a service bypass: answers
+    land in the answer cache and the workload monitor sees every query."""
+    db = _db(n_rows=8_000)
+    city = db.tables["sessions"].dictionaries["City"][1]
+    text = (f"SELECT COUNT(*) FROM sessions WHERE City = '{city}' "
+            f"ERROR WITHIN 10%")
+    with BlinkQLService(db, config=ServiceConfig(batch_window_s=0.3)) as svc:
+        a1 = svc.submit(text)
+        a2 = svc.submit(text)
+        assert a2 is a1                     # cache hit on the bypass answer
+        assert svc.cache.stats.hits == 1
+        key = ("sessions", frozenset({"City"}))
+        assert svc.monitor.template_stats[key].n == 2
+
+
+def test_concurrent_burst_still_coalesces_with_bypass_enabled():
+    """The bypass must never serialize a burst: with many sessions racing,
+    at most one request runs inline and the rest coalesce into shared
+    scans (mean batch size stays well above 1)."""
+    db = _db(n_rows=8_000)
+    cities = db.tables["sessions"].dictionaries["City"]
+    texts = [f"SELECT COUNT(*) FROM sessions WHERE City = '{c}' "
+             f"ERROR WITHIN 20%" for c in cities[:8]]
+    for t in texts:
+        db.query(parse_blinkql(t, db).normalized())   # warm
+    with BlinkQLService(db, config=ServiceConfig(batch_window_s=0.05,
+                                                 use_cache=False)) as svc:
+        barrier = threading.Barrier(len(texts))
+        got: dict[int, object] = {}
+
+        def session(i):
+            barrier.wait()
+            got[i] = svc.submit(texts[i])
+
+        threads = [threading.Thread(target=session, args=(i,))
+                   for i in range(len(texts))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert svc.n_batches <= 3, "burst did not coalesce under bypass"
+    for i, text in enumerate(texts):
+        _assert_bit_identical(db.query(parse_blinkql(text, db).normalized()),
+                              got[i])
 
 
 # ------------------------------------------------------- elp headroom
