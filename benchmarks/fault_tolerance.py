@@ -1,0 +1,209 @@
+"""Degraded-answer availability and latency under injected faults.
+
+32 concurrent "sessions" (threads) submit BlinkQL text queries through
+`BlinkQLService` while a `FaultPlan` is armed — the chaos-harness benchmark
+behind the ISSUE-6 acceptance floor: with one logical shard down (both
+replicas), ≥ 99% of admitted queries must still return an answer (HT-
+reweighted, annotated `degraded=True`) with bounded p99 latency. Three
+fault regimes over the SAME warm engine:
+
+* **fault_none**   — no plan armed: the fused-scan baseline (availability
+  must be 1.0; this row also anchors the latency bands);
+* **fault_shard_down** — a persistent kill of one logical shard, all
+  replicas: every scan loses 1/n_logical of its strata and serves the
+  reweighted partial (the paper-adjacent "a node died mid-query" story);
+* **fault_chaos**  — `random_plan(seed)`: bounded random kills/delays/
+  poisons across shard and engine sites; the availability floor is looser
+  (typed errors are allowed — the contract is no hangs and no un-annotated
+  answers, not zero failures).
+
+Availability counts a returned `Answer` (degraded or not); typed errors
+(DegradedServiceError, FaultError, admission rejections) count against it;
+anything untyped or a hang fails the run outright. The answer cache is
+disabled for all rows so availability measures live serving, not
+memoization. Emits BENCH_fault.json (CI-tracked, gated by
+benchmarks/check_regression.py: availability floors are machine-independent
+and gated tight; latency gets wide bands).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+try:
+    from benchmarks import _bootstrap  # noqa: F401  (module mode)
+except ImportError:
+    import _bootstrap  # noqa: F401  (script mode: benchmarks/ is sys.path[0])
+
+from repro.fault.inject import FaultPlan, FaultSpec, arm, random_plan
+from repro.service import (AdmissionError, BlinkQLService,
+                           DegradedServiceError, ServiceConfig,
+                           ServiceUnhealthyError)
+from repro.fault.inject import FaultError
+from benchmarks import common
+
+N_SESSIONS = 32
+TYPED = (FaultError, DegradedServiceError, AdmissionError,
+         ServiceUnhealthyError, TimeoutError)
+
+
+def _texts(db, n: int) -> list[str]:
+    cities = db.tables["sessions"].dictionaries["City"]
+    return [
+        f"SELECT AVG(SessionTime) FROM sessions WHERE City = "
+        f"'{cities[i % len(cities)]}' ERROR WITHIN 10% CONFIDENCE 95%"
+        for i in range(n)
+    ]
+
+
+def _drive(svc, n_sessions: int, per_session: int,
+           texts: list[str]) -> dict:
+    """Drive n_sessions threads; classify every submission. Returns raw
+    tallies + per-request latencies (answers only)."""
+    total = n_sessions * per_session
+    lat = np.full(total, np.nan)
+    outcome = np.zeros(total, dtype=np.int8)   # 1 answer, 2 degraded, 3 err
+    barrier = threading.Barrier(n_sessions + 1)
+
+    def session(sid: int):
+        barrier.wait()
+        for j in range(per_session):
+            i = sid * per_session + j
+            t0 = time.perf_counter()
+            try:
+                ans = svc.submit(texts[i % len(texts)], timeout=120)
+                lat[i] = time.perf_counter() - t0
+                outcome[i] = 2 if ans.degraded else 1
+            except TYPED:
+                outcome[i] = 3
+
+    threads = [threading.Thread(target=session, args=(s,))
+               for s in range(n_sessions)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join(timeout=600)
+    if any(t.is_alive() for t in threads):
+        raise RuntimeError("a session hung under faults — chaos invariant "
+                           "violated")
+    elapsed = time.perf_counter() - t0
+    if (outcome == 0).any():
+        raise RuntimeError("an untyped error escaped the fault layer")
+    answered = lat[np.isfinite(lat)]
+    return {
+        "elapsed_s": elapsed,
+        "answered": int((outcome != 3).sum()),
+        "degraded": int((outcome == 2).sum()),
+        "errors": int((outcome == 3).sum()),
+        "total": total,
+        "latencies": answered,
+    }
+
+
+def _row(name: str, tally: dict, extra: str = "") -> dict:
+    avail = tally["answered"] / tally["total"]
+    degraded_frac = (tally["degraded"] / tally["answered"]
+                     if tally["answered"] else 0.0)
+    lat = tally["latencies"]
+    p50 = float(np.percentile(lat, 50) * 1e3) if lat.size else float("nan")
+    p99 = float(np.percentile(lat, 99) * 1e3) if lat.size else float("nan")
+    qps = tally["answered"] / tally["elapsed_s"]
+    return {
+        "name": name,
+        "us_per_call": tally["elapsed_s"] / tally["total"] * 1e6,
+        "derived": (f"availability={avail:.3f} degraded={degraded_frac:.3f} "
+                    f"p99={p99:.1f}ms qps={qps:.1f}{extra}"),
+        "availability": avail,
+        "degraded_frac": degraded_frac,
+        "errors": tally["errors"],
+        "latency_p50_ms": p50,
+        "latency_p99_ms": p99,
+        "qps": qps,
+        "n_sessions": N_SESSIONS,
+        "total_queries": tally["total"],
+    }
+
+
+def run(n_rows: int = 400_000, per_session: int = 16,
+        chaos_seed: int = 11, json_path: str | None = None) -> list[dict]:
+    db = common.conviva_db(n_rows=n_rows)
+    if ("City",) not in db.families["sessions"]:
+        db.add_family("sessions", ("City",))
+    texts = _texts(db, 64)
+
+    # Warm everything the timing should exclude: striping, sequential and
+    # batched compiled programs per pad class — and the SHARDED programs
+    # (same compiled fn, traced shard mask, but warm the code path once).
+    from repro.service.parser import parse_blinkql
+    warm_queries = [parse_blinkql(t, db).normalized() for t in texts]
+    db.query(warm_queries[0])
+    q_pad = 1
+    while q_pad <= 64:
+        db.query_batch(warm_queries[:q_pad])
+        q_pad *= 2
+    with arm(FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                  match=(("shard", 99),))], seed=0)):
+        db.query(warm_queries[0])
+        db.query_batch(warm_queries[:2])
+
+    def service():
+        return BlinkQLService(db, config=ServiceConfig(
+            use_cache=False, retry_backoff_s=0.002))
+
+    rows = []
+
+    # --- baseline: no faults
+    svc = service()
+    tally = _drive(svc, N_SESSIONS, per_session, texts)
+    svc.close()
+    rows.append(_row("fault_none", tally))
+
+    # --- one shard down, all replicas (the acceptance-floor row)
+    shard_down = FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                      match=(("shard", 1),))], seed=0)
+    svc = service()
+    with arm(shard_down):
+        tally = _drive(svc, N_SESSIONS, per_session, texts)
+    svc.close()
+    rows.append(_row("fault_shard_down", tally, " shard1_down"))
+
+    # --- random chaos
+    svc = service()
+    with arm(random_plan(chaos_seed)):
+        tally = _drive(svc, N_SESSIONS, per_session, texts)
+    svc.close()
+    rows.append(_row("fault_chaos", tally, f" seed={chaos_seed}"))
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_fault.json")
+    ap.add_argument("--n-rows", type=int, default=400_000)
+    ap.add_argument("--chaos-seed", type=int, default=11)
+    ap.add_argument("--quick", action="store_true",
+                    help="small data + fewer queries (CI smoke)")
+    args = ap.parse_args()
+    kw = dict(json_path=args.json, chaos_seed=args.chaos_seed)
+    if args.quick:
+        kw.update(n_rows=60_000, per_session=8)
+    else:
+        kw.update(n_rows=args.n_rows)
+    rows = run(**kw)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+
+
+if __name__ == "__main__":
+    main()

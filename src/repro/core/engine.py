@@ -29,6 +29,7 @@ from repro.core import table as table_lib
 from repro.core.types import (AggOp, Answer, ColumnKind, ErrorBound,
                               GroupResult, Query, QueryTemplate, TimeBound)
 from repro.core.selection import rewrite_disjuncts, select_family
+from repro.fault import inject
 
 
 @dataclasses.dataclass
@@ -42,6 +43,15 @@ class EngineConfig:
     use_pallas: bool = False     # fused Pallas scan vs pure-jnp reference
     reuse_elp: bool = True       # cache ELP decisions per template (§4.4)
     seed: int = 0
+    # Fault-domain sharding (docs/FAULTS.md). Engages ONLY under an armed
+    # non-empty FaultPlan: scans split into n_logical_shards disjoint
+    # stratum partitions with shard_replicas attempts each, so a lost shard
+    # degrades the answer (HT reweight, wider CIs) instead of failing it.
+    # Without an armed plan the fused single-pass path runs unchanged —
+    # bit-identical answers, zero overhead.
+    n_logical_shards: int = 4
+    shard_replicas: int = 2
+    straggler_deadline_s: float | None = None   # per-attempt deadline
 
 
 # Largest Q per fused scan invocation. Pallas: the Qp·B VMEM terms scale
@@ -740,11 +750,25 @@ class BlinkDB:
             return self.tables[dim_name].decode_value(dim_col, code)
         return self.tables[table_name].decode_value(col, code)
 
+    def _fault_sharding_active(self) -> bool:
+        """Engagement rule for the sharded scan path: an armed, NON-EMPTY
+        FaultPlan and more than one configured logical shard. Kept off
+        otherwise so the fused single pass — and its bit-exact float
+        summation order — serves every fault-free query (docs/FAULTS.md)."""
+        plan = inject.active()
+        return (plan is not None and bool(plan)
+                and self.config.n_logical_shards > 1)
+
     def _run_at_k(self, table_name: str, q: Query, phi: tuple[str, ...],
-                  k: float) -> tuple[est_lib.GroupedMoments, int, float]:
+                  k: float) -> tuple[est_lib.GroupedMoments, int, float,
+                                     "exec_lib.ShardScanReport | None"]:
         """One fused scan at resolution k via a cached compiled program.
         Programs are compiled once per (family × query template) — k and
-        predicate constants are traced args (§2.1 template stability)."""
+        predicate constants are traced args (§2.1 template stability).
+        Under an armed fault plan the scan runs shard-partitioned
+        (executor.run_sharded_scan, same compiled program per shard via the
+        traced `valid` mask) and the returned report carries the loss
+        provenance; otherwise the report is None."""
         fam = self.families[table_name][phi]
         striped = self._striped_for(table_name, phi)
         bound_pred = exec_lib.bind_predicate(q.predicate, self._encode(table_name))
@@ -768,18 +792,35 @@ class BlinkDB:
             # exactly once: the timed call below both warms and answers.
             fn = jfn.lower(jnp.float32(k), vals, *args).compile()
             self._programs[key] = fn
+        inject.site("engine.scan", table=table_name)
         t0 = time.perf_counter()
-        mom = fn(jnp.float32(k), vals, *args)
-        mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+        report = None
+        if self._fault_sharding_active():
+            def call(mask):
+                m = fn(jnp.float32(k), vals, striped.columns, striped.freq,
+                       striped.entry_key, mask)
+                return jax.tree.map(lambda x: x.block_until_ready(), m)
+            mom, report = exec_lib.run_sharded_scan(
+                call, striped,
+                n_logical=self.config.n_logical_shards,
+                n_replicas=self.config.shard_replicas,
+                site_ctx={"table": table_name},
+                deadline_s=self.config.straggler_deadline_s)
+        else:
+            mom = fn(jnp.float32(k), vals, *args)
+            mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
         dt = time.perf_counter() - t0
-        return mom, fam.prefix_for_k(k), dt
+        return mom, fam.prefix_for_k(k), dt, report
 
     def _answer_from_moments(self, q: Query, table_name: str,
                              phi: tuple[str, ...], k: float,
                              mom: est_lib.GroupedMoments, rows_read: int,
-                             elapsed: float, confidence: float) -> Answer:
+                             elapsed: float, confidence: float,
+                             faults: "exec_lib.ShardScanReport | None" = None
+                             ) -> Answer:
         tbl = self.tables[table_name]
         fam = self.families[table_name][phi]
+        degraded = faults is not None and faults.degraded
         if q.agg is AggOp.QUANTILE:
             est = self._quantile_estimate(q, table_name, phi, k, mom)
         else:
@@ -798,12 +839,18 @@ class BlinkDB:
                 continue  # missing subgroup (paper §3.1 "subset error")
             key = ((self._decode_col_value(table_name, group_col, g),)
                    if group_col else ())
-            exact = bool(abs(nsel[g] - wsum[g]) < 1e-6 * max(wsum[g], 1.0))
+            # A degraded answer never claims exactness: the stratum may be
+            # fully sampled among SURVIVORS yet still miss lost-shard rows.
+            exact = (not degraded and
+                     bool(abs(nsel[g] - wsum[g]) < 1e-6 * max(wsum[g], 1.0)))
             groups.append(GroupResult(key, float(vals[g]), float(errs[g]),
                                       float(los[g]), float(his[g]),
                                       float(nsel[g]), exact))
         return Answer(q, groups, phi, k, rows_read, tbl.n_live, elapsed,
-                      confidence)
+                      confidence,
+                      degraded=degraded,
+                      shards_lost=len(faults.lost) if faults else 0,
+                      shards_total=faults.n_shards if faults else 0)
 
     def _quantile_estimate(self, q: Query, table_name: str,
                            phi: tuple[str, ...], k: float,
@@ -853,7 +900,7 @@ class BlinkDB:
         def probe(phi: tuple[str, ...]) -> tuple[float, float]:
             fam = fams[phi]
             k_small = min(fam.ks)
-            mom, rows_read, _ = self._run_at_k(table_name, q, phi, k_small)
+            mom, rows_read, _, _ = self._run_at_k(table_name, q, phi, k_small)
             return float(jnp.sum(mom.n)), float(rows_read)
 
         return select_family(cat_cols, fams, probe).phi
@@ -883,12 +930,14 @@ class BlinkDB:
                    q.group_by, repr(q.bound))
         if self.config.reuse_elp and elp_key in self._elp_cache:
             k_q = self._elp_cache[elp_key]
-            mom, rows_read, dt = self._run_at_k(table_name, q, phi, k_q)
+            mom, rows_read, dt, rep = self._run_at_k(table_name, q, phi, k_q)
             return self._answer_from_moments(q, table_name, phi, k_q, mom,
-                                             rows_read, dt, confidence)
+                                             rows_read, dt, confidence,
+                                             faults=rep)
 
         if isinstance(q.bound, ErrorBound):
-            mom, rows_read, dt = self._run_at_k(table_name, q, phi, k_probe)
+            mom, rows_read, dt, _ = self._run_at_k(table_name, q, phi,
+                                                   k_probe)
             est = (self._quantile_estimate(q, table_name, phi, k_probe, mom)
                    if q.agg is AggOp.QUANTILE else est_lib.estimate(q.agg, mom))
             n_req = np.asarray(est_lib.required_n_for_error(
@@ -900,9 +949,10 @@ class BlinkDB:
             k_q = fam.ks[0]  # no bound: most accurate available sample
 
         self._elp_cache[elp_key] = k_q
-        mom, rows_read, dt = self._run_at_k(table_name, q, phi, k_q)
+        mom, rows_read, dt, rep = self._run_at_k(table_name, q, phi, k_q)
         return self._answer_from_moments(q, table_name, phi, k_q, mom,
-                                         rows_read, dt, confidence)
+                                         rows_read, dt, confidence,
+                                         faults=rep)
 
     def _pick_k_for_time(self, table_name: str, q: Query,
                          phi: tuple[str, ...],
@@ -915,7 +965,7 @@ class BlinkDB:
         fam = self.families[table_name][phi]
         probes = elp_lib.run_probes(
             fam,
-            lambda k: (lambda m, r, t: (float(jnp.sum(m.n)), t))(
+            lambda k: (lambda m, r, t, _rep: (float(jnp.sum(m.n)), t))(
                 *self._run_at_k(table_name, q, phi, k)),
             n_probes=self.config.probe_resolutions)
         model = elp_lib.fit_latency([p.rows_read for p in probes],
@@ -959,23 +1009,28 @@ class BlinkDB:
 
     def _run_batched(self, scan_key, ks: Sequence[float],
                      consts_list: Sequence[tuple[float, ...]]
-                     ) -> tuple[est_lib.GroupedMoments, float]:
+                     ) -> tuple[est_lib.GroupedMoments, float,
+                                "exec_lib.ShardScanReport | None"]:
         """One fused multi-query scan over a family prefix. The batch is
         padded to the next power of two so the per-(family × template) AOT
-        program cache sees O(log Q) distinct shapes, not one per batch size."""
+        program cache sees O(log Q) distinct shapes, not one per batch size.
+        Under an armed fault plan the scan is shard-partitioned exactly like
+        _run_at_k; the report (None when clean) applies to every query in
+        the batch — they shared the one scan that lost the shard."""
         table_name, phi, struct, value_col, group_col, n_groups = scan_key
         striped = self._striped_for(table_name, phi)
         n_q = len(ks)
         if n_q > _MAX_SCAN_BATCH:
-            moms, total_dt = [], 0.0
+            moms, total_dt, reports = [], 0.0, []
             for i in range(0, n_q, _MAX_SCAN_BATCH):
-                m, d = self._run_batched(scan_key,
-                                         ks[i:i + _MAX_SCAN_BATCH],
-                                         consts_list[i:i + _MAX_SCAN_BATCH])
+                m, d, rep = self._run_batched(
+                    scan_key, ks[i:i + _MAX_SCAN_BATCH],
+                    consts_list[i:i + _MAX_SCAN_BATCH])
                 moms.append(m)
+                reports.append(rep)
                 total_dt += d
             return (jax.tree.map(lambda *xs: jnp.concatenate(xs), *moms),
-                    total_dt)
+                    total_dt, exec_lib.merge_shard_reports(reports))
         q_pad = 1 << max(0, n_q - 1).bit_length()
         n_atoms = len(exec_lib.flat_atoms(struct))
         ks_arr = np.asarray(list(ks) + [ks[0]] * (q_pad - n_q), np.float32)
@@ -995,11 +1050,25 @@ class BlinkDB:
                 use_pallas=self.config.use_pallas)
             fn = jfn.lower(ks_dev, consts_dev, *args).compile()  # AOT
             self._batched_programs[pkey] = fn
+        inject.site("engine.scan", table=table_name)
         t0 = time.perf_counter()
-        mom = fn(ks_dev, consts_dev, *args)
-        mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+        report = None
+        if self._fault_sharding_active():
+            def call(mask):
+                m = fn(ks_dev, consts_dev, striped.columns, striped.freq,
+                       striped.entry_key, mask)
+                return jax.tree.map(lambda x: x.block_until_ready(), m)
+            mom, report = exec_lib.run_sharded_scan(
+                call, striped,
+                n_logical=self.config.n_logical_shards,
+                n_replicas=self.config.shard_replicas,
+                site_ctx={"table": table_name},
+                deadline_s=self.config.straggler_deadline_s)
+        else:
+            mom = fn(ks_dev, consts_dev, *args)
+            mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
         dt = time.perf_counter() - t0
-        return jax.tree.map(lambda x: x[:n_q], mom), dt
+        return jax.tree.map(lambda x: x[:n_q], mom), dt, report
 
     def query_batch(self, queries: Sequence[Query],
                     deadline_headroom_s: float = 0.0) -> list[Answer]:
@@ -1059,8 +1128,8 @@ class BlinkDB:
         for scan_key, group in probe_groups.items():
             fam = self.families[group[0].table][group[0].phi]
             k_probe = min(fam.ks)
-            mom, _ = self._run_batched(scan_key, [k_probe] * len(group),
-                                       [j.consts for j in group])
+            mom, _, _ = self._run_batched(scan_key, [k_probe] * len(group),
+                                          [j.consts for j in group])
             for i, job in enumerate(group):
                 # Sequential-contract parity (§4.4): once the first job of an
                 # elp_key resolves its K, later jobs reuse it — exactly as
@@ -1086,15 +1155,15 @@ class BlinkDB:
             final_groups.setdefault(job.scan_key, []).append(job)
         sub_answers: list[list[tuple[int, Answer]]] = [[] for _ in queries]
         for scan_key, group in final_groups.items():
-            mom, dt = self._run_batched(scan_key, [j.k for j in group],
-                                        [j.consts for j in group])
+            mom, dt, rep = self._run_batched(scan_key, [j.k for j in group],
+                                             [j.consts for j in group])
             per_query_dt = dt / len(group)  # amortized shared-scan time
             for i, job in enumerate(group):
                 fam = self.families[job.table][job.phi]
                 ans = self._answer_from_moments(
                     job.q, job.table, job.phi, job.k,
                     est_lib.moments_slice(mom, i), fam.prefix_for_k(job.k),
-                    per_query_dt, job.confidence)
+                    per_query_dt, job.confidence, faults=rep)
                 sub_answers[job.parent].append((job.order, ans))
 
         out = []
@@ -1211,4 +1280,11 @@ def _union_answers(q: Query, answers: list[Answer]) -> Answer:
         groups.append(g)
     return Answer(q, groups, answers[0].sample_phi, answers[0].sample_k,
                   sum(a.rows_read for a in answers), answers[0].rows_total,
-                  sum(a.elapsed_s for a in answers), answers[0].confidence)
+                  sum(a.elapsed_s for a in answers), answers[0].confidence,
+                  # Degradation provenance survives the union: one degraded
+                  # disjunct makes the whole answer degraded (conservative —
+                  # the widest loss across sub-answers is reported).
+                  degraded=any(a.degraded for a in answers),
+                  shards_lost=max(a.shards_lost for a in answers),
+                  shards_total=max(a.shards_total for a in answers),
+                  staleness_s=max(a.staleness_s for a in answers))

@@ -65,6 +65,48 @@ def grouped_moments(values: jax.Array, rates: jax.Array, mask: jax.Array,
         var_count=seg(vfac), var_sum=seg(vfac * x), var_sum2=seg(vfac * x * x))
 
 
+def reweight_moments(mom: GroupedMoments, factor: float) -> GroupedMoments:
+    """Second-phase HT correction after losing fault-domain shards.
+
+    Shards are disjoint stratum partitions; losing L of S leaves survivors
+    whose rows compose their original inclusion rate r with a second
+    inclusion phase of rate 1/f, f = S/(S-L). The composed rate r' = r/f
+    gives HT weight w' = f·w — so the weighted point leaves scale by f —
+    and per-row variance term
+
+        (1-r')/r'² = f²(1-r)/r² + f(f-1)/r,
+
+    so each variance leaf becomes f²·var + f(f-1)·(matching w-leaf of the
+    SURVIVORS). The correction strictly grows every variance (f > 1), so
+    degraded CIs are always wider than the clean scan's. `n` (the
+    unweighted selected-row count) is a physical tally of surviving rows
+    and is not reweighted.
+    """
+    f = jnp.float32(factor)
+    g = f * (f - 1.0)
+    return GroupedMoments(
+        n=mom.n,
+        wsum=f * mom.wsum,
+        wxsum=f * mom.wxsum,
+        wx2sum=f * mom.wx2sum,
+        var_count=f * f * mom.var_count + g * mom.wsum,
+        var_sum=f * f * mom.var_sum + g * mom.wxsum,
+        var_sum2=f * f * mom.var_sum2 + g * mom.wx2sum)
+
+
+@jax.jit
+def _moments_finite(mom: GroupedMoments) -> jax.Array:
+    return jnp.all(jnp.array([jnp.all(jnp.isfinite(x))
+                              for x in jax.tree_util.tree_leaves(mom)]))
+
+
+def moments_finite(mom: GroupedMoments) -> bool:
+    """True iff every statistic is finite — the detection boundary for
+    poisoned (NaN/Inf) shard partials: a corrupted partial must be caught
+    HERE, before it contaminates the cross-shard sum."""
+    return bool(_moments_finite(mom))
+
+
 def moments_slice(mom: GroupedMoments, i: int) -> GroupedMoments:
     """Select query i from a batched GroupedMoments (leaves [Q, G] → [G]).
     The unpacking half of the batched shared-scan contract: one fused scan

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Sequence
 
 import jax
@@ -47,6 +48,8 @@ from repro.core import estimators as est_lib
 from repro.core.sampling import SampleFamily
 from repro.core.types import (AggOp, Atom, CmpOp, Conjunction, Predicate,
                               cmp_fns)
+from repro.fault import inject
+from repro.fault.inject import AllShardsLostError, FaultError, ShardScanError
 
 _CMP = cmp_fns()
 
@@ -616,6 +619,144 @@ def make_batched_query_fn(struct,
                            out_specs=P())
         return inner(cols, freq, entry_key, valid)
     return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Fault-domain sharded scans (replicated logical shards over a striped block)
+# ---------------------------------------------------------------------------
+#
+# The striped block's physical [S_dev, n_local] layout balances LOAD; fault
+# domains are a second, logical partition: each stratum hashes to one of
+# `n_logical` shards, so the shards are disjoint row sets whose per-shard
+# GroupedMoments partials sum exactly to the full-scan statistics. Because
+# every compiled query program takes the block's `valid` mask as a TRACED
+# argument, a per-shard scan is just the same compiled program called with
+# `valid & (stratum_hash == s)` — no recompilation, no re-striping.
+#
+# This path engages only under an armed non-empty FaultPlan (engine.py's
+# engagement rule): per-shard float summation order differs from the fused
+# single pass, and the empty-plan bit-identity contract (docs/FAULTS.md)
+# forbids that unless faults are actually possible.
+
+_SHARD_HASH_MULT = 2654435761     # Knuth multiplicative hash (fits uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_logical",))
+def shard_valid_mask(strat: jax.Array, valid: jax.Array, shard,
+                     *, n_logical: int) -> jax.Array:
+    """Validity mask restricted to one logical fault-domain shard: stratum
+    ids hash onto [0, n_logical) so shards are disjoint stratum partitions
+    (the FlameDB pattern the ROADMAP names). `shard` is traced — one
+    compiled mask program serves every shard."""
+    h = (strat.astype(jnp.uint32) * jnp.uint32(_SHARD_HASH_MULT)) \
+        % jnp.uint32(n_logical)
+    return valid & (h == jnp.uint32(shard))
+
+
+def shard_of_strata(strata: np.ndarray, n_logical: int) -> np.ndarray:
+    """Host-side mirror of shard_valid_mask's hash (tests / planning)."""
+    h = (np.asarray(strata, dtype=np.uint32) * np.uint32(_SHARD_HASH_MULT))
+    return (h % np.uint32(n_logical)).astype(np.int32)
+
+
+@jax.jit
+def _poison_moments(mom: est_lib.GroupedMoments) -> est_lib.GroupedMoments:
+    """Corrupt a partial with NaNs (what a poison fault turns a shard's
+    result into — the detection layer must refuse it)."""
+    return jax.tree.map(lambda x: x * jnp.float32(jnp.nan), mom)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardScanReport:
+    """What the sharded scan survived — the provenance an Answer carries."""
+    n_shards: int                 # logical shards scanned
+    lost: tuple[int, ...]         # shards with no surviving replica
+    rerouted: tuple[int, ...]     # shards served by a replica > 0
+    reweight: float               # HT factor S/(S-L) applied (1.0 = none)
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.lost)
+
+
+def merge_shard_reports(reports: Sequence["ShardScanReport | None"]
+                        ) -> "ShardScanReport | None":
+    """Union the reports of chunked scans over one family (engine chunks
+    batches past _MAX_SCAN_BATCH): conservative provenance — a shard lost
+    in ANY chunk is reported lost, the widest reweight wins."""
+    reps = [r for r in reports if r is not None]
+    if not reps:
+        return None
+    lost = sorted({s for r in reps for s in r.lost})
+    rerouted = sorted({s for r in reps for s in r.rerouted})
+    return ShardScanReport(max(r.n_shards for r in reps), tuple(lost),
+                           tuple(rerouted),
+                           max(r.reweight for r in reps))
+
+
+def run_sharded_scan(call, striped: StripedFamily, *, n_logical: int,
+                     n_replicas: int = 2, site_ctx: dict | None = None,
+                     deadline_s: float | None = None
+                     ) -> tuple[est_lib.GroupedMoments, ShardScanReport]:
+    """Execute `call(valid_mask) -> GroupedMoments` once per logical shard,
+    with replica re-route and HT reweighting of survivors.
+
+    Per shard: up to `n_replicas` attempts run the SAME deterministic scan
+    under distinct (shard, replica) fault-site identities — a replica is a
+    re-execution that a fault plan can fail independently, exactly like a
+    second physical copy. An attempt fails on an injected kill, a partial
+    that is not finite (poison detection), or — when `deadline_s` is set —
+    an attempt exceeding the straggler deadline (StragglerPolicy's
+    deadline = factor × median, precomputed by the caller). Shards whose
+    every replica fails are LOST: the surviving partials are summed and
+    HT-reweighted by S/(S-L) (estimators.reweight_moments), which widens
+    every CI. Raises AllShardsLostError when nothing survives.
+    """
+    ctx = dict(site_ctx or {})
+    partials: list[est_lib.GroupedMoments] = []
+    lost: list[int] = []
+    rerouted: list[int] = []
+    for s in range(n_logical):
+        mask = shard_valid_mask(striped.strat, striped.valid, s,
+                                n_logical=n_logical)
+        mom = None
+        for r in range(n_replicas):
+            t0 = time.perf_counter()
+            try:
+                action = inject.site("shard.scan", shard=s, replica=r, **ctx)
+                m = call(mask)
+                if action == "poison":
+                    m = jax.tree.map(lambda x: x.block_until_ready(),
+                                     _poison_moments(m))
+                if deadline_s is not None \
+                        and time.perf_counter() - t0 > deadline_s:
+                    raise ShardScanError(
+                        f"shard {s} replica {r} missed the straggler "
+                        f"deadline ({deadline_s:.3f}s)")
+                if not est_lib.moments_finite(m):
+                    raise ShardScanError(
+                        f"shard {s} replica {r} returned non-finite "
+                        "statistics (poisoned partial)")
+                mom = m
+                break
+            except FaultError:
+                continue    # next replica; non-fault errors propagate
+        if mom is None:
+            lost.append(s)
+        else:
+            if r > 0:
+                rerouted.append(s)
+            partials.append(mom)
+    if not partials:
+        raise AllShardsLostError(
+            f"all {n_logical} logical shards lost every one of "
+            f"{n_replicas} replicas")
+    total = jax.tree.map(lambda *xs: functools.reduce(jnp.add, xs), *partials)
+    factor = n_logical / (n_logical - len(lost))
+    if lost:
+        total = est_lib.reweight_moments(total, factor)
+    report = ShardScanReport(n_logical, tuple(lost), tuple(rerouted), factor)
+    return total, report
 
 
 # ---------------------------------------------------------------------------

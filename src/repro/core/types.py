@@ -340,6 +340,14 @@ class Answer:
     rows_total: int               # rows in the original table
     elapsed_s: float
     confidence: float
+    # Degradation provenance (docs/FAULTS.md): an answer computed under
+    # fault conditions must SAY so. `degraded` marks any answer whose error
+    # contract differs from the clean path — shard loss (HT-reweighted,
+    # CIs widened) or a stale cache serve (staleness_s > 0 declares how old).
+    degraded: bool = False
+    shards_lost: int = 0          # fault-domain shards with no live replica
+    shards_total: int = 0         # logical shards the scan ran over (0: unsharded)
+    staleness_s: float = 0.0      # age of a stale-cache serve (0: fresh)
 
     @property
     def max_rel_err(self) -> float:

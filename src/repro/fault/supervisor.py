@@ -29,7 +29,12 @@ class Heartbeat:
 
     def __post_init__(self):
         self.last_step = np.zeros(self.n_workers, dtype=np.int64)
-        self.last_time = np.full(self.n_workers, time.time())
+        # Per-worker stamps: one shared time.time() call would give every
+        # worker the registry's construction instant, skewing the first
+        # deadline by however long construction-to-first-beat takes to
+        # drift apart across workers.
+        self.last_time = np.array([time.time()
+                                   for _ in range(self.n_workers)])
         self.step_times: list[float] = []
 
     def beat(self, worker: int, step: int) -> None:
@@ -57,8 +62,19 @@ class StragglerPolicy:
 
 @dataclasses.dataclass
 class RetryLoop:
+    """Exponential-backoff restart wrapper.
+
+    `retry_on` is the injectable transient-failure tuple — anything outside
+    it (a ValueError from a malformed query, a KeyError from a programming
+    error) propagates immediately instead of burning retries on a failure
+    that cannot heal. `raise_last=True` re-raises the final attempt's
+    original exception (callers that promise per-error-type contracts, like
+    the service's engine-error propagation) instead of the generic wrapper.
+    """
     max_retries: int = 3
     backoff_s: float = 0.1
+    retry_on: tuple = (FloatingPointError, RuntimeError)
+    raise_last: bool = False
 
     def run(self, step_fn: Callable[[], object],
             on_failure: Callable[[Exception, int], None] | None = None):
@@ -67,12 +83,18 @@ class RetryLoop:
         for attempt in range(self.max_retries + 1):
             try:
                 return step_fn()
-            except (FloatingPointError, RuntimeError, ValueError) as e:
+            except self.retry_on as e:
                 err = e
                 if on_failure:
                     on_failure(e, attempt)
-                time.sleep(self.backoff_s * (2 ** attempt))
-        raise RuntimeError(f"step failed after {self.max_retries} retries") from err
+                if attempt < self.max_retries:
+                    # No backoff after the FINAL failure: the caller is
+                    # about to see the error, not another attempt.
+                    time.sleep(self.backoff_s * (2 ** attempt))
+        if self.raise_last:
+            raise err
+        raise RuntimeError(
+            f"step failed after {self.max_retries} retries") from err
 
 
 def elastic_plan(n_shards_data: int, live_workers: list[int]) -> dict[int, list[int]]:

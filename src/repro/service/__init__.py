@@ -7,11 +7,13 @@ drives §3.2 re-optimization on template churn. See docs/SERVICE.md."""
 from repro.service.cache import AnswerCache, CacheStats
 from repro.service.parser import BlinkQLError, parse_blinkql
 from repro.service.scheduler import (AdmissionError, BlinkQLService,
-                                     ServiceConfig)
+                                     DeadlineShedError, DegradedServiceError,
+                                     ServiceConfig, ServiceUnhealthyError)
 from repro.service.workload import WorkloadConfig, WorkloadMonitor
 
 __all__ = [
     "AnswerCache", "CacheStats", "BlinkQLError", "parse_blinkql",
     "AdmissionError", "BlinkQLService", "ServiceConfig",
+    "DeadlineShedError", "DegradedServiceError", "ServiceUnhealthyError",
     "WorkloadConfig", "WorkloadMonitor",
 ]

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import OrderedDict
 
 from repro.core.types import Answer, Query
@@ -43,6 +44,7 @@ class CacheStats:
     misses: int = 0
     invalidations: int = 0    # entries evicted by generation bumps
     evictions: int = 0        # entries evicted by LRU capacity
+    stale_serves: int = 0     # demoted entries served by get_stale
 
 
 @dataclasses.dataclass
@@ -52,6 +54,7 @@ class _Entry:
     # (phi, generation) dependencies + the table's family-set generation
     fam_deps: tuple[tuple[tuple[str, ...], int], ...]
     set_gen: int
+    t_put: float = 0.0        # monotonic stamp at insertion (staleness age)
 
 
 class AnswerCache:
@@ -65,6 +68,11 @@ class AnswerCache:
         self.stats = CacheStats()
         self._lock = threading.Lock()
         self._entries: OrderedDict[Query, _Entry] = OrderedDict()
+        # Invalidated entries demoted here instead of discarded: the
+        # degradation ladder's stale rung (docs/FAULTS.md) serves them — with
+        # DECLARED staleness — when live execution fails. Never consulted by
+        # `get`; bounded by the same capacity.
+        self._stale: OrderedDict[Query, _Entry] = OrderedDict()
         self._subscribed = subscribe
         if subscribe:
             db.add_invalidation_listener(self._on_invalidate)
@@ -80,6 +88,7 @@ class AnswerCache:
             self._subscribed = False
         with self._lock:
             self._entries.clear()
+            self._stale.clear()
 
     # -- engine hook ---------------------------------------------------------
     def _on_invalidate(self, table: str, phi: tuple[str, ...] | None) -> None:
@@ -93,7 +102,7 @@ class AnswerCache:
                 and (phi is None or any(p == phi for p, _ in e.fam_deps))
             ]
             for q in stale:
-                del self._entries[q]
+                self._demote(q, self._entries.pop(q))
             self.stats.invalidations += len(stale)
 
     # -- lookup / insert -----------------------------------------------------
@@ -103,6 +112,13 @@ class AnswerCache:
         return all(self.db.family_generation(entry.table, p) == g
                    for p, g in entry.fam_deps)
 
+    def _demote(self, key: Query, entry: _Entry) -> None:
+        """Move an invalidated entry to the stale store (lock held)."""
+        self._stale[key] = entry
+        self._stale.move_to_end(key)
+        while len(self._stale) > self.capacity:
+            self._stale.popitem(last=False)
+
     def get(self, key: Query) -> Answer | None:
         with self._lock:
             entry = self._entries.get(key)
@@ -110,13 +126,29 @@ class AnswerCache:
                 self.stats.misses += 1
                 return None
             if not self._current(entry):   # belt-and-braces vs missed hooks
-                del self._entries[key]
+                self._demote(key, self._entries.pop(key))
                 self.stats.invalidations += 1
                 self.stats.misses += 1
                 return None
             self._entries.move_to_end(key)
             self.stats.hits += 1
             return entry.answer
+
+    def get_stale(self, key: Query) -> tuple[Answer, float] | None:
+        """Last-resort lookup for the degradation ladder: the most recent
+        INVALIDATED answer for this query, with its age in seconds (time
+        since it was computed). The caller annotates the answer
+        (degraded=True, staleness_s=age) before serving — a stale answer
+        must never masquerade as fresh. A live current entry is also served
+        (age still declared) so the ladder needs only one lookup."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None or not self._current(entry):
+                entry = self._stale.get(key)
+            if entry is None:
+                return None
+            self.stats.stale_serves += 1
+            return entry.answer, max(0.0, time.monotonic() - entry.t_put)
 
     def snapshot(self, table: str) -> dict:
         """Generations of a table's family set as of NOW — taken by the
@@ -142,10 +174,12 @@ class AnswerCache:
         entry = _Entry(
             answer=answer, table=table,
             fam_deps=tuple((p, snap["fams"].get(p, 0)) for p in phis),
-            set_gen=snap["set"])
+            set_gen=snap["set"], t_put=time.monotonic())
         with self._lock:
             self._entries[key] = entry
             self._entries.move_to_end(key)
+            # A fresh answer supersedes any demoted one for the same query.
+            self._stale.pop(key, None)
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
                 self.stats.evictions += 1

@@ -9,7 +9,11 @@ ONE caller. This scheduler closes the gap:
   request is parsed (BlinkQL text) / taken as a `Query`, normalized
   (types.Query.normalized), checked against the answer cache, and enqueued.
   A full queue (`max_queue`) rejects with `AdmissionError` instead of
-  accepting work it cannot serve — a-priori admission control.
+  accepting work it cannot serve — a-priori admission control. Deadline-aware
+  LOAD SHEDDING extends this: when the queue depth times the observed batch
+  execution time implies a TimeBound cannot be met, the request is rejected
+  at admission with `DeadlineShedError` (a late answer to a deadline query is
+  worth nothing — reject it while the caller can still go elsewhere).
 * **Coalescing**: a single dispatcher thread drains the queue in batches: it
   waits up to `batch_window_s` after the first pending request (so
   near-simultaneous requests from different sessions land in one batch),
@@ -30,14 +34,32 @@ ONE caller. This scheduler closes the gap:
   TimeBound query that waited up to one window still picks a K whose scan
   fits the REMAINING budget (§4.2); a bound tighter than the window flushes
   the batch immediately rather than queuing past its deadline.
+* **Degradation ladder** (docs/FAULTS.md): execution failures the config
+  declares transient (`retry_on`, default: fault-layer errors) walk down a
+  ladder instead of failing closed — retry with exponential backoff
+  (fault.supervisor.RetryLoop); below that, the engine's own replica
+  re-route and HT-reweighted partial answers (Answer.degraded provenance);
+  below that, a STALE cache answer with declared staleness; and only then a
+  typed `DegradedServiceError`. Non-transient errors (a malformed query's
+  ValueError) propagate to their submitter immediately, exactly as before.
+* **Dispatcher-death safety**: an unexpected exception escaping the
+  dispatcher loop fails every pending request with a typed
+  `ServiceUnhealthyError` and marks the service unhealthy — later submits
+  are rejected at admission instead of hanging until their timeout; `close()`
+  raises if the dispatcher fails to join.
+* **Async submission**: `submit_async()` returns a `concurrent.futures.
+  Future`; `submit_many()` routes through it with ONE atomic admission, so a
+  session's pre-assembled batch lands in one coalesced scan instead of
+  serializing request-by-request.
 * **Workload loop**: every answered query is recorded in the
   `WorkloadMonitor`; when QCS drift crosses the threshold and a
   `SampleMaintainer` is attached, the dispatcher runs a workload-only
   re-optimization epoch (`run_workload_epoch`) between batches — template
   churn alone (no data delta) re-shapes the sample set (§3.2).
 
-All engine execution happens on the dispatcher thread, so the engine's
-single-caller contract is preserved no matter how many sessions submit.
+All engine execution happens on the dispatcher thread (or a solo caller
+holding the execution lock), so the engine's single-caller contract is
+preserved no matter how many sessions submit.
 """
 from __future__ import annotations
 
@@ -45,9 +67,13 @@ import dataclasses
 import threading
 import time
 from collections import deque
+from concurrent.futures import Future
 from typing import Sequence
 
 from repro.core.types import Answer, Query, TimeBound
+from repro.fault import inject
+from repro.fault.inject import FaultError
+from repro.fault.supervisor import RetryLoop
 from repro.service.cache import AnswerCache
 from repro.service.parser import parse_blinkql
 from repro.service.workload import WorkloadConfig, WorkloadMonitor
@@ -55,6 +81,21 @@ from repro.service.workload import WorkloadConfig, WorkloadMonitor
 
 class AdmissionError(RuntimeError):
     """Queue depth exceeded: the request was rejected at admission."""
+
+
+class DeadlineShedError(AdmissionError):
+    """Rejected at admission: the observed load implies the request's
+    TimeBound cannot be met, so accepting it would only produce a late
+    answer (worthless for a deadline query) and delay everyone else."""
+
+
+class ServiceUnhealthyError(RuntimeError):
+    """The dispatcher thread died; the service no longer executes queries."""
+
+
+class DegradedServiceError(RuntimeError):
+    """The degradation ladder is exhausted: retries failed, no degraded
+    answer could be computed, and no acceptable stale answer exists."""
 
 
 @dataclasses.dataclass
@@ -67,6 +108,17 @@ class ServiceConfig:
     workload: WorkloadConfig = dataclasses.field(default_factory=WorkloadConfig)
     reoptimize: bool = True         # run workload epochs when drift triggers
     solo_bypass: bool = True        # inline execution when traffic is solo
+    # Degradation ladder (docs/FAULTS.md). `retry_on` is the transient-error
+    # tuple: execution failures matching it are retried with backoff and, if
+    # they persist, degrade (stale answer, then DegradedServiceError) instead
+    # of propagating; anything else (e.g. a ValueError for a malformed query)
+    # reaches its submitter untouched on the first attempt.
+    retry_attempts: int = 1
+    retry_backoff_s: float = 0.01
+    retry_on: tuple = (FaultError, FloatingPointError)
+    serve_stale: bool = True        # stale-cache rung of the ladder
+    stale_max_s: float = 300.0      # oldest stale answer worth serving
+    shed_deadlines: bool = True     # deadline-aware admission load shedding
 
 
 @dataclasses.dataclass
@@ -76,6 +128,7 @@ class _Request:
     t_submit: float
     answer: Answer | None = None
     error: BaseException | None = None
+    future: Future | None = None    # submit_async/submit_many completion
 
 
 class BlinkQLService:
@@ -106,10 +159,24 @@ class BlinkQLService:
         self.workload_epochs: list[dict] = []
         self.n_batches = 0
         self.n_queries = 0
+        self.n_degraded = 0      # answers served with degraded=True
+        self.n_stale = 0         # of those, stale-cache serves
+        self.n_shed = 0          # requests rejected by deadline shedding
         self._queue: deque[_Request] = deque()
         self._cond = threading.Condition()
         self._stop = False
         self._epoch_pending = False   # cache-hit path saw drift: wake & check
+        # Dispatcher-death safety: set (under _cond) the moment the
+        # dispatcher loop dies of an unexpected exception; every pending
+        # request is failed with a typed error and every later admission
+        # is rejected — a dead dispatcher must fail loudly, not hang
+        # callers until their timeouts.
+        self._failed: ServiceUnhealthyError | None = None
+        self._in_flight: list[_Request] = []   # batch the dispatcher holds
+        # EWMA of batch execution time — the load model behind deadline
+        # shedding (a full latency model is overkill: shedding only needs
+        # "roughly how long does a batch take right now").
+        self._exec_ewma = 0.0
         # Serializes ALL engine execution — the dispatcher's batches, the
         # workload epochs, and the solo-bypass inline path (the engine is
         # single-caller; the lock is what lets submit() run it directly).
@@ -140,14 +207,79 @@ class BlinkQLService:
         self._dispatcher.join(timeout=10.0)
         if self.cache is not None:
             self.cache.detach()   # don't leave hooks on a long-lived engine
+        if self._dispatcher.is_alive():
+            raise ServiceUnhealthyError(
+                "dispatcher thread failed to join within 10s — it is wedged "
+                "(likely stuck in the engine) and is being leaked")
+
+    @property
+    def healthy(self) -> bool:
+        return self._failed is None
 
     # ----------------------------------------------------------- admission
+    def _shed_guard(self, q: Query) -> None:
+        """Deadline-aware load shedding (called with _cond held): reject a
+        TimeBound request whose expected completion — one batching window
+        plus the batches queued ahead of it at the observed per-batch
+        execution time — already exceeds its bound."""
+        if not self.config.shed_deadlines or self._exec_ewma <= 0.0:
+            return
+        bound = q.bound
+        if not isinstance(bound, TimeBound):
+            return
+        batches_ahead = 1.0 + len(self._queue) / float(self.config.max_batch)
+        expected = self.config.batch_window_s \
+            + batches_ahead * self._exec_ewma
+        if expected > bound.seconds:
+            self.n_shed += 1
+            raise DeadlineShedError(
+                f"deadline {bound.seconds:.3f}s cannot be met: "
+                f"{len(self._queue)} request(s) queued ahead at "
+                f"~{self._exec_ewma:.3f}s per batch "
+                f"(expected completion ~{expected:.3f}s)")
+
+    def _admit(self, reqs: list[_Request]) -> None:
+        """Atomically admit a group of requests: ONE lock acquisition, ONE
+        dispatcher wakeup — so a pre-assembled submit_many batch is drained
+        into a single coalesced scan, never split by a dispatcher that woke
+        between two separate enqueues."""
+        with self._cond:
+            if self._failed is not None:
+                raise ServiceUnhealthyError(str(self._failed)) \
+                    from self._failed.__cause__
+            if self._stop:
+                raise RuntimeError("service is closed")
+            if len(self._queue) + len(reqs) > self.config.max_queue:
+                raise AdmissionError(
+                    f"admission queue full ({self.config.max_queue} pending)")
+            for r in reqs:
+                self._shed_guard(r.query)
+            self._queue.extend(reqs)
+            self._cond.notify_all()
+
+    def _record_hit(self, q: Query, hit: Answer, t0: float) -> None:
+        """Bookkeeping for a cache hit: deadline stats judge the SERVE time
+        (≈0 for a hit), and a cached workload still drifts — wake the
+        dispatcher so the reoptimize trigger is evaluated even when nothing
+        executes."""
+        self.monitor.record(q, hit, cache_hit=True,
+                            elapsed_s=time.monotonic() - t0)
+        if self.config.reoptimize and self.maintainer is not None \
+                and self.monitor.should_reoptimize(
+                    self.maintainer.table_name):
+            with self._cond:
+                self._epoch_pending = True
+                self._cond.notify_all()
+
     def submit(self, query: str | Query,
                timeout: float | None = None) -> Answer:
         """Parse (if text), admit, and block until answered.
 
-        Raises BlinkQLError on parse/resolution failures, AdmissionError when
-        the queue is full, and re-raises any engine-side execution error."""
+        Raises BlinkQLError on parse/resolution failures, AdmissionError
+        (incl. DeadlineShedError) when the request is rejected at admission,
+        ServiceUnhealthyError when the dispatcher has died, and re-raises
+        any engine-side execution error the degradation ladder could not
+        absorb."""
         t0 = time.monotonic()
         if isinstance(query, str):
             query = parse_blinkql(query, self.db)
@@ -155,18 +287,7 @@ class BlinkQLService:
         if self.cache is not None:
             hit = self.cache.get(q)
             if hit is not None:
-                # Deadline stats judge the SERVE time (≈0 for a hit), not
-                # the original scan's elapsed_s.
-                self.monitor.record(q, hit, cache_hit=True,
-                                    elapsed_s=time.monotonic() - t0)
-                # A cached workload still drifts: wake the dispatcher so the
-                # reoptimize trigger is evaluated even when nothing executes.
-                if self.config.reoptimize and self.maintainer is not None \
-                        and self.monitor.should_reoptimize(
-                            self.maintainer.table_name):
-                    with self._cond:
-                        self._epoch_pending = True
-                        self._cond.notify_all()
+                self._record_hit(q, hit, t0)
                 return hit
         # Inline execution cannot honor a caller timeout (the caller IS the
         # executor — there is no one to stop waiting on), so timed submits
@@ -177,14 +298,7 @@ class BlinkQLService:
             if ans is not None:
                 return ans
         req = _Request(q, threading.Event(), time.monotonic())
-        with self._cond:
-            if self._stop:
-                raise RuntimeError("service is closed")
-            if len(self._queue) >= self.config.max_queue:
-                raise AdmissionError(
-                    f"admission queue full ({self.config.max_queue} pending)")
-            self._queue.append(req)
-            self._cond.notify_all()
+        self._admit([req])
         if not req.done.wait(timeout):
             # Free the admission slot: an abandoned request must not occupy
             # max_queue (a no-op if the dispatcher already dequeued it).
@@ -199,11 +313,75 @@ class BlinkQLService:
         assert req.answer is not None
         return req.answer
 
+    def submit_async(self, query: str | Query) -> Future:
+        """Admit without blocking; returns a Future resolving to the Answer
+        (or raising the error `submit` would have raised). Parse and
+        admission errors still raise HERE, synchronously — they are the
+        caller's bug or backpressure signal, not a deferred result. Async
+        submissions always take the queued path (the bypass exists to skip
+        waiting, and an async caller is not waiting)."""
+        t0 = time.monotonic()
+        if isinstance(query, str):
+            query = parse_blinkql(query, self.db)
+        q = query.normalized()
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+        if self.cache is not None:
+            hit = self.cache.get(q)
+            if hit is not None:
+                self._record_hit(q, hit, t0)
+                fut.set_result(hit)
+                return fut
+        req = _Request(q, threading.Event(), time.monotonic(), future=fut)
+        self._admit([req])
+        return fut
+
     def submit_many(self, queries: Sequence[str | Query],
                     timeout: float | None = None) -> list[Answer]:
-        """Convenience: submit a pre-assembled batch from one session (each
-        request still coalesces with everything else in flight)."""
-        return [self.submit(q, timeout) for q in queries]
+        """Submit a pre-assembled batch from one session. The whole group is
+        admitted ATOMICALLY (one lock acquisition, one dispatcher wakeup),
+        so it lands in one coalesced `query_batch` scan — blocking per query
+        would defeat the coalescing it exists to exploit. Returns answers in
+        input order; `timeout` bounds the TOTAL wait."""
+        t0 = time.monotonic()
+        results: list[Answer | None] = [None] * len(queries)
+        pending: list[tuple[int, _Request]] = []
+        for i, query in enumerate(queries):
+            if isinstance(query, str):
+                query = parse_blinkql(query, self.db)
+            q = query.normalized()
+            hit = self.cache.get(q) if self.cache is not None else None
+            if hit is not None:
+                self._record_hit(q, hit, t0)
+                results[i] = hit
+            else:
+                req = _Request(q, threading.Event(), time.monotonic(),
+                               future=Future())
+                req.future.set_running_or_notify_cancel()
+                pending.append((i, req))
+        if pending:
+            self._admit([r for _, r in pending])
+            deadline = None if timeout is None else t0 + timeout
+            try:
+                for i, req in pending:
+                    remaining = (None if deadline is None
+                                 else deadline - time.monotonic())
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError
+                    results[i] = req.future.result(timeout=remaining)
+            except TimeoutError:
+                # Free every still-queued slot of the batch (requests the
+                # dispatcher already holds complete abandoned, as in submit).
+                with self._cond:
+                    for _, req in pending:
+                        if not req.done.is_set():
+                            try:
+                                self._queue.remove(req)
+                            except ValueError:
+                                pass
+                raise TimeoutError(
+                    "batch was not answered within the timeout") from None
+        return results
 
     def _try_solo_bypass(self, q: Query, t0: float) -> Answer | None:
         """Inline execution for demonstrably solo traffic: nothing queued
@@ -221,15 +399,32 @@ class BlinkQLService:
             with self._cond:
                 if self._queue or self._stop:
                     return None   # raced: coalesce normally / reject at admit
+                if self._failed is not None:
+                    raise ServiceUnhealthyError(str(self._failed)) \
+                        from self._failed.__cause__
             snapshot = (self.cache.snapshot(q.table)
                         if self.cache is not None else None)
-            # An engine error propagates to this caller alone — exactly the
-            # per-query error contract of the batched fallback path.
-            ans = self.db.query(q)
+            t_exec = time.monotonic()
+            try:
+                # Ladder rung 1: retry-with-backoff around the engine call
+                # (the engine's own sharded path absorbs shard faults into
+                # degraded answers before an error ever reaches here).
+                ans = self._retry(lambda: self.db.query(q))
+            except BaseException as e:   # noqa: BLE001
+                fallback = self._fallback_result(q, e)
+                if isinstance(fallback, BaseException):
+                    # A non-transient error propagates to this caller alone
+                    # — exactly the per-query error contract of the batched
+                    # fallback path. (No `from None`: _fallback_result sets
+                    # __cause__ on the errors it mints.)
+                    raise fallback
+                ans = fallback
+            self._note_exec_time(time.monotonic() - t_exec)
             self._last_batch_size = 1
             self.n_batches += 1
             self.n_queries += 1
-            if self.cache is not None:
+            self._count_served(ans)
+            if self.cache is not None and not ans.degraded:
                 self.cache.put(q, ans, snapshot=snapshot)
             self.monitor.record(q, ans, elapsed_s=time.monotonic() - t0)
         finally:
@@ -241,6 +436,63 @@ class BlinkQLService:
                 self._epoch_pending = True
                 self._cond.notify_all()
         return ans
+
+    # ------------------------------------------------- degradation ladder
+    def _retry(self, step_fn):
+        """Rung 1: RetryLoop over the transient tuple; `raise_last` keeps
+        the final original exception (per-error-type contracts downstream)."""
+        return RetryLoop(max_retries=self.config.retry_attempts,
+                         backoff_s=self.config.retry_backoff_s,
+                         retry_on=self.config.retry_on,
+                         raise_last=True).run(step_fn)
+
+    def _fallback_result(self, q: Query, err: BaseException
+                         ) -> Answer | BaseException:
+        """Rungs below retry, for ONE query whose execution failed.
+
+        Non-transient errors return unchanged (they reach the submitter:
+        a malformed query is the caller's problem, not the environment's).
+        Transient failures try the stale-cache rung — an invalidated answer
+        younger than `stale_max_s`, re-annotated degraded with DECLARED
+        staleness — and bottom out in a typed DegradedServiceError chaining
+        the last failure."""
+        if not isinstance(err, self.config.retry_on):
+            return err
+        if self.config.serve_stale and self.cache is not None:
+            stale = self.cache.get_stale(q)
+            if stale is not None:
+                ans, age = stale
+                if age <= self.config.stale_max_s:
+                    return dataclasses.replace(ans, degraded=True,
+                                               staleness_s=age)
+        final = DegradedServiceError(
+            f"execution failed after {self.config.retry_attempts} "
+            f"retr{'y' if self.config.retry_attempts == 1 else 'ies'} and "
+            f"no stale answer is available: {err!r}")
+        final.__cause__ = err
+        return final
+
+    def _note_exec_time(self, dt: float) -> None:
+        self._exec_ewma = (dt if self._exec_ewma <= 0.0
+                           else 0.2 * dt + 0.8 * self._exec_ewma)
+
+    def _count_served(self, ans: Answer) -> None:
+        if ans.degraded:
+            self.n_degraded += 1
+            if ans.staleness_s > 0.0:
+                self.n_stale += 1
+
+    def _finish(self, r: _Request) -> None:
+        """Deliver a request's result to both completion channels."""
+        if r.future is not None:
+            try:
+                if r.error is not None:
+                    r.future.set_exception(r.error)
+                else:
+                    r.future.set_result(r.answer)
+            except Exception:   # caller cancelled the future: result dropped
+                pass
+        r.done.set()
 
     # ----------------------------------------------------------- dispatcher
     def _flush_deadline(self, batch: list[_Request], t_first: float) -> float:
@@ -285,18 +537,52 @@ class BlinkQLService:
         return batch
 
     def _dispatch_loop(self) -> None:
-        while True:
-            batch = self._collect_batch()
-            if batch:
-                self._execute(batch)
-            with self._cond:
-                self._epoch_pending = False
-                if self._stop and not self._queue:
-                    return
-            if self.config.reoptimize and self.maintainer is not None \
-                    and self.monitor.should_reoptimize(
-                        self.maintainer.table_name):
-                self._run_workload_epoch()
+        try:
+            while True:
+                batch = self._collect_batch()
+                # Track the held batch so a dispatcher death between
+                # dequeue and delivery still fails these requests (they are
+                # in neither the queue nor anyone else's hands).
+                self._in_flight = batch
+                # Fault site: a kill here models the dispatcher thread
+                # dying unexpectedly while it owns a collected batch.
+                inject.site("scheduler.dispatch")
+                if batch:
+                    self._execute(batch)
+                self._in_flight = []
+                with self._cond:
+                    self._epoch_pending = False
+                    if self._stop and not self._queue:
+                        return
+                if self.config.reoptimize and self.maintainer is not None \
+                        and self.monitor.should_reoptimize(
+                            self.maintainer.table_name):
+                    self._run_workload_epoch()
+        except BaseException as e:   # noqa: BLE001 — dispatcher-death safety
+            self._on_dispatcher_death(e)
+
+    def _on_dispatcher_death(self, err: BaseException) -> None:
+        """The dispatcher loop died of an unexpected exception: mark the
+        service unhealthy (later admissions are rejected with a typed
+        error), then fail every request it was holding or that was queued —
+        their submitters must not hang until their timeouts."""
+        failure = ServiceUnhealthyError(
+            f"dispatcher thread died: {err!r}")
+        failure.__cause__ = err
+        with self._cond:
+            self._failed = failure
+            pending = list(self._in_flight) + list(self._queue)
+            self._in_flight = []
+            self._queue.clear()
+            self._cond.notify_all()
+        for r in pending:
+            if r.done.is_set():
+                continue
+            e = ServiceUnhealthyError(
+                f"request abandoned: dispatcher thread died ({err!r})")
+            e.__cause__ = err
+            r.error = e
+            self._finish(r)
 
     def _execute(self, batch: list[_Request]) -> None:
         """One coalesced engine call for the whole batch. Identical
@@ -320,25 +606,35 @@ class BlinkQLService:
         snapshots = ({t: self.cache.snapshot(t)
                       for t in {q.table for q in unique}}
                      if self.cache is not None else {})
+        t_exec = time.monotonic()
         try:
-            answers: list = self.db.query_batch(
-                unique, deadline_headroom_s=self.config.batch_window_s)
+            answers: list = self._retry(lambda: self.db.query_batch(
+                unique, deadline_headroom_s=self.config.batch_window_s))
         except BaseException:                # noqa: BLE001
             # One bad query must not poison every session in the batch:
             # fall back to per-query execution so each request gets its OWN
-            # answer or error (the error reaches only its submitter).
+            # answer, degraded answer, or error — and each failing query
+            # walks the ladder's lower rungs individually.
             answers = []
             for q in unique:
                 try:
-                    answers.append(self.db.query_batch(
-                        [q],
-                        deadline_headroom_s=self.config.batch_window_s)[0])
+                    answers.append(self._retry(
+                        lambda q=q: self.db.query_batch(
+                            [q],
+                            deadline_headroom_s=self.config.batch_window_s
+                        )[0]))
                 except BaseException as e:   # noqa: BLE001 — per-query
-                    answers.append(e)
+                    answers.append(self._fallback_result(q, e))
+        self._note_exec_time(time.monotonic() - t_exec)
         self.n_batches += 1
         self.n_queries += len(batch)
         for q, ans in zip(unique, answers):
-            if self.cache is not None and not isinstance(ans, BaseException):
+            # Degraded answers (shard loss, stale re-serves) are never
+            # cached: the cache must only ever hit with full-fidelity
+            # answers, or a transient fault would echo for the key's
+            # whole cache lifetime.
+            if self.cache is not None and not isinstance(ans, BaseException) \
+                    and not ans.degraded:
                 self.cache.put(q, ans, snapshot=snapshots[q.table])
         claimed: set[int] = set()
         for r in batch:
@@ -358,10 +654,11 @@ class BlinkQLService:
                 r.error = result
             else:
                 r.answer = result
+                self._count_served(result)
                 self.monitor.record(
                     r.query, result,
                     elapsed_s=time.monotonic() - r.t_submit)
-            r.done.set()
+            self._finish(r)
 
     def _run_workload_epoch(self) -> None:
         """Template churn past the drift threshold: §3.2 re-optimization with
@@ -397,6 +694,10 @@ class BlinkQLService:
             "coalescing": (self.n_queries / self.n_batches
                            if self.n_batches else 0.0),
             "workload_epochs": len(self.workload_epochs),
+            "degraded": self.n_degraded,
+            "stale": self.n_stale,
+            "shed": self.n_shed,
+            "healthy": self.healthy,
         }
         if self.cache is not None:
             out["cache"] = dataclasses.asdict(self.cache.stats)

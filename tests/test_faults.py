@@ -1,0 +1,704 @@
+"""Fault-injected serving: the chaos harness.
+
+Covers the fault layer itself (deterministic plans, arming, spec semantics),
+the replicated shard-partitioned scan (replica re-route bit-identity, HT
+reweighting and CI widening under shard loss, poison containment), the
+service degradation ladder (retry → replica → reweighted partial → stale
+cache → typed error, plus deadline shedding and dispatcher-death safety),
+the supervisor primitives, and a seeded chaos soak whose invariant is the
+repo's serving contract under faults:
+
+    every admitted query returns an Answer or raises a TYPED error;
+    a returned Answer is either annotated degraded=True or numerically
+    consistent with the fault-free answer; nothing hangs; and with an
+    empty FaultPlan armed, answers are BIT-identical to the clean path.
+
+`FAULT_SEEDS` (env) deepens the soak in CI; the local default keeps the
+tier-1 suite fast.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BlinkDB, EngineConfig
+from repro.core import table as table_lib
+from repro.core.estimators import GroupedMoments, reweight_moments
+from repro.core.executor import merge_shard_reports, shard_of_strata, \
+    ShardScanReport
+from repro.data import synth
+from repro.fault import inject
+from repro.fault.inject import (AllShardsLostError, FaultError, FaultPlan,
+                                FaultSpec, InjectedFault, arm, random_plan)
+from repro.fault.supervisor import Heartbeat, RetryLoop
+from repro.service import (AdmissionError, BlinkQLService, DeadlineShedError,
+                           DegradedServiceError, ServiceConfig,
+                           ServiceUnhealthyError, parse_blinkql)
+
+N_SHARDS = 4  # EngineConfig default n_logical_shards
+
+
+@pytest.fixture(scope="module")
+def db():
+    tbl = table_lib.from_columns("sessions",
+                                 synth.sessions_table(20_000, seed=2))
+    d = BlinkDB(EngineConfig(k1=400.0, m=3, seed=1))
+    d.register_table("sessions", tbl)
+    d.add_family("sessions", ("City",))
+    d.add_family("sessions", ())
+    return d
+
+
+AVG_TXT = ("SELECT AVG(SessionTime) FROM sessions WHERE City = 'city003' "
+           "ERROR WITHIN 10% CONFIDENCE 95%")
+
+
+def _avg_q(db):
+    return parse_blinkql(AVG_TXT, db).normalized()
+
+
+def _assert_bit_identical(a, b):
+    assert a.sample_phi == b.sample_phi
+    assert a.sample_k == b.sample_k
+    ka = {g.key: g for g in a.groups}
+    kb = {g.key: g for g in b.groups}
+    assert ka.keys() == kb.keys()
+    for key in ka:
+        assert ka[key].estimate == kb[key].estimate
+        assert ka[key].stderr == kb[key].stderr
+        assert ka[key].ci_low == kb[key].ci_low
+        assert ka[key].ci_high == kb[key].ci_high
+
+
+def _assert_close(a, b, rtol=1e-4):
+    ka = {g.key: g for g in a.groups}
+    kb = {g.key: g for g in b.groups}
+    assert ka.keys() == kb.keys()
+    for key in ka:
+        np.testing.assert_allclose(ka[key].estimate, kb[key].estimate,
+                                   rtol=rtol)
+
+
+def _finite(ans):
+    return all(np.isfinite(g.estimate) and np.isfinite(g.stderr)
+               for g in ans.groups)
+
+
+# ---------------------------------------------------------- fault layer
+
+def test_fault_spec_validates_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(site="x", kind="explode")
+
+
+def test_fault_spec_match_after_max_fires():
+    spec = FaultSpec(site="s", kind="kill", match=(("shard", 1),),
+                     after=1, max_fires=2)
+    plan = FaultPlan([spec], seed=0)
+    assert plan.visit("s", {"shard": 0}) == []      # no match
+    assert plan.visit("other", {"shard": 1}) == []  # wrong site
+    assert plan.visit("s", {"shard": 1}) == []      # after: skip first
+    assert len(plan.visit("s", {"shard": 1})) == 1
+    assert len(plan.visit("s", {"shard": 1})) == 1
+    assert plan.visit("s", {"shard": 1}) == []      # max_fires exhausted
+    assert plan.n_fires == 2
+    assert plan.log == [("s", 0, "kill"), ("s", 0, "kill")]
+
+
+def test_fault_plan_deterministic_under_fixed_visit_sequence():
+    def fires(plan):
+        out = []
+        for v in range(20):
+            out.append(bool(plan.visit("s", {"shard": v % 4})))
+        return out
+
+    mk = lambda: FaultPlan(
+        [FaultSpec(site="s", kind="kill", p=0.5)], seed=42)
+    assert fires(mk()) == fires(mk())
+
+
+def test_random_plan_reproducible_and_bounded():
+    a, b = random_plan(7), random_plan(7)
+    assert a.specs == b.specs and a.seed == b.seed
+    for seed in range(20):
+        plan = random_plan(seed)
+        assert 1 <= len(plan.specs) <= 5
+        for spec in plan.specs:
+            assert spec.site in ("shard.scan", "engine.scan")
+            if spec.site == "engine.scan":   # bounded: retries must succeed
+                assert spec.kind == "kill" and spec.max_fires <= 2
+
+
+def test_arm_is_exclusive_and_scoped():
+    assert inject.active() is None
+    with arm(FaultPlan([FaultSpec(site="s", kind="kill")], seed=0)) as p:
+        assert inject.active() is p
+        with pytest.raises(RuntimeError, match="already armed"):
+            with arm(FaultPlan()):
+                pass
+    assert inject.active() is None
+    assert inject.site("s") is None   # disarmed: no-op
+
+
+def test_site_kill_beats_poison_and_reports_context():
+    plan = FaultPlan([FaultSpec(site="s", kind="poison"),
+                      FaultSpec(site="s", kind="kill")], seed=0)
+    with arm(plan):
+        with pytest.raises(InjectedFault) as ei:
+            inject.site("s", shard=3)
+    assert ei.value.site == "s" and ei.value.context == {"shard": 3}
+    assert isinstance(ei.value, FaultError)
+
+
+# ------------------------------------------------- sharded scan (engine)
+
+def test_empty_plan_is_bit_identical(db):
+    q = _avg_q(db)
+    clean = db.query(q)
+    with arm(FaultPlan()):
+        armed = db.query(q)
+    _assert_bit_identical(clean, armed)
+    assert not armed.degraded and armed.shards_total == 0
+
+
+def test_empty_plan_batch_is_bit_identical(db):
+    qs = [_avg_q(db),
+          parse_blinkql("SELECT COUNT(SessionTime) FROM sessions "
+                        "WHERE City = 'city001'", db).normalized()]
+    clean = db.query_batch(list(qs))
+    with arm(FaultPlan()):
+        armed = db.query_batch(list(qs))
+    for c, a in zip(clean, armed):
+        _assert_bit_identical(c, a)
+
+
+def test_sharded_clean_scan_matches_fused(db):
+    """A non-empty plan that never fires engages the sharded path: the
+    answer must agree numerically with the fused scan (different float
+    summation order, so allclose not bitwise) and carry provenance."""
+    q = _avg_q(db)
+    clean = db.query(q)
+    never = FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                 match=(("shard", 99),))], seed=0)
+    with arm(never):
+        sharded = db.query(q)
+    _assert_close(clean, sharded, rtol=1e-4)
+    assert not sharded.degraded
+    assert sharded.shards_total == N_SHARDS and sharded.shards_lost == 0
+
+
+def test_replica_reroute_is_bit_identical_to_sharded_clean(db):
+    """Killing replica 0 of one shard re-routes to replica 1 — a
+    deterministic re-execution of the SAME shard mask, so the final answer
+    is bit-identical to the sharded scan with no faults at all."""
+    q = _avg_q(db)
+    never = FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                 match=(("shard", 99),))], seed=0)
+    with arm(never):
+        baseline = db.query(q)
+    kill_r0 = FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                   match=(("shard", 1), ("replica", 0)))],
+                        seed=0)
+    with arm(kill_r0):
+        rerouted = db.query(q)
+    _assert_bit_identical(baseline, rerouted)
+    assert not rerouted.degraded and rerouted.shards_lost == 0
+
+
+def test_shard_loss_reweights_and_widens_ci(db):
+    q = _avg_q(db)
+    never = FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                 match=(("shard", 99),))], seed=0)
+    with arm(never):
+        baseline = db.query(q)
+    lose_shard = FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                      match=(("shard", 1),))], seed=0)
+    with arm(lose_shard):
+        degraded = db.query(q)
+    assert degraded.degraded
+    assert degraded.shards_lost == 1 and degraded.shards_total == N_SHARDS
+    assert _finite(degraded)
+    kb = {g.key: g for g in baseline.groups}
+    for g in degraded.groups:
+        # The HT second-phase reweight strictly inflates variance: every
+        # surviving group's stderr must be at least the clean stderr.
+        assert g.stderr >= kb[g.key].stderr
+
+
+def test_poison_is_detected_and_contained(db):
+    """A poisoned replica produces NaN partials; the finiteness check must
+    disqualify the attempt (never let NaNs reach the estimate) and fall to
+    the replica / reweight rungs."""
+    q = _avg_q(db)
+    poison_all = FaultPlan([FaultSpec(site="shard.scan", kind="poison",
+                                      match=(("shard", 2),))], seed=0)
+    with arm(poison_all):
+        ans = db.query(q)
+    assert _finite(ans)
+    assert ans.degraded and ans.shards_lost == 1
+
+
+def test_all_shards_lost_raises_typed_error(db):
+    q = _avg_q(db)
+    kill_all = FaultPlan([FaultSpec(site="shard.scan", kind="kill")], seed=0)
+    with arm(kill_all):
+        with pytest.raises(AllShardsLostError):
+            db.query(q)
+
+
+def test_straggler_delay_is_tolerated(db):
+    """A delay fault alone (no deadline configured) only slows the scan —
+    same answer, no degradation."""
+    q = _avg_q(db)
+    never = FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                 match=(("shard", 99),))], seed=0)
+    with arm(never):
+        baseline = db.query(q)
+    slow = FaultPlan([FaultSpec(site="shard.scan", kind="delay",
+                                match=(("shard", 0),), delay_s=0.01)], seed=0)
+    with arm(slow):
+        delayed = db.query(q)
+    _assert_bit_identical(baseline, delayed)
+    assert not delayed.degraded
+
+
+def test_shard_partition_is_disjoint_and_total():
+    strata = np.arange(1000, dtype=np.int64)
+    shards = shard_of_strata(strata, 4)
+    assert shards.min() >= 0 and shards.max() < 4
+    # every stratum lands in exactly one shard; the hash spreads them
+    counts = np.bincount(shards, minlength=4)
+    assert counts.sum() == 1000 and (counts > 0).all()
+
+
+def test_reweight_moments_matches_hand_computation():
+    mom = GroupedMoments(
+        n=np.array([10.0]), wsum=np.array([20.0]), wxsum=np.array([40.0]),
+        wx2sum=np.array([100.0]), var_count=np.array([4.0]),
+        var_sum=np.array([8.0]), var_sum2=np.array([24.0]))
+    f = 2.0
+    out = reweight_moments(mom, f)
+    # point leaves scale by f (HT with composed rate r/f); n is a raw count
+    np.testing.assert_allclose(np.asarray(out.n), [10.0])
+    np.testing.assert_allclose(np.asarray(out.wsum), [40.0])
+    np.testing.assert_allclose(np.asarray(out.wxsum), [80.0])
+    np.testing.assert_allclose(np.asarray(out.wx2sum), [200.0])
+    # var' = f²·var + f(f−1)·(matching weighted leaf)
+    np.testing.assert_allclose(np.asarray(out.var_count),
+                               [4 * 4.0 + 2 * 20.0])
+    np.testing.assert_allclose(np.asarray(out.var_sum),
+                               [4 * 8.0 + 2 * 40.0])
+    np.testing.assert_allclose(np.asarray(out.var_sum2),
+                               [4 * 24.0 + 2 * 100.0])
+
+
+def test_merge_shard_reports():
+    a = ShardScanReport(n_shards=4, lost=(1,), rerouted=(), reweight=4 / 3)
+    b = ShardScanReport(n_shards=4, lost=(2,), rerouted=(0,), reweight=1.0)
+    m = merge_shard_reports([a, None, b])
+    assert m.n_shards == 4 and set(m.lost) == {1, 2}
+    assert m.rerouted == (0,) and m.reweight == pytest.approx(4 / 3)
+    assert m.degraded
+    assert merge_shard_reports([None, None]) is None
+
+
+# ------------------------------------------------ degradation ladder
+
+def test_service_retry_absorbs_bounded_engine_kill(db):
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False))
+    try:
+        plan = FaultPlan([FaultSpec(site="engine.scan", kind="kill",
+                                    max_fires=1)], seed=0)
+        with arm(plan):
+            ans = svc.submit(AVG_TXT)
+        assert ans.groups and not ans.degraded
+        assert plan.n_fires == 1
+    finally:
+        svc.close()
+
+
+def test_service_serves_stale_answer_with_declared_staleness(db):
+    svc = BlinkQLService(db)
+    try:
+        warm = svc.submit(AVG_TXT)
+        # Invalidate (family-set bump): entries demote to the stale store.
+        svc.cache._on_invalidate("sessions", None)
+        with arm(FaultPlan([FaultSpec(site="engine.scan",
+                                      kind="kill")], seed=0)):
+            stale = svc.submit(AVG_TXT)
+        assert stale.degraded and stale.staleness_s > 0.0
+        _assert_bit_identical(warm, stale)
+        assert svc.n_stale == 1
+        # Disarmed again: live execution resumes, the answer is fresh, and
+        # the degraded serve must NOT have been cached as current.
+        fresh = svc.submit(AVG_TXT)
+        assert not fresh.degraded and fresh.staleness_s == 0.0
+    finally:
+        svc.close()
+
+
+def test_service_degraded_error_when_ladder_exhausted(db):
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False))
+    try:
+        with arm(FaultPlan([FaultSpec(site="engine.scan",
+                                      kind="kill")], seed=0)):
+            with pytest.raises(DegradedServiceError) as ei:
+                svc.submit(AVG_TXT)
+        assert isinstance(ei.value.__cause__, InjectedFault)
+    finally:
+        svc.close()
+
+
+def test_service_passes_degraded_shard_answer_and_never_caches_it(db):
+    svc = BlinkQLService(db)
+    try:
+        with arm(FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                      match=(("shard", 1),))], seed=0)):
+            ans = svc.submit(AVG_TXT)
+        assert ans.degraded and ans.shards_lost == 1
+        assert svc.n_degraded == 1
+        assert svc.cache.get(_avg_q(db)) is None
+        # The same query re-submitted fault-free executes fresh (no echo of
+        # the degraded answer) and caches normally.
+        clean = svc.submit(AVG_TXT)
+        assert not clean.degraded
+        assert svc.cache.get(_avg_q(db)) is not None
+    finally:
+        svc.close()
+
+
+def test_service_nonfault_errors_propagate_unretried(db):
+    """A ValueError (malformed query semantics) is not transient: it must
+    reach the submitter unchanged on the FIRST attempt, not burn retries
+    or degrade into a stale serve."""
+    city = "city001"
+    svc = BlinkQLService(db)
+    try:
+        with pytest.raises(ValueError, match="additive"):
+            svc.submit(f"SELECT AVG(SessionTime) FROM sessions WHERE "
+                       f"City = '{city}' OR OS = 'os2'")
+    finally:
+        svc.close()
+
+
+def test_service_sheds_unmeetable_deadlines(db):
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False,
+                                                  solo_bypass=False))
+    try:
+        svc.submit("SELECT COUNT(SessionTime) FROM sessions "
+                   "WITHIN 5 SECONDS")          # prime the EWMA
+        svc._exec_ewma = 10.0                   # simulate a saturated engine
+        with pytest.raises(DeadlineShedError):
+            svc.submit("SELECT COUNT(SessionTime) FROM sessions "
+                       "WHERE City = 'city001' WITHIN 0.05 SECONDS")
+        assert isinstance(DeadlineShedError("x"), AdmissionError)
+        assert svc.stats()["shed"] == 1
+        # ERROR-bound queries are never shed (no deadline to miss).
+        ans = svc.submit(AVG_TXT)
+        assert ans.groups
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------ dispatcher-death safety
+
+def test_dispatcher_death_fails_pending_and_marks_unhealthy(db):
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False,
+                                                  solo_bypass=False))
+    with arm(FaultPlan([FaultSpec(site="scheduler.dispatch",
+                                  kind="kill")], seed=0)):
+        with pytest.raises(ServiceUnhealthyError) as ei:
+            svc.submit(AVG_TXT, timeout=30)
+        assert isinstance(ei.value.__cause__, InjectedFault)
+        assert not svc.healthy
+        # Later submissions are rejected at admission — typed, immediate.
+        with pytest.raises(ServiceUnhealthyError):
+            svc.submit(AVG_TXT)
+        with pytest.raises(ServiceUnhealthyError):
+            svc.submit_async(AVG_TXT)
+    assert svc.stats()["healthy"] is False
+    svc.close()   # dead dispatcher joins immediately; close() must not hang
+
+
+def test_dispatcher_death_fails_queued_requests_from_other_threads(db):
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False,
+                                                  solo_bypass=False))
+    errors = []
+
+    def session():
+        try:
+            svc.submit(AVG_TXT, timeout=30)
+        except BaseException as e:   # noqa: BLE001
+            errors.append(e)
+
+    # Kill the SECOND dispatch iteration so requests queued while the first
+    # batch executes are drained by the death handler, not the dispatcher.
+    with arm(FaultPlan([FaultSpec(site="scheduler.dispatch", kind="kill",
+                                  after=1)], seed=0)):
+        threads = [threading.Thread(target=session) for _ in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not any(t.is_alive() for t in threads), "a session hung"
+    assert errors and all(isinstance(e, ServiceUnhealthyError)
+                          for e in errors)
+    svc.close()
+
+
+# ------------------------------------------------ submit timeout races
+
+def test_submit_timeout_frees_slot_and_service_recovers(db):
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False,
+                                                  solo_bypass=False))
+    orig = db.query_batch
+
+    def slow(qs, **kw):
+        time.sleep(0.4)
+        return orig(qs, **kw)
+
+    try:
+        db.query_batch = slow
+        with pytest.raises(TimeoutError):
+            svc.submit(AVG_TXT, timeout=0.05)
+        db.query_batch = orig
+        # The abandoned request's slot is freed and the dispatcher drains:
+        # the service answers normally afterwards.
+        ans = svc.submit(AVG_TXT, timeout=30)
+        assert ans.groups
+        assert len(svc._queue) == 0
+    finally:
+        db.query_batch = orig
+        svc.close()
+
+
+def test_submit_timeout_with_solo_bypass_enabled(db):
+    """A timed submit must take the queued path even when the bypass is on
+    (inline execution cannot honor a caller timeout), so the timeout
+    contract holds — and afterwards the bypass still serves solo traffic."""
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False,
+                                                  solo_bypass=True))
+    orig = db.query_batch
+
+    def slow(qs, **kw):
+        time.sleep(0.4)
+        return orig(qs, **kw)
+
+    try:
+        db.query_batch = slow
+        with pytest.raises(TimeoutError):
+            svc.submit(AVG_TXT, timeout=0.05)
+        db.query_batch = orig
+        nb0 = svc.n_batches
+        ans = svc.submit(AVG_TXT)           # untimed: bypass eligible again
+        assert ans.groups and len(svc._queue) == 0
+        assert svc.n_batches > nb0
+    finally:
+        db.query_batch = orig
+        svc.close()
+
+
+def test_concurrent_submit_timeouts_leak_nothing(db):
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False,
+                                                  solo_bypass=False))
+    orig = db.query_batch
+
+    def slow(qs, **kw):
+        time.sleep(0.4)
+        return orig(qs, **kw)
+
+    outcomes = []
+
+    def session(i):
+        try:
+            outcomes.append(svc.submit(AVG_TXT, timeout=0.05))
+        except TimeoutError:
+            outcomes.append("timeout")
+
+    try:
+        db.query_batch = slow
+        threads = [threading.Thread(target=session, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not any(t.is_alive() for t in threads), "a session hung"
+        assert len(outcomes) == 4
+        db.query_batch = orig
+        # No leaked queue slots or wedged dispatcher.
+        ans = svc.submit(AVG_TXT, timeout=30)
+        assert ans.groups and len(svc._queue) == 0
+    finally:
+        db.query_batch = orig
+        svc.close()
+
+
+# ------------------------------------------------ async / batched submit
+
+def test_submit_many_lands_in_one_batch(db):
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False,
+                                                  solo_bypass=False))
+    try:
+        texts = [f"SELECT COUNT(SessionTime) FROM sessions "
+                 f"WHERE City = 'city{i:03d}'" for i in range(6)]
+        nb0 = svc.n_batches
+        res = svc.submit_many(texts, timeout=120)
+        assert len(res) == 6 and all(r.groups for r in res)
+        assert svc.n_batches - nb0 == 1, \
+            "an atomically admitted batch must coalesce into ONE scan"
+        assert svc.n_queries == 6
+    finally:
+        svc.close()
+
+
+def test_submit_async_future_and_cache_hit(db):
+    svc = BlinkQLService(db)
+    try:
+        fut = svc.submit_async(AVG_TXT)
+        ans = fut.result(timeout=120)
+        assert ans.groups
+        # Second submission hits the cache: the future resolves immediately.
+        fut2 = svc.submit_async(AVG_TXT)
+        assert fut2.done()
+        _assert_bit_identical(ans, fut2.result())
+    finally:
+        svc.close()
+
+
+def test_submit_many_mixed_errors_reach_only_their_query(db):
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False,
+                                                  solo_bypass=False))
+    try:
+        bad = ("SELECT AVG(SessionTime) FROM sessions "
+               "WHERE City = 'city001' OR OS = 'os2'")
+        with pytest.raises(ValueError, match="additive"):
+            svc.submit_many([AVG_TXT, bad], timeout=120)
+        # The well-formed query in the same batch was still answered.
+        assert svc.n_queries >= 1
+        ans = svc.submit(AVG_TXT, timeout=120)
+        assert ans.groups
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------ supervisor primitives
+
+def test_heartbeat_stamps_each_worker_individually(monkeypatch):
+    from repro.fault import supervisor as sup
+    ticks = iter(range(100))
+    monkeypatch.setattr(sup.time, "time", lambda: float(next(ticks)))
+    hb = Heartbeat(n_workers=3)
+    # One time() call per worker: distinct construction stamps, so the
+    # first-deadline clock starts per worker, not at a shared instant.
+    assert len(set(hb.last_time.tolist())) == 3
+
+
+def test_retry_loop_no_sleep_after_final_attempt(monkeypatch):
+    from repro.fault import supervisor as sup
+    sleeps = []
+    monkeypatch.setattr(sup.time, "sleep", sleeps.append)
+    calls = []
+
+    def boom():
+        calls.append(1)
+        raise RuntimeError("nope")
+
+    with pytest.raises(RuntimeError, match="after 2 retries"):
+        RetryLoop(max_retries=2, backoff_s=0.1).run(boom)
+    assert len(calls) == 3              # initial + 2 retries
+    assert sleeps == [0.1, 0.2]         # exponential, none after the last
+
+
+def test_retry_loop_raise_last_reraises_original(monkeypatch):
+    from repro.fault import supervisor as sup
+    monkeypatch.setattr(sup.time, "sleep", lambda s: None)
+    original = FloatingPointError("nan")
+
+    def boom():
+        raise original
+
+    with pytest.raises(FloatingPointError) as ei:
+        RetryLoop(max_retries=1, raise_last=True).run(boom)
+    assert ei.value is original
+
+
+def test_retry_loop_nontransient_propagates_immediately():
+    calls = []
+
+    def boom():
+        calls.append(1)
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        RetryLoop(max_retries=5).run(boom)
+    assert len(calls) == 1
+
+
+def test_retry_loop_retry_on_is_injectable(monkeypatch):
+    from repro.fault import supervisor as sup
+    monkeypatch.setattr(sup.time, "sleep", lambda s: None)
+    attempts = []
+
+    def flaky():
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise KeyError("transient here")
+        return "ok"
+
+    assert RetryLoop(max_retries=3, retry_on=(KeyError,)).run(flaky) == "ok"
+    assert len(attempts) == 3
+
+
+# ------------------------------------------------------- chaos soak
+
+FAULT_SEEDS = int(os.environ.get("FAULT_SEEDS", "4"))
+
+
+@pytest.mark.parametrize("seed", range(FAULT_SEEDS))
+def test_chaos_soak(db, seed):
+    """The serving contract under a random bounded fault schedule: every
+    submission returns an Answer or raises a TYPED error; non-degraded
+    answers agree with the fault-free reference; degraded answers are
+    finite and annotated; no session hangs."""
+    texts = [f"SELECT AVG(SessionTime) FROM sessions WHERE "
+             f"City = 'city{i:03d}' ERROR WITHIN 10% CONFIDENCE 95%"
+             for i in range(4)]
+    reference = {t: db.query(parse_blinkql(t, db).normalized())
+                 for t in texts}
+    typed = (FaultError, DegradedServiceError, AdmissionError,
+             ServiceUnhealthyError, TimeoutError)
+    svc = BlinkQLService(db, config=ServiceConfig(use_cache=False,
+                                                  retry_backoff_s=0.001))
+    results: list = []
+
+    def session(worker):
+        for j, t in enumerate(texts):
+            try:
+                results.append((t, svc.submit(t, timeout=120)))
+            except typed as e:
+                results.append((t, e))
+
+    try:
+        with arm(random_plan(seed)):
+            threads = [threading.Thread(target=session, args=(w,))
+                       for w in range(3)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=300)
+            assert not any(t.is_alive() for t in threads), "a session hung"
+    finally:
+        svc.close()
+
+    assert len(results) == 3 * len(texts)
+    for text, res in results:
+        if isinstance(res, BaseException):
+            continue                     # typed failure: contract satisfied
+        assert _finite(res), "non-finite estimate escaped the fault layer"
+        if not res.degraded:
+            _assert_close(reference[text], res, rtol=1e-3)
+        else:
+            assert res.shards_lost > 0 or res.staleness_s > 0.0
