@@ -37,7 +37,8 @@ import shutil
 import sys
 
 BENCH_FILES = ("BENCH_batch.json", "BENCH_fault.json", "BENCH_ingest.json",
-               "BENCH_mutation.json", "BENCH_serve.json")
+               "BENCH_kernel.json", "BENCH_mutation.json",
+               "BENCH_serve.json")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +94,24 @@ GATES = [
          "query_after_base_compact_s", higher=False, rel_tol=3.0),
     Gate("BENCH_mutation.json", "mutation_delete*",
          "query_after_decay_s", higher=False, rel_tol=3.0),
+    # ---- fused memory-lean scan kernel (ISSUE-7): bytes/row is a pure
+    # function of the streamed dtypes — machine-independent and EXACT
+    # (rel_tol=0: any drift is a memory-format change, not noise). The
+    # fused layout must keep streaming ≥ 30% fewer bytes than the
+    # pre-fusion batched layout on the 1-atom template (dtype arithmetic:
+    # 20 → 12 B/row = 1.67×; floor 1.3 is the acceptance bar), QUANTILE
+    # stays one streaming pass, and the fused reduction is bit-exact vs
+    # the pre-fusion kernel given identical derived inputs.
+    Gate("BENCH_kernel.json", "kernel_scan_batched", "bytes_per_row",
+         higher=False, rel_tol=0.0),
+    Gate("BENCH_kernel.json", "kernel_scan_fused", "bytes_per_row",
+         higher=False, rel_tol=0.0),
+    Gate("BENCH_kernel.json", "kernel_scan_fused", "traffic_ratio",
+         floor=1.3),
+    Gate("BENCH_kernel.json", "kernel_scan_fused",
+         "max_abs_diff_vs_batched", higher=False, ceiling=0.0),
+    Gate("BENCH_kernel.json", "kernel_quantile_fused", "quantile_passes",
+         higher=False, ceiling=1.0),
     # ---- fault tolerance (chaos harness): availability is a COUNT ratio —
     # machine-independent, gated with absolute floors. The ISSUE-6
     # acceptance bar: with one logical shard down (both replicas), ≥ 99% of

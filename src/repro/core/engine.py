@@ -124,6 +124,9 @@ class BlinkDB:
         self._programs: dict = {}     # (table, phi, template) -> compiled fn
         self._batched_programs: dict = {}   # (scan key, Q_padded) -> compiled fn
         self._quantile_programs: dict = {}  # (table, phi, template) -> jitted fn
+        # (table, phi, value_col) -> (lo, hi) histogram range for the fused
+        # one-pass quantile kernel; invalidated with the family's programs.
+        self._quantile_ranges: dict = {}
         self._exact_programs: dict = {}
         # (table, phi, struct, agg, value_col, group_by, repr(bound)) -> K
         # (§4.4; invalidation matches positionally on the (table, phi) prefix)
@@ -196,7 +199,8 @@ class BlinkDB:
     def _invalidate_table(self, name: str) -> None:
         for cache in (self._striped, self._latency, self._programs,
                       self._batched_programs, self._quantile_programs,
-                      self._exact_programs, self._elp_cache):
+                      self._quantile_ranges, self._exact_programs,
+                      self._elp_cache):
             for k in [k for k in cache if k[0] == name]:
                 del cache[k]
         for k in [k for k in self._fk_maps if name in k[:2]]:
@@ -394,6 +398,11 @@ class BlinkDB:
             del self._fk_maps[k]
         for k in [k for k in self._exact_programs if k[0] == table_name]:
             del self._exact_programs[k]
+        # Appended rows may extend a value column's [min, max]; the fused
+        # quantile kernel's histogram range must track it (stale ranges only
+        # cost edge-bin resolution, but recomputing host min/max is cheap).
+        for k in [k for k in self._quantile_ranges if k[0] == table_name]:
+            del self._quantile_ranges[k]
         for col, vals in delta.new_dict_values.items():
             if not len(vals):
                 continue
@@ -732,8 +741,8 @@ class BlinkDB:
         programs, plus ELP resolutions and the latency model — a K chosen
         for the old sample need not meet the bound on the new one."""
         for cache in (self._programs, self._batched_programs,
-                      self._quantile_programs, self._elp_cache,
-                      self._latency):
+                      self._quantile_programs, self._quantile_ranges,
+                      self._elp_cache, self._latency):
             stale = [k for k in cache if k[0] == table_name and k[1] == phi]
             for k in stale:
                 del cache[k]
@@ -780,8 +789,7 @@ class BlinkDB:
         # shape class in the key retires programs when a block is reallocated.
         key = (table_name, phi, struct, q.value_column, group_col, n_groups,
                striped.shape_class)
-        args = (striped.columns, striped.freq, striped.entry_key,
-                striped.valid)
+        args = exec_lib.scan_args(striped)
         fn = self._programs.get(key)
         if fn is None:
             jfn = exec_lib.make_query_fn(
@@ -797,8 +805,8 @@ class BlinkDB:
         report = None
         if self._fault_sharding_active():
             def call(mask):
-                m = fn(jnp.float32(k), vals, striped.columns, striped.freq,
-                       striped.entry_key, mask)
+                m = fn(jnp.float32(k), vals, striped.columns, striped.unit,
+                       striped.strat, striped.freq_table, mask)
                 return jax.tree.map(lambda x: x.block_until_ready(), m)
             mom, report = exec_lib.run_sharded_scan(
                 call, striped,
@@ -816,15 +824,12 @@ class BlinkDB:
                              phi: tuple[str, ...], k: float,
                              mom: est_lib.GroupedMoments, rows_read: int,
                              elapsed: float, confidence: float,
-                             faults: "exec_lib.ShardScanReport | None" = None
-                             ) -> Answer:
+                             faults: "exec_lib.ShardScanReport | None" = None,
+                             qpair=None) -> Answer:
         tbl = self.tables[table_name]
         fam = self.families[table_name][phi]
         degraded = faults is not None and faults.degraded
-        if q.agg is AggOp.QUANTILE:
-            est = self._quantile_estimate(q, table_name, phi, k, mom)
-        else:
-            est = est_lib.estimate(q.agg, mom)
+        est = self._estimate_for(q, table_name, phi, k, mom, qpair)
         stderr, lo, hi = est_lib.ci(est, confidence)
         group_col = q.group_by[0] if q.group_by else None
         vals = np.asarray(est.value)
@@ -852,14 +857,36 @@ class BlinkDB:
                       shards_lost=len(faults.lost) if faults else 0,
                       shards_total=faults.n_shards if faults else 0)
 
-    def _quantile_estimate(self, q: Query, table_name: str,
-                           phi: tuple[str, ...], k: float,
-                           mom: est_lib.GroupedMoments) -> est_lib.Estimate:
-        """Grouped weighted quantile needs the raw rows (histogram pass).
-        The pass is jitted and cached per (family × template × shape class) —
-        k, the predicate constants, the quantile level, AND the striped block
-        are traced args, so every re-instantiation (and every ELP probe)
-        reuses one compiled program, including across incremental appends."""
+    def _family_range(self, table_name: str, phi: tuple[str, ...],
+                      value_col: str | None) -> tuple[float, float]:
+        """Host-cached [min, max] of a family's value column — the fixed
+        histogram range for the fused one-pass quantile kernel. Invalidated
+        with the family's programs and on table appends; a stale range only
+        costs edge-bin resolution (out-of-range values clip into the end
+        bins), never histogram mass."""
+        key = (table_name, phi, value_col)
+        rng = self._quantile_ranges.get(key)
+        if rng is None:
+            fam = self.families[table_name][phi]
+            if value_col is None:
+                rng = (0.0, 1.0)  # COUNT-style: values are all ones
+            else:
+                col = np.asarray(fam.host_column(value_col), np.float32)
+                rng = ((float(np.min(col)), float(np.max(col)))
+                       if col.size else (0.0, 1.0))
+            self._quantile_ranges[key] = rng
+        return rng
+
+    def _quantile_scan(self, q: Query, table_name: str, phi: tuple[str, ...],
+                       k: float) -> tuple[est_lib.GroupedMoments,
+                                          tuple[jax.Array, jax.Array]]:
+        """ONE streaming pass producing BOTH the grouped moments and the
+        histogram quantile (value, density) — no second full-column read.
+        The program is jitted and cached per (family × template × shape
+        class); k, the predicate constants, the level, the histogram range,
+        AND the striped block are traced args, so every re-instantiation
+        (and every ELP probe) reuses one compiled program, including across
+        incremental appends."""
         striped = self._striped_for(table_name, phi)
         bound_pred = exec_lib.bind_predicate(q.predicate, self._encode(table_name))
         struct, vals = exec_lib.pred_structure(bound_pred)
@@ -870,13 +897,62 @@ class BlinkDB:
         fn = self._quantile_programs.get(key)
         if fn is None:
             fn = exec_lib.make_quantile_fn(struct, q.value_column, group_col,
-                                           n_groups)
+                                           n_groups, mesh=self.mesh,
+                                           data_axes=self.data_axes,
+                                           use_pallas=self.config.use_pallas)
             self._quantile_programs[key] = fn
-        qv, dens = fn(jnp.float32(k), vals, jnp.float32(q.quantile),
-                      striped.columns, striped.freq, striped.entry_key,
-                      striped.valid)
-        return est_lib.estimate(AggOp.QUANTILE, mom, quantile_value=qv,
-                                quantile_density=dens, q=q.quantile)
+        lo, hi = self._family_range(table_name, phi, q.value_column)
+        mom, qv, dens = fn(jnp.float32(k), vals, jnp.float32(q.quantile),
+                           jnp.float32(lo), jnp.float32(hi),
+                           *exec_lib.scan_args(striped))
+        return mom, (qv, dens)
+
+    def _run_quantile_at_k(self, table_name: str, q: Query,
+                           phi: tuple[str, ...], k: float):
+        """QUANTILE analogue of _run_at_k: the fused one-pass program yields
+        moments AND the histogram quantile from a single scan. Callers keep
+        this off the fault-sharded path (per-shard moment partials need the
+        plain scan program); timed like _run_at_k."""
+        fam = self.families[table_name][phi]
+        inject.site("engine.scan", table=table_name)
+        t0 = time.perf_counter()
+        mom, qpair = self._quantile_scan(q, table_name, phi, k)
+        mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+        dt = time.perf_counter() - t0
+        return mom, fam.prefix_for_k(k), dt, None, qpair
+
+    def _scan_for_query(self, table_name: str, q: Query,
+                        phi: tuple[str, ...], k: float):
+        """Dispatch one scan at k, QUANTILE-aware: on the clean path a
+        QUANTILE query runs the fused one-pass program (moments + histogram
+        quantile, one full-column read); every other aggregate — and the
+        fault-sharded path, which reduces per-shard partials — runs the plain
+        scan program. Returns (mom, rows_read, dt, fault_report, qpair)."""
+        if q.agg is AggOp.QUANTILE and not self._fault_sharding_active():
+            return self._run_quantile_at_k(table_name, q, phi, k)
+        return self._run_at_k(table_name, q, phi, k) + (None,)
+
+    def _estimate_for(self, q: Query, table_name: str, phi: tuple[str, ...],
+                      k: float, mom: est_lib.GroupedMoments,
+                      qpair=None) -> est_lib.Estimate:
+        """Estimate from moments; QUANTILE queries additionally need the
+        histogram quantile. When the caller's scan already produced it
+        (`qpair` from _scan_for_query) no extra pass runs; otherwise — shared
+        batched scans and fault-sharded moments — the fused program supplies
+        it (its moments are redundant there and discarded)."""
+        if q.agg is not AggOp.QUANTILE:
+            return est_lib.estimate(q.agg, mom)
+        if qpair is None:
+            _, qpair = self._quantile_scan(q, table_name, phi, k)
+        return est_lib.estimate(AggOp.QUANTILE, mom, quantile_value=qpair[0],
+                                quantile_density=qpair[1], q=q.quantile)
+
+    def _quantile_estimate(self, q: Query, table_name: str,
+                           phi: tuple[str, ...], k: float,
+                           mom: est_lib.GroupedMoments) -> est_lib.Estimate:
+        """Histogram-quantile estimate for moments obtained elsewhere (shared
+        batched probe scans); delegates to the fused one-pass program."""
+        return self._estimate_for(q, table_name, phi, k, mom)
 
     def _selection_cat_cols(self, table_name: str, q: Query) -> frozenset[str]:
         """Family selection columns (§4.1): joined dim attributes map to their
@@ -930,16 +1006,16 @@ class BlinkDB:
                    q.group_by, repr(q.bound))
         if self.config.reuse_elp and elp_key in self._elp_cache:
             k_q = self._elp_cache[elp_key]
-            mom, rows_read, dt, rep = self._run_at_k(table_name, q, phi, k_q)
+            mom, rows_read, dt, rep, qpair = self._scan_for_query(
+                table_name, q, phi, k_q)
             return self._answer_from_moments(q, table_name, phi, k_q, mom,
                                              rows_read, dt, confidence,
-                                             faults=rep)
+                                             faults=rep, qpair=qpair)
 
         if isinstance(q.bound, ErrorBound):
-            mom, rows_read, dt, _ = self._run_at_k(table_name, q, phi,
-                                                   k_probe)
-            est = (self._quantile_estimate(q, table_name, phi, k_probe, mom)
-                   if q.agg is AggOp.QUANTILE else est_lib.estimate(q.agg, mom))
+            mom, rows_read, dt, _, qpair = self._scan_for_query(
+                table_name, q, phi, k_probe)
+            est = self._estimate_for(q, table_name, phi, k_probe, mom, qpair)
             n_req = np.asarray(est_lib.required_n_for_error(
                 q.agg, est, q.bound.eps, confidence, q.bound.relative))
             k_q = elp_lib.pick_k_for_error(fam, np.asarray(est.n), n_req, k_probe)
@@ -949,10 +1025,11 @@ class BlinkDB:
             k_q = fam.ks[0]  # no bound: most accurate available sample
 
         self._elp_cache[elp_key] = k_q
-        mom, rows_read, dt, rep = self._run_at_k(table_name, q, phi, k_q)
+        mom, rows_read, dt, rep, qpair = self._scan_for_query(
+            table_name, q, phi, k_q)
         return self._answer_from_moments(q, table_name, phi, k_q, mom,
                                          rows_read, dt, confidence,
-                                         faults=rep)
+                                         faults=rep, qpair=qpair)
 
     def _pick_k_for_time(self, table_name: str, q: Query,
                          phi: tuple[str, ...],
@@ -1039,8 +1116,7 @@ class BlinkDB:
             [list(consts_list[0])] * (q_pad - n_q),
             np.float32).reshape(q_pad, n_atoms)
         ks_dev, consts_dev = jnp.asarray(ks_arr), jnp.asarray(consts)
-        args = (striped.columns, striped.freq, striped.entry_key,
-                striped.valid)
+        args = exec_lib.scan_args(striped)
         pkey = scan_key + (striped.shape_class, q_pad)
         fn = self._batched_programs.get(pkey)
         if fn is None:
@@ -1055,8 +1131,8 @@ class BlinkDB:
         report = None
         if self._fault_sharding_active():
             def call(mask):
-                m = fn(ks_dev, consts_dev, striped.columns, striped.freq,
-                       striped.entry_key, mask)
+                m = fn(ks_dev, consts_dev, striped.columns, striped.unit,
+                       striped.strat, striped.freq_table, mask)
                 return jax.tree.map(lambda x: x.block_until_ready(), m)
             mom, report = exec_lib.run_sharded_scan(
                 call, striped,

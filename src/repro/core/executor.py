@@ -21,11 +21,26 @@ Per-query state is two traced stacks — resolution caps ks[Q] and predicate
 constants pred_consts[Q, n_atoms] in flattened template order — so one
 compiled program serves every batch of every instantiation of the template.
 On a mesh the whole batch is merged with ONE psum of the stacked [7, Q, G]
-statistics tensor; on the pallas path the per-shard scan is the Q-query
-kernel (kernels/agg_scan.py `agg_scan_batched_pallas`), which relies on the
-striped layout padding entry_key with +inf so padded rows fail every
-per-query prefix test. The (table, family, template) grouping contract that
-feeds this layer is documented in docs/BATCHING.md.
+statistics tensor; on the pallas path the per-shard scan is the fused
+memory-lean kernel (kernels/agg_scan.py `agg_scan_fused_pallas`). The
+(table, family, template) grouping contract that feeds this layer is
+documented in docs/BATCHING.md.
+
+Memory-lean striped layout
+--------------------------
+
+The striped block stores ONLY the sampling primitives: per-row uniform
+`unit` (f32), stable stratum id `strat` (narrowest int that fits the
+stratum count), the per-stratum frequency table (f32[D], tiny), a `valid`
+bitmask, and dictionary-encoded data columns at their natural int8/int16
+width. The derived HT state — freq = freq_table[strat] and
+entry_key = unit·freq — is NOT materialized: every scan (jnp or Pallas)
+re-derives it on the fly, in VMEM on the kernel path. That removes ~8
+bytes/row of device memory and two full-width HBM streams per scan, and
+append/tombstone epochs stop rebuilding derived arrays (the refresh is just
+the delta scatter plus shipping the new frequency table). Padding and ghost
+slots self-exclude through unit=+inf ⇒ entry_key=+inf, exactly as the old
+stored-entry_key layout did.
 """
 from __future__ import annotations
 
@@ -130,19 +145,19 @@ class StripedFamily:
     Row j of the family lives at shard (j % S), local index (j // S); every
     shard holds an equal slice of every prefix: balanced load for every
     resolution. The block over-allocates (_STRIPE_HEADROOM) so append deltas
-    slot into existing padding, and keeps the per-row sampling PRIMITIVES —
-    unit u and stable stratum id — alongside the derived freq/entry_key, so
-    an append only ships the delta rows plus the updated per-stratum
-    frequency table; freq and entry_key are re-derived ON DEVICE.
+    slot into existing padding, and stores ONLY the per-row sampling
+    PRIMITIVES — unit u, stable stratum id, validity — plus the tiny
+    per-stratum frequency table. The derived HT state (freq =
+    freq_table[strat], entry_key = unit·freq) is re-derived by every scan
+    (in VMEM on the kernel path), never materialized: an append ships just
+    the delta rows and the refreshed frequency table.
     """
     phi: tuple[str, ...]
     ks: tuple[float, ...]
-    columns: dict[str, jax.Array]   # [S, n_local] (padded)
-    freq: jax.Array                 # f32[S, n_local] (derived: freq_table[strat])
-    entry_key: jax.Array            # f32[S, n_local] (derived: unit * freq)
+    columns: dict[str, jax.Array]   # [S, n_local]; dict-coded cols int8/int16
     valid: jax.Array                # bool[S, n_local] (padding mask)
-    unit: jax.Array                 # f32[S, n_local], +inf on padding
-    strat: jax.Array                # int32[S, n_local] stable stratum ids
+    unit: jax.Array                 # f32[S, n_local], +inf on padding/ghosts
+    strat: jax.Array                # int8/int16/int32[S, n_local] stratum ids
     freq_table: jax.Array           # f32[D_padded] per-stratum F
     n_rows: int                     # occupied slots (incl. self-excluded ghosts)
     table_rows: int
@@ -158,11 +173,11 @@ class StripedFamily:
 
     @property
     def capacity(self) -> int:
-        return self.n_shards * int(self.freq.shape[1])
+        return self.n_shards * int(self.unit.shape[1])
 
     @property
     def n_local(self) -> int:
-        return int(self.freq.shape[1])
+        return int(self.unit.shape[1])
 
     @property
     def ghost_fraction(self) -> float:
@@ -173,9 +188,13 @@ class StripedFamily:
     @property
     def shape_class(self) -> tuple:
         """Everything an AOT-compiled program's input signature depends on.
-        Appends that keep this unchanged reuse compiled programs as-is."""
-        return (self.n_shards, int(self.freq.shape[1]),
-                tuple(sorted(self.columns)))
+        Appends that keep this unchanged reuse compiled programs as-is.
+        Narrow column/strat dtypes and the padded freq-table length are part
+        of the signature now that programs take the primitive layout."""
+        return (self.n_shards, int(self.unit.shape[1]),
+                tuple(sorted((c, str(a.dtype))
+                             for c, a in self.columns.items())),
+                str(self.strat.dtype), int(self.freq_table.shape[0]))
 
 
 def _padded_local(n: int, n_shards: int) -> int:
@@ -189,6 +208,44 @@ def _padded_freq_table(freq_table: np.ndarray) -> np.ndarray:
     out = np.ones(want, dtype=np.float32)
     out[: len(freq_table)] = freq_table
     return out
+
+
+def _narrow_int_dtype(a: np.ndarray) -> np.dtype:
+    """Smallest of int8/int16/int32 holding every value — the dtype-selection
+    rule for dictionary-encoded columns and stratum ids (docs/BATCHING.md).
+    The scan kernels stream columns at this width and widen in VMEM; an
+    append whose delta overflows the chosen width forces a full restripe
+    (stripe_append returns None), which re-picks widths from the new data."""
+    if a.size == 0:
+        return np.dtype(np.int8)
+    lo, hi = int(a.min()), int(a.max())
+    for dt in (np.int8, np.int16):
+        info = np.iinfo(dt)
+        if info.min <= lo and hi <= info.max:
+            return np.dtype(dt)
+    return np.dtype(np.int32)
+
+
+def _storage_dtype(a: np.ndarray) -> np.dtype:
+    """Device storage dtype for a data column: ints narrow per
+    _narrow_int_dtype, floats stream as f32, anything else unchanged."""
+    if a.dtype.kind in "iu":
+        return _narrow_int_dtype(a)
+    if a.dtype.kind == "f":
+        return np.dtype(np.float32)
+    return a.dtype
+
+
+def _fits_dtype(a, dtype) -> bool:
+    """Do the (integer) values fit the narrow storage dtype?"""
+    dt = np.dtype(dtype)
+    a = np.asarray(a)
+    if dt.kind not in "iu" or a.size == 0:
+        return True
+    if a.dtype.kind not in "iu":
+        a = a.astype(np.int64)
+    info = np.iinfo(dt)
+    return bool(a.min() >= info.min and a.max() <= info.max)
 
 
 def stripe_family(fam: SampleFamily, n_shards: int,
@@ -212,8 +269,10 @@ def stripe_family(fam: SampleFamily, n_shards: int,
         n_local = max(n_local, int(min_local))
     pad = n_local * n_shards - n
 
-    def stripe(arr, fill):
+    def stripe(arr, fill, dtype=None):
         a = np.asarray(arr)
+        if dtype is not None:
+            a = a.astype(dtype)
         if pad:
             a = np.concatenate([a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
         return np.ascontiguousarray(a.reshape(n_local, n_shards).T)  # [S, n_local]
@@ -224,23 +283,28 @@ def stripe_family(fam: SampleFamily, n_shards: int,
     # and fall back to a device read, exactly as before).
     strat = (fam.row_strata if fam.row_strata is not None
              else np.zeros(n, dtype=np.int64))
-    entry_key = (fam.entry_key_host if fam.entry_key_host is not None
-                 else np.asarray(fam.entry_key))
-    freq = (fam.stratum_freqs.astype(np.float32)[fam.row_strata]
-            if fam.row_strata is not None else np.asarray(fam.freq))
     if fam.unit_host is not None:
         unit = fam.unit_host
     elif fam.unit is not None:   # legacy eagerly-built family
         unit = np.asarray(fam.unit)
-    else:
+    else:                        # derive from the legacy stored entry keys
+        entry_key = (fam.entry_key_host if fam.entry_key_host is not None
+                     else np.asarray(fam.entry_key))
+        freq = (fam.stratum_freqs.astype(np.float32)[fam.row_strata]
+                if fam.row_strata is not None else np.asarray(fam.freq))
         unit = entry_key / np.maximum(freq, 1e-30)
+    # Packed narrow dtypes: dictionary-encoded columns and stratum ids are
+    # stored (and later STREAMED by the kernels) at the smallest int width
+    # that holds their dictionary; fill 0 always fits. Derived freq/
+    # entry_key are NOT materialized — scans re-derive them from
+    # (unit, strat, freq_table).
     host_block = {
-        "cols": {c: stripe(fam.host_column(c), 0) for c in fam.columns},
-        "freq": stripe(freq, 1.0),
-        "entry_key": stripe(entry_key, np.inf),
+        "cols": {c: stripe(a, 0, _storage_dtype(a))
+                 for c, a in ((c, np.asarray(fam.host_column(c)))
+                              for c in fam.columns)},
         "valid": stripe(np.ones(n, dtype=bool), False),
         "unit": stripe(unit.astype(np.float32), np.inf),
-        "strat": stripe(strat.astype(np.int32), 0),
+        "strat": stripe(strat, 0, _narrow_int_dtype(np.asarray(strat))),
         "freq_table": _padded_freq_table(
             fam.stratum_freqs.astype(np.float32)),
     }
@@ -248,9 +312,8 @@ def stripe_family(fam: SampleFamily, n_shards: int,
     slot_row_ids = (fam.row_ids.astype(np.int64).copy()
                     if fam.row_ids is not None
                     else np.full(n, -1, dtype=np.int64))
-    return StripedFamily(fam.phi, fam.ks, dev["cols"], dev["freq"],
-                         dev["entry_key"], dev["valid"], dev["unit"],
-                         dev["strat"], dev["freq_table"],
+    return StripedFamily(fam.phi, fam.ks, dev["cols"], dev["valid"],
+                         dev["unit"], dev["strat"], dev["freq_table"],
                          n, fam.table_rows, n_shards,
                          slot_row_ids=slot_row_ids, n_ghosts=0)
 
@@ -270,9 +333,11 @@ def _pad_pow2(a: np.ndarray, d: int) -> np.ndarray:
 @jax.jit
 def _scatter_refresh(cols, unit, strat, valid, payload):
     """One fused device program for an incremental restripe: scatter the
-    (padded) delta rows into the block and re-derive freq/entry_key from the
-    updated frequency table. Module-level jit + power-of-two delta padding
-    ⇒ compiled once per (shape class, delta pad class), reused by every
+    (padded) delta rows into the block. With the memory-lean layout there is
+    nothing to re-derive — every scan computes freq/entry_key from
+    (unit, strat) and the shipped frequency table — so the refresh is JUST
+    the delta scatter. Module-level jit + power-of-two delta padding ⇒
+    compiled once per (shape class, delta pad class), reused by every
     subsequent append epoch."""
     s_idx, l_idx = payload["s"], payload["l"]
 
@@ -283,35 +348,25 @@ def _scatter_refresh(cols, unit, strat, valid, payload):
     unit = scatter(unit, payload["unit"])
     strat = scatter(strat, payload["strat"])
     valid = valid.at[s_idx, l_idx].set(True)
-    freq_table = payload["freq_table"]
-    freq = freq_table[strat]
-    entry_key = unit * freq          # padding keeps unit=+inf -> ek=+inf
-    return cols, unit, strat, valid, freq_table, freq, entry_key
-
-
-@jax.jit
-def _refresh_only(cols, unit, strat, valid, freq_table):
-    """Zero surviving delta rows: only the frequency table changed (the
-    rescale may still ghost existing rows)."""
-    freq = freq_table[strat]
-    return cols, unit, strat, valid, freq_table, freq, unit * freq
+    return cols, unit, strat, valid, payload["freq_table"]
 
 
 def stripe_append(striped: StripedFamily, fam: SampleFamily,
                   block) -> StripedFamily | None:
     """Incremental restripe: scatter an append's DeltaBlock into the striped
-    block's padding and re-derive freq/entry_key on device.
+    block's padding.
 
     The only host→device traffic is ONE device_put of the delta payload
-    (d rows + the refreshed per-stratum frequency table); existing rows'
-    freq/entry_key are recomputed on device from the stored (unit, stratum)
-    primitives, which also turns rows the rescale pushed past K_1 into
-    self-excluding ghosts (entry_key >= K_1 fails every prefix test).
-    The delta is padded to a power-of-two row count by REPEATING its last
-    row (duplicate writes of identical values — idempotent), so the jitted
-    scatter program is shared across epochs. Returns None when the delta
-    outgrows the padded capacity — the caller falls back to a full
-    (compacting) restripe, which also resets the shape class.
+    (d rows + the refreshed per-stratum frequency table); freq/entry_key are
+    never materialized — scans derive them from the stored (unit, stratum)
+    primitives against the NEW table, which also turns rows the rescale
+    pushed past K_1 into self-excluding ghosts (entry_key >= K_1 fails every
+    prefix test). The delta is padded to a power-of-two row count by
+    REPEATING its last row (duplicate writes of identical values —
+    idempotent), so the jitted scatter program is shared across epochs.
+    Returns None when the delta outgrows the padded capacity OR overflows a
+    column's narrow storage dtype — the caller falls back to a full
+    restripe, which re-picks dtypes and resets the shape class.
     """
     d = block.n_rows
     start = striped.n_rows
@@ -320,9 +375,18 @@ def stripe_append(striped: StripedFamily, fam: SampleFamily,
         return None
     freq_table = _padded_freq_table(block.freq_table)
     if d == 0:
-        out = _refresh_only(striped.columns, striped.unit, striped.strat,
-                            striped.valid, jax.device_put(freq_table))
+        cols, unit, strat, valid = (striped.columns, striped.unit,
+                                    striped.strat, striped.valid)
+        ftab = jax.device_put(freq_table)
     else:
+        # Narrow-dtype overflow: a delta value (or new stratum id) outside
+        # the stored int8/int16 range cannot be scattered losslessly.
+        if not _fits_dtype(block.strata, striped.strat.dtype):
+            return None
+        for c, v in block.columns.items():
+            if not _fits_dtype(v, striped.columns[c].dtype):
+                return None
+
         def pad(a):
             return _pad_pow2(a, d)
 
@@ -335,15 +399,14 @@ def stripe_append(striped: StripedFamily, fam: SampleFamily,
             "strat": pad(block.strata.astype(np.int32)),
             "freq_table": freq_table,
         }
-        out = _scatter_refresh(striped.columns, striped.unit, striped.strat,
-                               striped.valid, jax.device_put(payload))
-    cols, unit, strat, valid, freq_table, freq, entry_key = out
+        cols, unit, strat, valid, ftab = _scatter_refresh(
+            striped.columns, striped.unit, striped.strat, striped.valid,
+            jax.device_put(payload))
     old_ids = (striped.slot_row_ids if striped.slot_row_ids is not None
                else np.full(start, -1, dtype=np.int64))
     new_ids = (block.row_ids.astype(np.int64) if block.row_ids is not None
                else np.full(d, -1, dtype=np.int64))
-    return StripedFamily(fam.phi, fam.ks, cols, freq, entry_key, valid,
-                         unit, strat, freq_table,
+    return StripedFamily(fam.phi, fam.ks, cols, valid, unit, strat, ftab,
                          start + d, fam.table_rows, s_count,
                          slot_row_ids=np.concatenate([old_ids, new_ids]),
                          # rows the rescale pushed past K₁ stay in the block
@@ -352,25 +415,23 @@ def stripe_append(striped: StripedFamily, fam: SampleFamily,
 
 
 @jax.jit
-def _scatter_ghost(unit, entry_key, valid, s_idx, l_idx):
+def _scatter_ghost(unit, valid, s_idx, l_idx):
     """One fused device program for a tombstone pass: turn the dead rows'
-    slots into self-excluding ghosts. unit := +inf keeps them ghosted
-    through any later _scatter_refresh (ek is re-derived as unit·freq);
-    entry_key := +inf fails every prefix test immediately; valid := False
-    covers the quantile/ref paths that mask on validity. Module-level jit +
-    power-of-two index padding ⇒ compiled once per (shape class, pad class),
-    like the append scatter."""
-    inf = jnp.float32(jnp.inf)
-    unit = unit.at[s_idx, l_idx].set(inf)
-    entry_key = entry_key.at[s_idx, l_idx].set(inf)
+    slots into self-excluding ghosts. unit := +inf makes every derived
+    entry_key = unit·freq = +inf, failing every prefix test (there is no
+    stored entry_key to poke anymore); valid := False covers the quantile/
+    ref paths and fault-shard masks. Module-level jit + power-of-two index
+    padding ⇒ compiled once per (shape class, pad class), like the append
+    scatter."""
+    unit = unit.at[s_idx, l_idx].set(jnp.float32(jnp.inf))
     valid = valid.at[s_idx, l_idx].set(False)
-    return unit, entry_key, valid
+    return unit, valid
 
 
 def stripe_tombstone(striped: StripedFamily, dead_row_ids: np.ndarray,
                      table_rows: int | None = None) -> StripedFamily:
     """Ghost the slots of tombstoned sampled rows — the device half of a
-    delete. Ships ONLY a bitmask scatter (two f32 + one bool scatter at the
+    delete. Ships ONLY a bitmask scatter (one f32 + one bool scatter at the
     dead slots): no column rewrite, no freq-table refresh, no re-keying —
     inclusion frequencies are untouched by deletes (sampling layer docs) —
     and the block keeps its shape class, so every AOT-compiled program stays
@@ -391,13 +452,12 @@ def stripe_tombstone(striped: StripedFamily, dead_row_ids: np.ndarray,
     slots_p = _pad_pow2(slots, d)
     s_idx = (slots_p % striped.n_shards).astype(np.int32)
     l_idx = (slots_p // striped.n_shards).astype(np.int32)
-    unit, entry_key, valid = _scatter_ghost(
-        striped.unit, striped.entry_key, striped.valid,
-        *jax.device_put((s_idx, l_idx)))
+    unit, valid = _scatter_ghost(striped.unit, striped.valid,
+                                 *jax.device_put((s_idx, l_idx)))
     new_ids = ids.copy()
     new_ids[slots] = -1
     return dataclasses.replace(
-        striped, unit=unit, entry_key=entry_key, valid=valid,
+        striped, unit=unit, valid=valid,
         slot_row_ids=new_ids, n_ghosts=striped.n_ghosts + d,
         table_rows=table_rows)
 
@@ -419,32 +479,54 @@ def remap_slot_row_ids(striped: StripedFamily,
     return dataclasses.replace(striped, slot_row_ids=new_ids)
 
 
+def scan_args(striped: StripedFamily) -> tuple:
+    """The positional tail every compiled scan program takes — the primitive
+    memory-lean layout (columns, unit, strat, freq_table, valid). One
+    definition so engine call sites and tests cannot drift."""
+    return (striped.columns, striped.unit, striped.strat,
+            striped.freq_table, striped.valid)
+
+
+def derive_ht(unit: jax.Array, strat: jax.Array, freq_table: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """(freq, entry_key) derived from the stored sampling primitives —
+    the jnp mirror of the kernels' in-VMEM derivation. Bit-identical to the
+    old materialized arrays: the same f32 gather + multiply that
+    _scatter_refresh used to run once per epoch, now per scan."""
+    freq = freq_table[strat.astype(jnp.int32)]
+    return freq, unit * freq
+
+
 def run_query_striped(striped: StripedFamily, bound_pred, value_col: str | None,
                       group_col: str | None, n_groups: int, k: float,
                       mesh: Mesh | None = None, data_axes: tuple[str, ...] = ("data",),
                       use_pallas: bool = False) -> est_lib.GroupedMoments:
     """Un-jitted execution (tests / one-off). Production path: make_query_fn."""
 
-    def shard_fn(cols, freq, ek, valid):
+    def shard_fn(cols, unit, strat, ftab, valid):
+        freq, ek = derive_ht(unit, strat, ftab)
         prefix = valid & (ek < k)
         return scan_moments(cols, freq, bound_pred, value_col, group_col,
                             n_groups, k, prefix, use_pallas=use_pallas)
 
     if mesh is None:
-        mom = jax.vmap(shard_fn)(striped.columns, striped.freq,
-                                 striped.entry_key, striped.valid)
+        mom = jax.vmap(lambda c, u, s, v: shard_fn(
+            c, u, s, striped.freq_table, v)
+        )(striped.columns, striped.unit, striped.strat, striped.valid)
         return jax.tree.map(lambda x: x.sum(axis=0), mom)
 
     pspec = P(data_axes)
     fn = _shard_map(
-        lambda c, f, e, v: _merge_psum(
-            jax.tree.map(lambda x: x[0], jax.vmap(shard_fn)(c, f, e, v)),
+        lambda c, u, s, ft, v: _merge_psum(
+            jax.tree.map(lambda x: x[0],
+                         jax.vmap(lambda cc, uu, ss, vv: shard_fn(
+                             cc, uu, ss, ft, vv))(c, u, s, v)),
             data_axes),
         mesh=mesh,
-        in_specs=(pspec, pspec, pspec, pspec),
+        in_specs=(pspec, pspec, pspec, P(), pspec),
         out_specs=P(),
     )
-    return fn(striped.columns, striped.freq, striped.entry_key, striped.valid)
+    return fn(*scan_args(striped))
 
 
 def pred_structure(bound: tuple[tuple[BoundAtom, ...], ...]):
@@ -492,52 +574,83 @@ def eval_pred_flat(struct, cols: dict[str, jax.Array],
     return disj
 
 
+def dedup_atom_slots(atoms) -> tuple[tuple[str, ...], tuple[int, ...]]:
+    """Unique atom column names + per-atom slot mapping: the kernel streams
+    each column ONCE even when the template compares it several times."""
+    names: list[str] = []
+    slots: list[int] = []
+    for col, _ in atoms:
+        if col not in names:
+            names.append(col)
+        slots.append(names.index(col))
+    return tuple(names), tuple(slots)
+
+
 def make_query_fn(struct, value_col: str | None,
                   group_col: str | None, n_groups: int,
                   mesh: Mesh | None = None,
                   data_axes: tuple[str, ...] = ("data",),
                   use_pallas: bool = False):
     """Compile the fused query program once per (family × template).
-    Returns jitted fn(k, pred_vals, cols, freq, entry_key, valid) ->
-    GroupedMoments. k and the predicate constants are traced, so
-    re-instantiations don't retrace — and the striped block itself is a
-    TRACED ARGUMENT rather than a captured constant, so an incremental
-    append that keeps the padded shape class (StripedFamily.shape_class)
-    reuses the same AOT-compiled program on the updated arrays."""
+    Returns jitted fn(k, pred_vals, cols, unit, strat, freq_table, valid) ->
+    GroupedMoments over the primitive memory-lean layout (scan_args order;
+    freq/entry_key are derived in-scan). k and the predicate constants are
+    traced, so re-instantiations don't retrace — and the striped block
+    itself is a TRACED ARGUMENT rather than a captured constant, so an
+    incremental append that keeps the padded shape class
+    (StripedFamily.shape_class) reuses the same AOT-compiled program on the
+    updated arrays. The pallas path runs the fused memory-lean kernel as a
+    Q=1 batch (narrow columns streamed as stored, HT state derived in
+    VMEM)."""
+    atoms = flat_atoms(struct)
+    ops_struct = tuple(tuple(op for _, op in conj) for conj in struct)
+    if use_pallas:
+        from repro.kernels.agg_scan import CONST_LANES
+        if len(atoms) + 1 > CONST_LANES:
+            use_pallas = False
+    acol_names, atom_slots = dedup_atom_slots(atoms)
 
-    def shard_fn(k, pred_vals, cols, freq, ek, valid):
-        mask = eval_pred(struct, cols, pred_vals) & valid & (ek < k)
-        rates = jnp.minimum(1.0, k / freq)
+    def shard_fn(k, pred_vals, cols, unit, strat, ftab, valid):
         values = (cols[value_col].astype(jnp.float32)
-                  if value_col is not None else jnp.ones_like(freq))
+                  if value_col is not None else jnp.ones_like(unit))
         gcodes = (cols[group_col].astype(jnp.int32)
-                  if group_col is not None else jnp.zeros(freq.shape, jnp.int32))
+                  if group_col is not None else jnp.zeros(unit.shape, jnp.int32))
         if use_pallas:
             from repro.kernels import ops as kops
-            return kops.agg_scan(values, rates, mask, gcodes, n_groups)
+            acols = tuple(cols[c] for c in acol_names)
+            consts = (jnp.stack(list(flatten_pred_vals(pred_vals)))
+                      if atoms else jnp.zeros((0,), jnp.float32))
+            mom = kops.agg_scan_fused(
+                values, unit, strat, ftab, valid, acols, gcodes,
+                jnp.asarray(k, jnp.float32)[None], consts[None, :],
+                ops_struct, atom_slots, n_groups)
+            return jax.tree.map(lambda x: x[0], mom)
+        freq, ek = derive_ht(unit, strat, ftab)
+        mask = eval_pred(struct, cols, pred_vals) & valid & (ek < k)
+        rates = jnp.minimum(1.0, k / freq)
         return est_lib.grouped_moments(values, rates, mask, gcodes, n_groups)
 
     if mesh is None:
-        def fn(k, pred_vals, cols, freq, entry_key, valid):
-            mom = jax.vmap(lambda c, f, e, v: shard_fn(k, pred_vals, c, f, e, v)
-                           )(cols, freq, entry_key, valid)
+        def fn(k, pred_vals, cols, unit, strat, freq_table, valid):
+            mom = jax.vmap(lambda c, u, s, v: shard_fn(
+                k, pred_vals, c, u, s, freq_table, v))(cols, unit, strat, valid)
             return jax.tree.map(lambda x: x.sum(axis=0), mom)
         return jax.jit(fn)
 
     pspec = P(data_axes)
 
-    def fn(k, pred_vals, cols, freq, entry_key, valid):
+    def fn(k, pred_vals, cols, unit, strat, freq_table, valid):
         inner = _shard_map(
-            lambda c, f, e, v: _merge_psum(
+            lambda c, u, s, ft, v: _merge_psum(
                 jax.tree.map(lambda x: x[0],
-                             jax.vmap(lambda cc, ff, ee, vv: shard_fn(
-                                 k, pred_vals, cc, ff, ee, vv))(c, f, e, v)),
+                             jax.vmap(lambda cc, uu, ss, vv: shard_fn(
+                                 k, pred_vals, cc, uu, ss, ft, vv))(c, u, s, v)),
                 data_axes),
             mesh=mesh,
-            in_specs=(pspec, pspec, pspec, pspec),
+            in_specs=(pspec, pspec, pspec, P(), pspec),
             out_specs=P(),
         )
-        return inner(cols, freq, entry_key, valid)
+        return inner(cols, unit, strat, freq_table, valid)
     return jax.jit(fn)
 
 
@@ -552,15 +665,17 @@ def make_batched_query_fn(struct,
                           use_pallas: bool = False):
     """Compile ONE fused multi-query program per (family × template).
 
-    Returns jitted fn(ks, pred_consts, cols, freq, entry_key, valid) ->
-    GroupedMoments with leading batch axis: ks is f32[Q] (per-query
+    Returns jitted fn(ks, pred_consts, cols, unit, strat, freq_table, valid)
+    -> GroupedMoments with leading batch axis: ks is f32[Q] (per-query
     resolution caps), pred_consts is f32[Q, A] (per-query predicate
     constants in flat_atoms order). Every leaf of the result is
     [Q, n_groups]. The family prefix streams from HBM once for the whole
     batch; per-query work is VPU/MXU-only. On a mesh the per-shard partials
     for ALL Q queries merge with a single psum. As with make_query_fn, the
     striped block is a traced argument so appends that preserve the padded
-    shape class keep compiled programs valid.
+    shape class keep compiled programs valid. The pallas path is the fused
+    memory-lean kernel: narrow columns stream as stored, the freq table is
+    VMEM-resident, HT state is derived per block.
     """
     atoms = flat_atoms(struct)
     ops_struct = tuple(tuple(op for _, op in conj) for conj in struct)
@@ -571,20 +686,20 @@ def make_batched_query_fn(struct,
             # CONST_LANES-wide qconst block; wider templates fall back to
             # the jnp path rather than failing at trace time.
             use_pallas = False
+    acol_names, atom_slots = dedup_atom_slots(atoms)
 
-    def shard_fn(ks, pred_consts, cols, freq, ek, valid):
+    def shard_fn(ks, pred_consts, cols, unit, strat, ftab, valid):
         values = (cols[value_col].astype(jnp.float32)
-                  if value_col is not None else jnp.ones_like(freq))
+                  if value_col is not None else jnp.ones_like(unit))
         gcodes = (cols[group_col].astype(jnp.int32)
-                  if group_col is not None else jnp.zeros(freq.shape, jnp.int32))
+                  if group_col is not None else jnp.zeros(unit.shape, jnp.int32))
         if use_pallas:
             from repro.kernels import ops as kops
-            acols = (jnp.stack([cols[c].astype(jnp.float32) for c, _ in atoms])
-                     if atoms else jnp.zeros((0,) + freq.shape, jnp.float32))
-            # Padding rows carry entry_key=+inf (stripe_family), failing the
-            # kernel's per-query prefix test — `valid` is implied.
-            return kops.agg_scan_batched(values, freq, ek, acols, gcodes,
-                                         ks, pred_consts, ops_struct, n_groups)
+            acols = tuple(cols[c] for c in acol_names)
+            return kops.agg_scan_fused(values, unit, strat, ftab, valid,
+                                       acols, gcodes, ks, pred_consts,
+                                       ops_struct, atom_slots, n_groups)
+        freq, ek = derive_ht(unit, strat, ftab)
 
         def one(k, consts):
             mask = eval_pred_flat(struct, cols, consts) & valid & (ek < k)
@@ -594,30 +709,30 @@ def make_batched_query_fn(struct,
         return jax.vmap(one)(ks, pred_consts)
 
     if mesh is None:
-        def fn(ks, pred_consts, cols, freq, entry_key, valid):
-            mom = jax.vmap(lambda c, f, e, v: shard_fn(ks, pred_consts,
-                                                       c, f, e, v)
-                           )(cols, freq, entry_key, valid)
+        def fn(ks, pred_consts, cols, unit, strat, freq_table, valid):
+            mom = jax.vmap(lambda c, u, s, v: shard_fn(
+                ks, pred_consts, c, u, s, freq_table, v)
+            )(cols, unit, strat, valid)
             return jax.tree.map(lambda x: x.sum(axis=0), mom)
         return jax.jit(fn)
 
     pspec = P(data_axes)
 
-    def fn(ks, pred_consts, cols, freq, entry_key, valid):
-        def per_shard(c, f, e, v):
+    def fn(ks, pred_consts, cols, unit, strat, freq_table, valid):
+        def per_shard(c, u, s, ft, v):
             mom = jax.tree.map(
                 lambda x: x[0],
-                jax.vmap(lambda cc, ff, ee, vv: shard_fn(
-                    ks, pred_consts, cc, ff, ee, vv))(c, f, e, v))
+                jax.vmap(lambda cc, uu, ss, vv: shard_fn(
+                    ks, pred_consts, cc, uu, ss, ft, vv))(c, u, s, v))
             leaves, treedef = jax.tree.flatten(mom)
             # ONE collective for the whole batch: psum the stacked [7, Q, G]
             # statistics tensor instead of seven per-leaf reductions.
             merged = jax.lax.psum(jnp.stack(leaves), data_axes)
             return jax.tree.unflatten(treedef, list(merged))
         inner = _shard_map(per_shard, mesh=mesh,
-                           in_specs=(pspec, pspec, pspec, pspec),
+                           in_specs=(pspec, pspec, pspec, P(), pspec),
                            out_specs=P())
-        return inner(cols, freq, entry_key, valid)
+        return inner(cols, unit, strat, freq_table, valid)
     return jax.jit(fn)
 
 
@@ -763,6 +878,34 @@ def run_sharded_scan(call, striped: StripedFamily, *, n_logical: int,
 # Grouped weighted quantiles (histogram method, Table 2 variance)
 # ---------------------------------------------------------------------------
 
+def hist_to_quantile(hist: jax.Array, lo, hi, q):
+    """(quantile_value[G], density[G]) from per-group histograms over the
+    fixed range [lo, hi]. hist is f32[G, n_bins] — the transpose of the
+    fused quantile kernel's output, or grouped_quantile's own histogram.
+
+    Groups with ZERO selected mass (no row passed the predicate/prefix)
+    return a well-defined (0, 0) instead of the NaN/garbage the clamped
+    total division used to produce."""
+    n_bins = hist.shape[1]
+    lo = jnp.asarray(lo, jnp.float32)
+    span = jnp.maximum(jnp.asarray(hi, jnp.float32) - lo, 1e-12)
+    cum = jnp.cumsum(hist, axis=1)
+    mass = cum[:, -1]
+    total = jnp.maximum(cum[:, -1:], 1e-12)
+    cdf = cum / total
+    # first bin where cdf >= q
+    idx = jnp.argmax(cdf >= q, axis=1)
+    bin_w = span / n_bins
+    left_edge = lo + idx * bin_w
+    prev_cdf = jnp.where(idx > 0, jnp.take_along_axis(cdf, jnp.maximum(idx - 1, 0)[:, None], 1)[:, 0], 0.0)
+    bin_mass = jnp.take_along_axis(cdf, idx[:, None], 1)[:, 0] - prev_cdf
+    frac = jnp.where(bin_mass > 1e-12, (q - prev_cdf) / jnp.maximum(bin_mass, 1e-12), 0.5)
+    qval = left_edge + frac * bin_w
+    density = jnp.take_along_axis(hist, idx[:, None], 1)[:, 0] / (total[:, 0] * bin_w)
+    empty = mass <= 0.0
+    return jnp.where(empty, 0.0, qval), jnp.where(empty, 0.0, density)
+
+
 def grouped_quantile(values: jax.Array, weights: jax.Array, gcodes: jax.Array,
                      n_groups: int, q: float, n_bins: int = 256,
                      lo: float | None = None, hi: float | None = None):
@@ -771,45 +914,82 @@ def grouped_quantile(values: jax.Array, weights: jax.Array, gcodes: jax.Array,
     v = values.astype(jnp.float32)
     lo_ = jnp.asarray(lo if lo is not None else jnp.min(jnp.where(weights > 0, v, jnp.inf)))
     hi_ = jnp.asarray(hi if hi is not None else jnp.max(jnp.where(weights > 0, v, -jnp.inf)))
+    # Empty selection: the masked min/max above are ±inf, which would turn
+    # every bin index into NaN. Force a degenerate-but-finite range;
+    # hist_to_quantile then reports (0, 0) for the all-empty groups.
+    lo_ = jnp.where(jnp.isfinite(lo_), lo_, 0.0)
+    hi_ = jnp.where(jnp.isfinite(hi_), hi_, 0.0)
     span = jnp.maximum(hi_ - lo_, 1e-12)
     bins = jnp.clip(((v - lo_) / span * n_bins).astype(jnp.int32), 0, n_bins - 1)
     flat = gcodes.astype(jnp.int32) * n_bins + bins
     hist = jax.ops.segment_sum(weights, flat, num_segments=n_groups * n_bins)
-    hist = hist.reshape(n_groups, n_bins)
-    cum = jnp.cumsum(hist, axis=1)
-    total = jnp.maximum(cum[:, -1:], 1e-12)
-    cdf = cum / total
-    # first bin where cdf >= q
-    idx = jnp.argmax(cdf >= q, axis=1)
-    bin_w = span / n_bins
-    left_edge = lo_ + idx * bin_w
-    prev_cdf = jnp.where(idx > 0, jnp.take_along_axis(cdf, jnp.maximum(idx - 1, 0)[:, None], 1)[:, 0], 0.0)
-    bin_mass = jnp.take_along_axis(cdf, idx[:, None], 1)[:, 0] - prev_cdf
-    frac = jnp.where(bin_mass > 1e-12, (q - prev_cdf) / jnp.maximum(bin_mass, 1e-12), 0.5)
-    qval = left_edge + frac * bin_w
-    density = jnp.take_along_axis(hist, idx[:, None], 1)[:, 0] / (total[:, 0] * bin_w)
-    return qval, density
+    return hist_to_quantile(hist.reshape(n_groups, n_bins), lo_, hi_, q)
 
 
 def make_quantile_fn(struct, value_col: str, group_col: str | None,
-                     n_groups: int):
-    """Jitted grouped-quantile pass over a STRIPED block (flattened).
+                     n_groups: int, mesh: Mesh | None = None,
+                     data_axes: tuple[str, ...] = ("data",),
+                     use_pallas: bool = False,
+                     n_bins: int = 256):
+    """ONE-PASS quantile program over a STRIPED block.
 
-    Histogram results are order-invariant, so running over the padded
-    striped layout (masking padding/ghosts through zero weight) matches the
-    old sorted-family pass — while inheriting the striped shape class, so
-    appends that fit existing padding reuse the compiled program. Returns
-    fn(k, pred_vals, level, cols, freq, entry_key, valid) ->
-    (quantile_value[G], density[G])."""
+    Returns jitted fn(k, pred_vals, level, lo, hi, cols, unit, strat,
+    freq_table, valid) -> (GroupedMoments, quantile_value[G], density[G]):
+    the grouped sufficient statistics AND the histogram quantile come out of
+    a single streaming pass, so a QUANTILE answer no longer pays a second
+    full-column read after the moments scan.
 
-    def fn(k, pred_vals, level, cols, freq, entry_key, valid):
+    The pallas path runs the fused quantile kernel (moments + bins×groups
+    histogram in one VMEM-resident pass) over the family-global [lo, hi]
+    range the engine caches per (family, value column). The jnp path keeps
+    the original data-dependent range (lo/hi args unused) so its histogram
+    numerics are unchanged from the pre-fusion pass; histogram results are
+    order-invariant over the padded striped layout (padding/ghosts carry
+    zero weight). Both inherit the striped shape class, so appends that fit
+    existing padding reuse the compiled program."""
+    atoms = flat_atoms(struct)
+    ops_struct = tuple(tuple(op for _, op in conj) for conj in struct)
+    if use_pallas:
+        from repro.kernels.agg_scan import CONST_LANES
+        if len(atoms) + 3 > CONST_LANES or mesh is not None:
+            # qconst lanes 0..2 hold (k, lo, hi); wider templates — and the
+            # mesh path, which psums jnp partials — fall back to jnp.
+            use_pallas = False
+    acol_names, atom_slots = dedup_atom_slots(atoms)
+
+    if use_pallas:
+        def fn(k, pred_vals, level, lo, hi, cols, unit, strat, freq_table,
+               valid):
+            from repro.kernels import ops as kops
+            consts = (jnp.stack(list(flatten_pred_vals(pred_vals)))
+                      if atoms else jnp.zeros((0,), jnp.float32))
+
+            def shard(c, u, s, v):
+                values = c[value_col].astype(jnp.float32)
+                gcodes = (c[group_col].astype(jnp.int32) if group_col
+                          else jnp.zeros(u.shape, jnp.int32))
+                acols = tuple(c[a] for a in acol_names)
+                return kops.quantile_scan(values, u, s, freq_table, v,
+                                          acols, gcodes, k, lo, hi, consts,
+                                          ops_struct, atom_slots, n_groups,
+                                          n_bins)
+            mom, hist = jax.vmap(shard)(cols, unit, strat, valid)
+            mom = jax.tree.map(lambda x: x.sum(axis=0), mom)
+            qval, dens = hist_to_quantile(hist.sum(axis=0).T, lo, hi, level)
+            return mom, qval, dens
+        return jax.jit(fn)
+
+    def fn(k, pred_vals, level, lo, hi, cols, unit, strat, freq_table, valid):
         flat = {c: v.reshape(-1) for c, v in cols.items()}
-        fqf = freq.reshape(-1)
-        ekf = entry_key.reshape(-1)
+        fqf, ekf = derive_ht(unit.reshape(-1), strat.reshape(-1), freq_table)
         mask = eval_pred(struct, flat, pred_vals) & valid.reshape(-1) \
             & (ekf < k)
-        w = mask.astype(jnp.float32) / jnp.minimum(1.0, k / fqf)
+        rates = jnp.minimum(1.0, k / fqf)
+        w = mask.astype(jnp.float32) / rates
         g = (flat[group_col].astype(jnp.int32) if group_col
              else jnp.zeros(ekf.shape, jnp.int32))
-        return grouped_quantile(flat[value_col], w, g, n_groups, level)
+        values = flat[value_col].astype(jnp.float32)
+        mom = est_lib.grouped_moments(values, rates, mask, g, n_groups)
+        qval, dens = grouped_quantile(values, w, g, n_groups, level)
+        return mom, qval, dens
     return jax.jit(fn)

@@ -76,6 +76,48 @@ def agg_scan_batched_ref(values: jax.Array, freq: jax.Array,
                          pred_consts.astype(jnp.float32))
 
 
+def agg_scan_fused_ref(values: jax.Array, unit: jax.Array, strat: jax.Array,
+                       freq_table: jax.Array, valid: jax.Array,
+                       atom_cols, group_codes: jax.Array, ks: jax.Array,
+                       pred_consts: jax.Array, ops_struct,
+                       atom_slots=None, n_groups: int = 1) -> jax.Array:
+    """Oracle for the memory-lean fused layout: derive the HT state from the
+    primitives exactly as the kernel does — freq = freq_table[strat],
+    entry_key = unit·freq, with invalid slots forced out of every prefix —
+    then reduce via agg_scan_batched_ref. `atom_cols` is a tuple of
+    deduplicated narrow-dtype columns; `atom_slots[i]` names the column of
+    flattened template atom i. Returns f32[Q, 7, n_groups]."""
+    n_atoms = sum(len(c) for c in ops_struct)
+    if atom_slots is None:
+        atom_slots = tuple(range(n_atoms))
+    freq = freq_table.astype(jnp.float32)[strat.astype(jnp.int32)]
+    ek = jnp.where(valid, unit.astype(jnp.float32) * freq, jnp.inf)
+    if n_atoms:
+        atoms = jnp.stack([atom_cols[s].astype(jnp.float32)
+                           for s in atom_slots])
+    else:
+        atoms = jnp.zeros((0, values.shape[0]), jnp.float32)
+    return agg_scan_batched_ref(values, freq, ek, atoms, group_codes, ks,
+                                pred_consts, ops_struct, n_groups)
+
+
+def quantile_hist_ref(values: jax.Array, weights: jax.Array,
+                      group_codes: jax.Array, n_groups: int, lo, hi,
+                      n_bins: int) -> jax.Array:
+    """Oracle for the fused quantile kernel's histogram output: weighted
+    per-group value histogram over the FIXED [lo, hi] range, bins clipped
+    to [0, n_bins). Returns f32[n_groups, n_bins] (kernel output is the
+    transpose)."""
+    v = values.astype(jnp.float32)
+    span = jnp.maximum(jnp.asarray(hi, jnp.float32) - lo, 1e-12)
+    bins = jnp.clip((v - lo) / span * n_bins, 0.0, n_bins - 1
+                    ).astype(jnp.int32)
+    flat = group_codes.astype(jnp.int32) * n_bins + bins
+    return jax.ops.segment_sum(weights.astype(jnp.float32), flat,
+                               num_segments=n_groups * n_bins
+                               ).reshape(n_groups, n_bins)
+
+
 def weighted_sum_ref(values: jax.Array, weights: jax.Array,
                      mask: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Masked HT-weighted reductions: (Σ w·m, Σ w·m·x, Σ w·m·x²), scalars."""

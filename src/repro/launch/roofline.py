@@ -432,6 +432,29 @@ def analytic_memory_bytes(cfg, shape_kind: str, seq_len: int,
     return param_traffic + cache_rw + acts
 
 
+def scan_bytes_per_row(streamed_dtypes) -> int:
+    """Bytes/row a sample-family scan streams from HBM: the sum of the
+    per-row itemsizes of its streamed blocks. Dtype-exact and
+    machine-independent — this is the number `benchmarks/kernel_perf.py`
+    reports and `check_regression.py` gates. Constant blocks (the
+    VMEM-resident freq table, qconst) amortize to ~0 bytes/row and are
+    excluded; pass ONLY the per-row streams.
+
+    Fused memory-lean layout on a 1-atom dict-encoded template:
+    f32 values + f32 unit + int8 strat + bool valid + int8 atom + int8
+    codes = 12 B/row, vs the pre-fusion batched layout's 20 (f32 values/
+    freq/entry_key/atom + int32 codes)."""
+    return int(sum(np.dtype(d).itemsize for d in streamed_dtypes))
+
+
+def scan_hbm_seconds(n_rows: float, bytes_per_row: float,
+                     chips: int = 1) -> float:
+    """Bandwidth-bound scan time projection: the roofline memory term for a
+    family-prefix scan (the scan kernel does O(1) FLOPs/byte, so HBM is the
+    binding term on TPU; PAPER §6's sub-2s interactivity bar)."""
+    return n_rows * bytes_per_row / (chips * HBM_BW)
+
+
 def _cache_bytes(cfg, b_local: float, seq_len: int, model: int) -> float:
     """KV/state cache bytes per device (bf16), honoring seq/model sharding."""
     total = 0.0

@@ -100,7 +100,7 @@ def test_make_batched_query_fn_matches_sequential(use_pallas):
                                          n_groups, use_pallas=use_pallas)
     sfn = exec_lib.make_query_fn(struct, "SessionTime", "OS",
                                  n_groups, use_pallas=use_pallas)
-    args = (striped.columns, striped.freq, striped.entry_key, striped.valid)
+    args = exec_lib.scan_args(striped)
     ks = jnp.asarray([400.0, 200.0, 100.0], jnp.float32)
     consts = jnp.asarray([[0.0], [1.0], [2.0]], jnp.float32)
     mom = bfn(ks, consts, *args)

@@ -438,7 +438,14 @@ def test_dispatcher_death_fails_queued_requests_from_other_threads(db):
     with arm(FaultPlan([FaultSpec(site="scheduler.dispatch", kind="kill",
                                   after=1)], seed=0)):
         threads = [threading.Thread(target=session) for _ in range(3)]
-        for t in threads:
+        # Stagger: let the dispatcher collect a SOLO first batch before the
+        # rest submit, so the later requests are guaranteed to be queued (or
+        # admitted post-death) when the second dispatch iteration is killed —
+        # simultaneous starts can coalesce all three into batch one and the
+        # kill site is then never reached inside the armed window.
+        threads[0].start()
+        time.sleep(0.2)
+        for t in threads[1:]:
             t.start()
         for t in threads:
             t.join(timeout=60)

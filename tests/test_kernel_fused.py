@@ -1,0 +1,304 @@
+"""Fused memory-lean scan kernel: parity, narrow dtypes, one-pass quantiles.
+
+Interpret-mode sweeps (the repo's substitute for hypothesis, which is not
+installed: seeded parametrized cases) covering the in-kernel HT derivation
+against ref.agg_scan_fused_ref, bit-identity with the pre-fusion batched
+kernel, narrow dtype widths, the 127-atom template limit, padding rows
+(entry_key=+inf), ghost slots, 1-stratum freq tables, the fused quantile
+kernel, the grouped_quantile empty-selection guard, and the engine's
+one-pass QUANTILE execution (observable through its program caches).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AggOp, Atom, BlinkDB, CmpOp, EngineConfig, Predicate,
+                        Query)
+from repro.core import executor as exec_lib
+from repro.core import table as table_lib
+from repro.data import synth
+from repro.kernels import ref
+from repro.kernels.agg_scan import (CONST_LANES, MAX_FUSED_STRATA,
+                                    agg_scan_batched_pallas,
+                                    agg_scan_fused_pallas,
+                                    quantile_scan_pallas)
+
+
+def _fused_case(rng, n, n_groups, q, n_atoms, n_strata=37,
+                strat_dtype=np.int8, atom_dtype=np.int8, ghost_frac=0.0):
+    values = jnp.asarray(rng.normal(5, 2, n).astype(np.float32))
+    unit = jnp.asarray(rng.random(n).astype(np.float32))
+    strat = jnp.asarray(rng.integers(0, n_strata, n).astype(strat_dtype))
+    ftab = jnp.asarray(rng.integers(1, 500, n_strata).astype(np.float32))
+    valid = jnp.asarray(rng.random(n) >= ghost_frac)
+    codes = jnp.asarray(rng.integers(0, n_groups, n).astype(atom_dtype))
+    atoms = tuple(jnp.asarray(rng.integers(0, 8, n).astype(atom_dtype))
+                  for _ in range(n_atoms))
+    ks = jnp.asarray(rng.uniform(20, 400, q).astype(np.float32))
+    consts = jnp.asarray(rng.integers(0, 8, (q, n_atoms)).astype(np.float32))
+    return values, unit, strat, ftab, valid, atoms, codes, ks, consts
+
+
+def _assert_fused_parity(args, ops_struct, n_groups, atom_slots=None, **kw):
+    got = agg_scan_fused_pallas(*args, ops_struct=ops_struct,
+                                atom_slots=atom_slots, n_groups=n_groups,
+                                interpret=True, **kw)
+    want = ref.agg_scan_fused_ref(*args, ops_struct=ops_struct,
+                                  atom_slots=atom_slots, n_groups=n_groups)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-3)
+    return got
+
+
+# ------------------------------------------------------------ kernel parity
+
+@pytest.mark.parametrize("n", [1, 100, 5000])
+@pytest.mark.parametrize("n_groups", [1, 600])
+def test_fused_kernel_shapes(n, n_groups):
+    rng = np.random.default_rng(n * 7 + n_groups)
+    args = _fused_case(rng, n, n_groups, q=5, n_atoms=2)
+    _assert_fused_parity(args, ((CmpOp.EQ,), (CmpOp.GT,)), n_groups)
+
+
+@pytest.mark.parametrize("strat_dtype", [np.int8, np.int16, np.int32])
+@pytest.mark.parametrize("atom_dtype", [np.int8, np.int16, np.int32])
+def test_fused_kernel_narrow_dtype_widths(strat_dtype, atom_dtype):
+    """Stored width must not change results: the kernel widens in VMEM."""
+    rng = np.random.default_rng(11)
+    args = _fused_case(rng, 4096, 12, q=4, n_atoms=2,
+                       strat_dtype=strat_dtype, atom_dtype=atom_dtype)
+    _assert_fused_parity(args, ((CmpOp.EQ, CmpOp.LE),), 12)
+
+
+def test_fused_kernel_ghost_slots():
+    """Tombstoned slots (valid=False) must contribute to no statistic."""
+    rng = np.random.default_rng(12)
+    args = _fused_case(rng, 3000, 8, q=3, n_atoms=1, ghost_frac=0.35)
+    _assert_fused_parity(args, ((CmpOp.GT,),), 8)
+
+
+def test_fused_kernel_all_ghosts_and_padding():
+    """All-invalid input (every row a ghost) + implicit padding rows: the
+    pad fill (unit=+inf) and valid=False must both zero the output."""
+    rng = np.random.default_rng(13)
+    v, u, s, ftab, _, atoms, c, ks, consts = _fused_case(
+        rng, 1000, 4, q=2, n_atoms=1)
+    dead = jnp.zeros(1000, bool)
+    got = agg_scan_fused_pallas(v, u, s, ftab, dead, atoms, c, ks, consts,
+                                ops_struct=((CmpOp.GT,),), n_groups=4,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+def test_fused_kernel_one_stratum():
+    """Degenerate 1-entry freq table (single stratum, strat all zero)."""
+    rng = np.random.default_rng(14)
+    args = _fused_case(rng, 2500, 6, q=3, n_atoms=1, n_strata=1)
+    _assert_fused_parity(args, ((CmpOp.EQ,),), 6)
+
+
+def test_fused_kernel_multichunk_freq_table():
+    """freq table wider than one 128-lane chunk (statically unrolled)."""
+    rng = np.random.default_rng(15)
+    args = _fused_case(rng, 4000, 10, q=3, n_atoms=1, n_strata=300,
+                       strat_dtype=np.int16)
+    _assert_fused_parity(args, ((CmpOp.LE,),), 10)
+
+
+def test_fused_kernel_no_predicate():
+    rng = np.random.default_rng(16)
+    v, u, s, ftab, va, _, c, ks, _ = _fused_case(rng, 3000, 5, q=3, n_atoms=0)
+    args = (v, u, s, ftab, va, (), c, ks, jnp.zeros((3, 0), jnp.float32))
+    _assert_fused_parity(args, (), 5)
+
+
+def test_fused_kernel_atom_slot_dedup():
+    """Two template atoms on ONE streamed column block (slot sharing)."""
+    rng = np.random.default_rng(17)
+    v, u, s, ftab, va, atoms, c, ks, _ = _fused_case(rng, 2000, 4, q=2,
+                                                     n_atoms=1)
+    consts = jnp.asarray(rng.integers(0, 8, (2, 2)).astype(np.float32))
+    args = (v, u, s, ftab, va, atoms, c, ks, consts)
+    _assert_fused_parity(args, ((CmpOp.GE, CmpOp.LE),), 4,
+                         atom_slots=(0, 0))
+
+
+def test_fused_kernel_127_atom_limit():
+    """The qconst layout admits exactly CONST_LANES-1 = 127 atoms."""
+    rng = np.random.default_rng(18)
+    n, n_atoms = 512, CONST_LANES - 1
+    v, u, s, ftab, va, atoms, c, ks, _ = _fused_case(rng, n, 2, q=1,
+                                                     n_atoms=1)
+    consts = jnp.asarray(rng.integers(0, 8, (1, n_atoms)).astype(np.float32))
+    struct = ((CmpOp.GE,) * n_atoms,)
+    args = (v, u, s, ftab, va, atoms, c, ks, consts)
+    _assert_fused_parity(args, struct, 2, atom_slots=(0,) * n_atoms)
+    # one more atom must be rejected, not silently mis-addressed
+    with pytest.raises(ValueError, match="atoms"):
+        agg_scan_fused_pallas(v, u, s, ftab, va, atoms, c, ks,
+                              jnp.zeros((1, n_atoms + 1), jnp.float32),
+                              ops_struct=((CmpOp.GE,) * (n_atoms + 1),),
+                              atom_slots=(0,) * (n_atoms + 1), n_groups=2,
+                              interpret=True)
+
+
+def test_fused_kernel_strata_cap():
+    rng = np.random.default_rng(19)
+    v, u, s, ftab, va, atoms, c, ks, consts = _fused_case(rng, 256, 2, 1, 1)
+    big = jnp.ones(MAX_FUSED_STRATA + 1, jnp.float32)
+    with pytest.raises(ValueError, match="strata"):
+        agg_scan_fused_pallas(v, u, s, big, va, atoms, c, ks, consts,
+                              ops_struct=((CmpOp.EQ,),), n_groups=2,
+                              interpret=True)
+
+
+def test_fused_bit_identical_to_prefusion_kernel():
+    """Acceptance: given the SAME derived freq/entry_key the fused kernel's
+    accumulation is bit-for-bit the pre-fusion batched kernel's — in-kernel
+    derivation changes where freq/entry_key are computed, not a single bit
+    of the reduction."""
+    rng = np.random.default_rng(20)
+    v, u, s, ftab, va, atoms, c, ks, consts = _fused_case(
+        rng, 6000, 24, q=4, n_atoms=2, n_strata=200, strat_dtype=np.int16,
+        ghost_frac=0.1)
+    struct = ((CmpOp.EQ,), (CmpOp.GT,))
+    fused = agg_scan_fused_pallas(v, u, s, ftab, va, atoms, c, ks, consts,
+                                  ops_struct=struct, n_groups=24,
+                                  interpret=True)
+    freq = ftab[s.astype(jnp.int32)]
+    ek = jnp.where(va, u * freq, jnp.inf)
+    old_atoms = jnp.stack([a.astype(jnp.float32) for a in atoms])
+    old = agg_scan_batched_pallas(v, freq, ek, old_atoms, c.astype(jnp.int32),
+                                  ks, consts, ops_struct=struct, n_groups=24,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(old))
+
+
+# -------------------------------------------------------- quantile kernel
+
+def test_quantile_kernel_moments_match_fused_scan():
+    """The one-pass quantile kernel's moment half is bit-identical to the
+    fused scan at the same k (same blocks, same accumulation order)."""
+    rng = np.random.default_rng(30)
+    v, u, s, ftab, va, atoms, c, ks, consts = _fused_case(
+        rng, 5000, 10, q=1, n_atoms=1, ghost_frac=0.2)
+    struct = ((CmpOp.LE,),)
+    lo, hi = float(np.asarray(v).min()), float(np.asarray(v).max())
+    mom, hist = quantile_scan_pallas(
+        v, u, s, ftab, va, atoms, c, ks[0], jnp.float32(lo), jnp.float32(hi),
+        consts[0], ops_struct=struct, n_groups=10, interpret=True)
+    fused = agg_scan_fused_pallas(v, u, s, ftab, va, atoms, c, ks, consts,
+                                  ops_struct=struct, n_groups=10,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(mom), np.asarray(fused[0]))
+    assert hist.shape == (256, 10)
+
+
+@pytest.mark.parametrize("case_seed", [0, 1, 2])
+def test_quantile_kernel_histogram_matches_ref(case_seed):
+    rng = np.random.default_rng(40 + case_seed)
+    n, n_groups = 4000, 7
+    v, u, s, ftab, va, atoms, c, ks, consts = _fused_case(
+        rng, n, n_groups, q=1, n_atoms=1, ghost_frac=0.1)
+    struct = ((CmpOp.LE,),)
+    lo, hi = float(np.asarray(v).min()), float(np.asarray(v).max())
+    mom, hist = quantile_scan_pallas(
+        v, u, s, ftab, va, atoms, c, ks[0], jnp.float32(lo), jnp.float32(hi),
+        consts[0], ops_struct=struct, n_groups=n_groups, interpret=True)
+    # oracle weights: HT rates over the surviving prefix
+    freq = ftab[s.astype(jnp.int32)]
+    ek = jnp.where(va, u * freq, jnp.inf)
+    pred = atoms[0].astype(jnp.float32) <= consts[0, 0]
+    mask = (ek < ks[0]) & pred
+    w = mask / jnp.minimum(1.0, ks[0] / freq)
+    want = ref.quantile_hist_ref(v, w, c.astype(jnp.int32), n_groups,
+                                 lo, hi, 256)
+    np.testing.assert_allclose(np.asarray(hist), np.asarray(want).T,
+                               rtol=2e-5, atol=1e-3)
+    # histogram mass == weighted selection mass (nothing lost to clipping)
+    np.testing.assert_allclose(np.asarray(hist).sum(),
+                               float(jnp.sum(w)), rtol=2e-5, atol=1e-2)
+
+
+def test_quantile_kernel_bins_must_be_lane_aligned():
+    rng = np.random.default_rng(50)
+    v, u, s, ftab, va, atoms, c, ks, consts = _fused_case(rng, 256, 2, 1, 1)
+    with pytest.raises(ValueError, match="128"):
+        quantile_scan_pallas(v, u, s, ftab, va, atoms, c, ks[0],
+                             jnp.float32(0), jnp.float32(1), consts[0],
+                             ops_struct=((CmpOp.LE,),), n_groups=2,
+                             n_bins=100, interpret=True)
+
+
+# --------------------------------------- grouped_quantile empty-selection
+
+def test_grouped_quantile_empty_selection_is_defined():
+    """Regression: with NO selected row, lo/hi were ±inf (NaN bin indices)
+    and all-masked groups divided by the clamped total. Must be (0, 0)."""
+    v = jnp.asarray(np.linspace(0, 10, 64, dtype=np.float32))
+    w = jnp.zeros(64, jnp.float32)
+    g = jnp.asarray(np.arange(64) % 4, dtype=jnp.int32)
+    qv, dens = exec_lib.grouped_quantile(v, w, g, 4, 0.5)
+    np.testing.assert_array_equal(np.asarray(qv), 0.0)
+    np.testing.assert_array_equal(np.asarray(dens), 0.0)
+    assert np.all(np.isfinite(np.asarray(qv)))
+
+
+def test_grouped_quantile_one_empty_group():
+    """A single all-masked group yields (0, 0) without disturbing others."""
+    rng = np.random.default_rng(60)
+    v = jnp.asarray(rng.normal(5, 2, 512).astype(np.float32))
+    g = jnp.asarray((np.arange(512) % 3).astype(np.int32))
+    w = jnp.asarray((np.asarray(g) != 1).astype(np.float32))
+    qv, dens = exec_lib.grouped_quantile(v, w, g, 3, 0.5)
+    qv, dens = np.asarray(qv), np.asarray(dens)
+    assert qv[1] == 0.0 and dens[1] == 0.0
+    for gi in (0, 2):
+        sel = np.sort(np.asarray(v)[np.asarray(g) == gi])
+        assert abs(qv[gi] - np.median(sel)) < (sel.max() - sel.min()) / 16
+
+
+def test_hist_to_quantile_empty_guard():
+    hist = jnp.zeros((3, 256), jnp.float32)
+    qv, dens = exec_lib.hist_to_quantile(hist, 0.0, 1.0, 0.5)
+    np.testing.assert_array_equal(np.asarray(qv), 0.0)
+    np.testing.assert_array_equal(np.asarray(dens), 0.0)
+
+
+# ----------------------------------------------- engine: one-pass QUANTILE
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_engine_quantile_runs_one_pass(use_pallas):
+    """A QUANTILE query on the clean path compiles ONLY the fused one-pass
+    program: the plain scan cache stays empty for its template (the old
+    engine ran a moments scan + a second full-column quantile pass)."""
+    tbl = table_lib.from_columns("s", synth.sessions_table(15_000, seed=3))
+    db = BlinkDB(EngineConfig(k1=400.0, m=3, seed=1, use_pallas=use_pallas))
+    db.register_table("s", tbl)
+    db.add_family("s", ("City",))
+    q = Query("s", AggOp.QUANTILE, value_column="SessionTime", quantile=0.5,
+              predicate=Predicate.where(
+                  Atom("City", CmpOp.EQ, tbl.dictionaries["City"][0])))
+    ans = db.query(q)
+    assert ans.groups and np.isfinite(ans.groups[0].estimate)
+    assert db._quantile_programs, "fused quantile program not compiled"
+    assert not db._programs, \
+        "QUANTILE compiled a separate moments scan (second pass)"
+
+
+def test_engine_quantile_pallas_matches_jnp_roughly():
+    """Histogram binning differs (family-global vs selection-local range) so
+    the two paths agree to bin resolution, not bitwise."""
+    tbl = table_lib.from_columns("s", synth.sessions_table(15_000, seed=3))
+    answers = {}
+    for up in (False, True):
+        db = BlinkDB(EngineConfig(k1=400.0, m=3, seed=1, use_pallas=up))
+        db.register_table("s", tbl)
+        db.add_family("s", ())
+        q = Query("s", AggOp.QUANTILE, value_column="SessionTime",
+                  quantile=0.5)
+        answers[up] = db.query(q).groups[0].estimate
+    col = np.asarray(tbl.columns["SessionTime"])
+    span = float(col.max() - col.min())
+    assert abs(answers[True] - answers[False]) <= span / 64

@@ -163,8 +163,10 @@ def test_striping_preserves_prefix_semantics():
     for n_shards in (1, 3, 4):
         striped = exec_lib.stripe_family(fam, n_shards)
         for k in fam.ks:
-            in_prefix = (np.asarray(striped.entry_key) < k) & \
-                np.asarray(striped.valid)
+            ftab = np.asarray(striped.freq_table)
+            ek = np.asarray(striped.unit) * \
+                ftab[np.asarray(striped.strat).astype(np.int64)]
+            in_prefix = (ek < k) & np.asarray(striped.valid)
             assert in_prefix.sum() == fam.prefix_for_k(k)
             per_shard = in_prefix.sum(axis=1)
             assert per_shard.max() - per_shard.min() <= 1, \
