@@ -36,9 +36,9 @@ import os
 import shutil
 import sys
 
-BENCH_FILES = ("BENCH_batch.json", "BENCH_fault.json", "BENCH_ingest.json",
-               "BENCH_kernel.json", "BENCH_mutation.json",
-               "BENCH_serve.json")
+BENCH_FILES = ("BENCH_batch.json", "BENCH_error.json", "BENCH_fault.json",
+               "BENCH_ingest.json", "BENCH_kernel.json",
+               "BENCH_mutation.json", "BENCH_serve.json")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +130,19 @@ GATES = [
          higher=False, rel_tol=3.0),
     Gate("BENCH_fault.json", "fault_none", "latency_p99_ms",
          higher=False, rel_tol=3.0),
+    # ---- a-priori ERROR WITHIN contracts: empirical bound coverage over
+    # the certified per-group claims is SEEDED-DETERMINISTIC (pilot
+    # certification is count-based, no wall-clock input) — the floor is the
+    # claimed 95% confidence itself, and the tight band catches any drift
+    # in the certification ladder (a changed pilot inflation, a broken
+    # escalation rung) the moment it moves a single claim. The CI-cost
+    # ratio is a same-machine timing ratio: subsampled CIs at batch 32 must
+    # stay within the ISSUE's 3x acceptance ceiling of the plain scan.
+    Gate("BENCH_error.json", "error_coverage", "coverage", floor=0.95,
+         rel_tol=0.02),
+    Gate("BENCH_error.json", "error_coverage", "n_claims", floor=1.0),
+    Gate("BENCH_error.json", "error_ci_cost", "ci_cost_ratio",
+         higher=False, ceiling=3.0),
 ]
 
 

@@ -1,11 +1,11 @@
 """BlinkDB core: the paper's contribution as a composable JAX module."""
 from repro.core.engine import BlinkDB, EngineConfig
-from repro.core.types import (AggOp, Answer, Atom, CmpOp, Conjunction,
-                              ErrorBound, Predicate, Query, QueryTemplate,
-                              TimeBound)
+from repro.core.types import (AggOp, Answer, Atom, BoundUnreachableError,
+                              CmpOp, Conjunction, ErrorBound, Predicate,
+                              Query, QueryTemplate, TimeBound)
 
 __all__ = [
-    "BlinkDB", "EngineConfig", "AggOp", "Answer", "Atom", "CmpOp",
-    "Conjunction", "ErrorBound", "Predicate", "Query", "QueryTemplate",
-    "TimeBound",
+    "BlinkDB", "EngineConfig", "AggOp", "Answer", "Atom",
+    "BoundUnreachableError", "CmpOp", "Conjunction", "ErrorBound",
+    "Predicate", "Query", "QueryTemplate", "TimeBound",
 ]

@@ -26,8 +26,9 @@ from repro.core import executor as exec_lib
 from repro.core import optimizer as opt_lib
 from repro.core import sampling as samp_lib
 from repro.core import table as table_lib
-from repro.core.types import (AggOp, Answer, ColumnKind, ErrorBound,
-                              GroupResult, Query, QueryTemplate, TimeBound)
+from repro.core.types import (AggOp, Answer, BoundUnreachableError,
+                              ColumnKind, ErrorBound, GroupResult, Query,
+                              QueryTemplate, TimeBound)
 from repro.core.selection import rewrite_disjuncts, select_family
 from repro.fault import inject
 
@@ -43,6 +44,20 @@ class EngineConfig:
     use_pallas: bool = False     # fused Pallas scan vs pure-jnp reference
     reuse_elp: bool = True       # cache ELP decisions per template (§4.4)
     seed: int = 0
+    # A-priori ERROR WITHIN contracts (docs/SERVICE.md): the pilot scan
+    # either certifies a K on the selected family, escalates to larger
+    # families, falls back to an exact base-table scan, or annotates the
+    # answer bound_met=False. Disabling the ladder rungs narrows what the
+    # engine may do for an unreachable bound — never back to silence.
+    escalate_on_unreachable: bool = True
+    exact_fallback: bool = True
+    # CI machinery: "closed" = Table-2 / HT closed forms (default, bit-
+    # identical to the pre-contract engine); "subsampling" = VerdictDB-style
+    # variational subsampling (same point estimates via folded moments,
+    # stderr from the replicate spread). Fault-sharded scans always use the
+    # closed form (per-shard partials can't carry subsample segments).
+    ci_method: str = "closed"
+    n_subsamples: int = 32
     # Fault-domain sharding (docs/FAULTS.md). Engages ONLY under an armed
     # non-empty FaultPlan: scans split into n_logical_shards disjoint
     # stratum partitions with shard_replicas attempts each, so a lost shard
@@ -94,6 +109,24 @@ class MutationReport:
     epoch: int | None = None
 
 
+@dataclasses.dataclass(frozen=True)
+class ElpDecision:
+    """One resolved a-priori contract decision, cached per ELP key (§4.4).
+
+    Replaces the old bare-K cache value: an unreachable bound may resolve to
+    a DIFFERENT family than the query's §4.1 selection (escalation) or to an
+    exact base-table scan, and replaying the cached decision must reproduce
+    that, not just a K. `gen` pins the decided family's content generation —
+    a rebuilt/merged family retires the decision even when the cache key's
+    own family survived."""
+    phi: tuple[str, ...]
+    k: float
+    certified: bool | None        # None: query had no ErrorBound
+    exact: bool = False           # exact base-table fallback
+    predicted_half_width: float | None = None   # bound units; 0.0 for exact
+    gen: int = 0
+
+
 @dataclasses.dataclass
 class _BatchJob:
     """One conjunctive subquery's slot in a batched execution plan."""
@@ -108,6 +141,8 @@ class _BatchJob:
     scan_key: tuple               # (table, phi, struct, value, group, G)
     confidence: float
     k: float | None = None        # resolved resolution cap
+    certified: bool | None = None  # a-priori contract provenance
+    predicted_half: float | None = None
 
 
 class BlinkDB:
@@ -128,8 +163,18 @@ class BlinkDB:
         # one-pass quantile kernel; invalidated with the family's programs.
         self._quantile_ranges: dict = {}
         self._exact_programs: dict = {}
-        # (table, phi, struct, agg, value_col, group_by, repr(bound)) -> K
-        # (§4.4; invalidation matches positionally on the (table, phi) prefix)
+        # Variational-subsampling CI programs + per-block subsample codes
+        # (ci_method="subsampling"); keyed/invalidated like their plain
+        # counterparts.
+        self._subsampled_programs: dict = {}
+        self._batched_subsampled_programs: dict = {}
+        self._subsampled_quantile_programs: dict = {}
+        self._subsample_codes: dict = {}    # (table, phi) -> i32[S, n_local]
+        # (table, phi, struct, agg, value_col, group_by, repr(bound)) ->
+        # ElpDecision (§4.4; invalidation matches positionally on the
+        # (table, phi) prefix; TimeBound queries are NOT cached here — their
+        # reuse unit is the LatencyModel in self._latency, re-projected per
+        # effective budget so scheduler headroom can't alias a direct call)
         self._elp_cache: dict = {}
         self._fk_maps: dict = {}      # (fact, dim, fk) -> np fk->row map
         self._append_epochs: dict[str, int] = {}  # table -> appends so far
@@ -200,6 +245,10 @@ class BlinkDB:
         for cache in (self._striped, self._latency, self._programs,
                       self._batched_programs, self._quantile_programs,
                       self._quantile_ranges, self._exact_programs,
+                      self._subsampled_programs,
+                      self._batched_subsampled_programs,
+                      self._subsampled_quantile_programs,
+                      self._subsample_codes,
                       self._elp_cache):
             for k in [k for k in cache if k[0] == name]:
                 del cache[k]
@@ -407,7 +456,10 @@ class BlinkDB:
             if not len(vals):
                 continue
             for cache in (self._programs, self._batched_programs,
-                          self._quantile_programs):
+                          self._quantile_programs,
+                          self._subsampled_programs,
+                          self._batched_subsampled_programs,
+                          self._subsampled_quantile_programs):
                 for k in [k for k in cache
                           if k[0] == table_name and k[4] == col]:
                     del cache[k]
@@ -742,6 +794,10 @@ class BlinkDB:
         for the old sample need not meet the bound on the new one."""
         for cache in (self._programs, self._batched_programs,
                       self._quantile_programs, self._quantile_ranges,
+                      self._subsampled_programs,
+                      self._batched_subsampled_programs,
+                      self._subsampled_quantile_programs,
+                      self._subsample_codes,
                       self._elp_cache, self._latency):
             stale = [k for k in cache if k[0] == table_name and k[1] == phi]
             for k in stale:
@@ -825,11 +881,14 @@ class BlinkDB:
                              mom: est_lib.GroupedMoments, rows_read: int,
                              elapsed: float, confidence: float,
                              faults: "exec_lib.ShardScanReport | None" = None,
-                             qpair=None) -> Answer:
+                             qpair=None, certified: bool | None = None,
+                             predicted_half_width: float | None = None,
+                             est: est_lib.Estimate | None = None) -> Answer:
         tbl = self.tables[table_name]
         fam = self.families[table_name][phi]
         degraded = faults is not None and faults.degraded
-        est = self._estimate_for(q, table_name, phi, k, mom, qpair)
+        if est is None:
+            est = self._estimate_for(q, table_name, phi, k, mom, qpair)
         stderr, lo, hi = est_lib.ci(est, confidence)
         group_col = q.group_by[0] if q.group_by else None
         vals = np.asarray(est.value)
@@ -839,6 +898,7 @@ class BlinkDB:
         wsum = np.asarray(mom.wsum)
         nsel = np.asarray(mom.n)
         groups = []
+        realized_half = 0.0   # worst realized CI half-width, bound units
         for g in range(len(vals)):
             if nsel[g] == 0 and wsum[g] == 0:
                 continue  # missing subgroup (paper §3.1 "subset error")
@@ -848,14 +908,29 @@ class BlinkDB:
             # fully sampled among SURVIVORS yet still miss lost-shard rows.
             exact = (not degraded and
                      bool(abs(nsel[g] - wsum[g]) < 1e-6 * max(wsum[g], 1.0)))
+            if not exact and isinstance(q.bound, ErrorBound):
+                half = est_lib.z_value(confidence) * float(errs[g])
+                if q.bound.relative:
+                    half = (abs(half / vals[g]) if vals[g]
+                            else (0.0 if half == 0.0 else float("inf")))
+                realized_half = max(realized_half, half)
             groups.append(GroupResult(key, float(vals[g]), float(errs[g]),
                                       float(los[g]), float(his[g]),
                                       float(nsel[g]), exact))
+        # Contract verdict: certified a-priori AND realized post-hoc — a
+        # degraded scan (HT-reweighted, wider CIs) can demote a certified
+        # answer to bound_met=False, never silently keep the claim.
+        bound_met = None
+        if isinstance(q.bound, ErrorBound):
+            bound_met = bool(certified
+                             and realized_half <= q.bound.eps + 1e-12)
         return Answer(q, groups, phi, k, rows_read, tbl.n_live, elapsed,
                       confidence,
                       degraded=degraded,
                       shards_lost=len(faults.lost) if faults else 0,
-                      shards_total=faults.n_shards if faults else 0)
+                      shards_total=faults.n_shards if faults else 0,
+                      bound_met=bound_met, certified=certified,
+                      predicted_half_width=predicted_half_width)
 
     def _family_range(self, table_name: str, phi: tuple[str, ...],
                       value_col: str | None) -> tuple[float, float]:
@@ -954,6 +1029,277 @@ class BlinkDB:
         batched probe scans); delegates to the fused one-pass program."""
         return self._estimate_for(q, table_name, phi, k, mom)
 
+    # ------------------------------------- variational subsampling CIs
+    def _subsample_codes_for(self, table_name: str, phi: tuple[str, ...],
+                             striped: exec_lib.StripedFamily) -> jax.Array:
+        """Per-slot subsample ids for a family's striped block, cached per
+        (table, family) and regenerated when the block's shape changes
+        (restripe). A traced argument of the subsampled programs, exactly
+        like the block itself."""
+        key = (table_name, phi)
+        sub = self._subsample_codes.get(key)
+        if sub is None or sub.shape != striped.unit.shape:
+            sub = jnp.asarray(exec_lib.subsample_codes(
+                striped.n_shards, striped.unit.shape[1],
+                self.config.n_subsamples))
+            self._subsample_codes[key] = sub
+        return sub
+
+    def _subsampled_answer(self, q: Query, table_name: str,
+                           phi: tuple[str, ...], k: float, confidence: float,
+                           certified: bool | None = None,
+                           predicted_half_width: float | None = None
+                           ) -> Answer:
+        """Scan at K with per-subsample segments (ci_method="subsampling"):
+        point estimates come from the FOLDED moments — identical to the
+        plain scan — and the CI from the spread of the B replicate
+        estimates, all in one pass (docs/BATCHING.md)."""
+        fam = self.families[table_name][phi]
+        striped = self._striped_for(table_name, phi)
+        bound_pred = exec_lib.bind_predicate(q.predicate,
+                                             self._encode(table_name))
+        struct, vals = exec_lib.pred_structure(bound_pred)
+        group_col = q.group_by[0] if q.group_by else None
+        n_groups = self._column_card(table_name, group_col) if group_col else 1
+        b = self.config.n_subsamples
+        sub = self._subsample_codes_for(table_name, phi, striped)
+        key = (table_name, phi, struct, q.value_column, group_col, n_groups,
+               striped.shape_class, b)
+        args = exec_lib.scan_args(striped)
+        inject.site("engine.scan", table=table_name)
+        t0 = time.perf_counter()
+        if q.agg is AggOp.QUANTILE:
+            fn = self._subsampled_quantile_programs.get(key)
+            if fn is None:
+                fn = exec_lib.make_subsampled_quantile_fn(
+                    struct, q.value_column, group_col, n_groups, b,
+                    mesh=self.mesh, data_axes=self.data_axes)
+                self._subsampled_quantile_programs[key] = fn
+            mom_sub, qv, dens, qsub = fn(jnp.float32(k), vals,
+                                         jnp.float32(q.quantile), sub, *args)
+            mom_sub = jax.tree.map(lambda x: x.block_until_ready(), mom_sub)
+            est = est_lib.subsampling_estimate(
+                AggOp.QUANTILE, mom_sub, n_groups, b, quantile_value=qv,
+                quantile_density=dens, quantile_values_sub=qsub,
+                q=q.quantile)
+        else:
+            fn = self._subsampled_programs.get(key)
+            if fn is None:
+                fn = exec_lib.make_subsampled_query_fn(
+                    struct, q.value_column, group_col, n_groups, b,
+                    mesh=self.mesh, data_axes=self.data_axes)
+                self._subsampled_programs[key] = fn
+            mom_sub = fn(jnp.float32(k), vals, sub, *args)
+            mom_sub = jax.tree.map(lambda x: x.block_until_ready(), mom_sub)
+            est = est_lib.subsampling_estimate(q.agg, mom_sub, n_groups, b)
+        dt = time.perf_counter() - t0
+        mom = est_lib.fold_subsamples(mom_sub, n_groups, b)
+        return self._answer_from_moments(
+            q, table_name, phi, k, mom, fam.prefix_for_k(k), dt, confidence,
+            certified=certified, predicted_half_width=predicted_half_width,
+            est=est)
+
+    def _scan_and_answer(self, q: Query, table_name: str,
+                         phi: tuple[str, ...], k: float, confidence: float,
+                         certified: bool | None = None,
+                         predicted_half_width: float | None = None
+                         ) -> Answer:
+        """One scan at K → Answer, routed by CI method. Subsampling CIs run
+        only when no fault plan is armed: the sharded path reduces per-shard
+        moment partials that cannot carry subsample segments, so it always
+        uses the closed forms."""
+        if self.config.ci_method == "subsampling" and inject.active() is None:
+            return self._subsampled_answer(q, table_name, phi, k, confidence,
+                                           certified, predicted_half_width)
+        mom, rows_read, dt, rep, qpair = self._scan_for_query(
+            table_name, q, phi, k)
+        return self._answer_from_moments(
+            q, table_name, phi, k, mom, rows_read, dt, confidence,
+            faults=rep, qpair=qpair, certified=certified,
+            predicted_half_width=predicted_half_width)
+
+    # --------------------------- a-priori ERROR WITHIN contracts (§4.2)
+    def _pilot_certify(self, table_name: str, q: Query,
+                       phi: tuple[str, ...], confidence: float
+                       ) -> tuple[float | None, float | None]:
+        """Pilot scan on the family's smallest resolution → (K or None,
+        predicted CI half-width in bound units). The pilot variance is
+        inflated by the finite-sample chi-square factor
+        (est_lib.pilot_inflation) BEFORE the §4.2 projection, so the
+        certificate holds a-priori at the bound's confidence — not just in
+        expectation, which is all the raw plug-in projection delivers. When
+        no K suffices the half-width reported is the projection at the
+        family's largest resolution: the best this family could do."""
+        fam = self.families[table_name][phi]
+        k_probe = min(fam.ks)
+        mom, _, _, _, qpair = self._scan_for_query(table_name, q, phi,
+                                                   k_probe)
+        est = self._estimate_for(q, table_name, phi, k_probe, mom, qpair)
+        n_pilot = np.asarray(est.n, dtype=np.float64)
+        infl = est_lib.pilot_inflation(n_pilot, confidence)
+        n_req = np.asarray(est_lib.required_n_for_error(
+            q.agg, est, q.bound.eps, confidence, q.bound.relative))
+        k_q = elp_lib.pick_k_for_error(fam, n_pilot, n_req * infl, k_probe)
+        k_half = k_q if k_q is not None else fam.ks[0]
+        return k_q, self._predicted_half(q, est, infl, k_probe, k_half,
+                                         confidence)
+
+    def _certify_at_top(self, table_name: str, q: Query,
+                        phi: tuple[str, ...], confidence: float
+                        ) -> tuple[float | None, float | None]:
+        """Certify at the family's LARGEST resolution from the realized
+        (inflated) CI of an actual scan there — the refinement for bounds
+        the linear projection declares unreachable only because it cannot
+        model full stratum containment. Returns (ks[0], half) on success,
+        (None, half) when even the top resolution misses the bound."""
+        fam = self.families[table_name][phi]
+        k_top = fam.ks[0]
+        mom, _, _, _, qpair = self._scan_for_query(table_name, q, phi, k_top)
+        est = self._estimate_for(q, table_name, phi, k_top, mom, qpair)
+        infl = est_lib.pilot_inflation(np.asarray(est.n, dtype=np.float64),
+                                       confidence)
+        half = self._predicted_half(q, est, infl, k_top, k_top, confidence)
+        if half is not None and half <= q.bound.eps + 1e-12:
+            return k_top, half
+        return None, half
+
+    def _predicted_half(self, q: Query, est: est_lib.Estimate, infl,
+                        k_probe: float, k: float,
+                        confidence: float) -> float | None:
+        """Pilot-projected CI half-width at resolution k, in the bound's
+        units (relative bounds divide by the pilot point estimate), max over
+        the groups the pilot saw — None when it saw none. Variance scales
+        ∝ k_probe/k (§4.2), held at 1 for k below the probe."""
+        vals = np.atleast_1d(np.asarray(est.value, dtype=np.float64))
+        var = np.atleast_1d(np.asarray(est.variance, dtype=np.float64))
+        n = np.atleast_1d(np.asarray(est.n, dtype=np.float64))
+        infl = np.broadcast_to(np.atleast_1d(infl), n.shape)
+        seen = n > 0
+        if not seen.any():
+            return None
+        z = est_lib.z_value(confidence)
+        scale = min(k_probe / k, 1.0)
+        half = z * np.sqrt(np.maximum(var * infl * scale, 0.0))
+        if q.bound.relative:
+            with np.errstate(divide="ignore", invalid="ignore"):
+                half = np.where(np.abs(vals) > 0.0, np.abs(half / vals),
+                                np.where(half > 0.0, np.inf, 0.0))
+        return float(np.max(half[seen]))
+
+    def _plan_error_bound(self, table_name: str, q: Query,
+                          phi: tuple[str, ...], confidence: float,
+                          first: tuple[float | None, float | None]
+                          | None = None) -> ElpDecision:
+        """Resolve an ErrorBound query to a contract decision by walking the
+        ladder (docs/SERVICE.md):
+
+          1. certify a K on the §4.1-selected family (pilot + inflation);
+          2. escalate: pilot strictly LARGER families, ascending by size;
+          3. exact base-table fallback — bound met by construction;
+          4. best-effort annotated certified=False, or a typed
+             BoundUnreachableError for a strict bound (`... OR FAIL`).
+
+        `first` injects a pre-computed pilot result for the selected family
+        (query_batch's shared batched pilot scan)."""
+        fams = self.families[table_name]
+
+        def decide(p, k, certified, half, exact=False):
+            return ElpDecision(p, k, certified, exact=exact,
+                               predicted_half_width=half,
+                               gen=self.family_generation(table_name, p))
+
+        k_q, half = (self._pilot_certify(table_name, q, phi, confidence)
+                     if first is None else first)
+        if k_q is None and half is not None:
+            # Containment refinement: the linear Var ∝ 1/n projection cannot
+            # see that the family's largest prefix may fully CONTAIN the
+            # strata the predicate touches (rate 1 ⇒ zero sampling
+            # variance), so it declares unreachable bounds that the top
+            # resolution meets outright. One scan at ks[0] certifies from
+            # the realized inflated CI before the ladder escalates.
+            k_q, half = self._certify_at_top(table_name, q, phi, confidence)
+        if k_q is not None:
+            return decide(phi, k_q, True, half)
+        best_phi, best_half = phi, half
+        if self.config.escalate_on_unreachable:
+            def size(p):
+                return max(fams[p].prefix_sizes)
+            for p2 in sorted((p for p in fams
+                              if p != phi and size(p) > size(phi)),
+                             key=size):
+                k2, half2 = self._pilot_certify(table_name, q, p2,
+                                                confidence)
+                if k2 is not None:
+                    return decide(p2, k2, True, half2)
+                if half2 is not None and (best_half is None
+                                          or half2 < best_half):
+                    best_phi, best_half = p2, half2
+        if best_half is None:
+            # Zero signal: NO pilot (selected family or escalation) saw a
+            # single selected row. There is nothing to certify from — but
+            # also no evidence the bound is busted (an empty selection
+            # vacuously meets it), so burning a full exact scan to prove
+            # emptiness is not the default. Serve the most accurate sample
+            # annotated certified=False; a strict bound still refuses (or
+            # takes the exact fallback) because it demands a guarantee.
+            if isinstance(q.bound, ErrorBound) and q.bound.strict:
+                if self.config.exact_fallback:
+                    return decide(phi, float(fams[phi].ks[0]), True, 0.0,
+                                  exact=True)
+                raise BoundUnreachableError(
+                    f"ERROR WITHIN {q.bound.eps} cannot be certified on "
+                    f"table {table_name!r}: no pilot scan selected any "
+                    f"row (nothing to project from)", None)
+            return decide(phi, fams[phi].ks[0], False, None)
+        if self.config.exact_fallback:
+            return decide(phi, float(fams[phi].ks[0]), True, 0.0, exact=True)
+        if q.bound.strict:
+            raise BoundUnreachableError(
+                f"ERROR WITHIN {q.bound.eps} AT CONFIDENCE {confidence} is "
+                f"unreachable on table {table_name!r}: best predicted CI "
+                f"half-width {best_half} (escalation/exact fallback "
+                f"disabled or exhausted)", best_half)
+        return decide(best_phi, fams[best_phi].ks[0], False, best_half)
+
+    def _execute_decision(self, q: Query, table_name: str,
+                          dec: ElpDecision, confidence: float) -> Answer:
+        """Run one resolved contract decision to an Answer."""
+        if dec.exact:
+            ans = self.exact_query(q)
+            return dataclasses.replace(ans, bound_met=True, certified=True,
+                                       predicted_half_width=0.0)
+        if (isinstance(q.bound, ErrorBound) and q.bound.strict
+                and dec.certified is False):
+            # Replayed best-effort decision under a strict bound (config
+            # may have changed since it was cached): still a refusal.
+            raise BoundUnreachableError(
+                f"ERROR WITHIN {q.bound.eps} unreachable (predicted CI "
+                f"half-width {dec.predicted_half_width})",
+                dec.predicted_half_width)
+        return self._scan_and_answer(
+            q, table_name, dec.phi, dec.k, confidence,
+            certified=dec.certified,
+            predicted_half_width=dec.predicted_half_width)
+
+    def _cached_decision(self, elp_key: tuple,
+                         table_name: str) -> ElpDecision | None:
+        """§4.4 cache lookup with generation pinning: a decision whose
+        family was dropped or whose CONTENT generation moved (escalated
+        decisions can point outside the cache key's own family, which the
+        positional invalidation in _drop_programs cannot see) is retired
+        rather than replayed."""
+        dec = self._elp_cache.get(elp_key)
+        if dec is None:
+            return None
+        if dec.exact:
+            return dec   # base-table scans don't pin any family
+        fams = self.families.get(table_name, {})
+        if dec.phi not in fams or \
+                dec.gen != self.family_generation(table_name, dec.phi):
+            del self._elp_cache[elp_key]
+            return None
+        return dec
+
     def _selection_cat_cols(self, table_name: str, q: Query) -> frozenset[str]:
         """Family selection columns (§4.1): joined dim attributes map to their
         fk column — a family stratified on the join key serves them (§2.1.i)."""
@@ -982,7 +1328,14 @@ class BlinkDB:
         return select_family(cat_cols, fams, probe).phi
 
     def query(self, q: Query) -> Answer:
-        """Execute with §4.1 family selection + §4.2 ELP resolution choice."""
+        """Execute with §4.1 family selection + §4.2 ELP resolution choice.
+
+        ErrorBound queries walk the a-priori contract ladder (pilot scan
+        with finite-sample inflation, escalation to larger families, exact
+        base-table fallback — docs/SERVICE.md), so every ErrorBound answer
+        carries bound_met / certified / predicted_half_width provenance and
+        a strict bound (`... OR FAIL`) raises BoundUnreachableError instead
+        of silently serving a best-effort answer."""
         subqueries = rewrite_disjuncts(q)
         if len(subqueries) > 1:
             answers = [self.query(sq) for sq in subqueries]
@@ -990,46 +1343,35 @@ class BlinkDB:
 
         table_name = q.table
         self._resolve_joins(table_name, q)
-        fams = self.families[table_name]
         phi = self._select_phi(table_name, q)
-        fam = fams[phi]
-
         confidence = q.bound.confidence if q.bound else 0.95
-        ks_asc = sorted(fam.ks)
-        k_probe = ks_asc[0]
 
-        # §4.4 ELP reuse: one probe per (family × template × bound); later
-        # instantiations of the template skip straight to the chosen K.
+        if isinstance(q.bound, TimeBound):
+            # TimeBound reuse unit is the LatencyModel (self._latency); K
+            # re-projects against each call's effective budget, so a K
+            # chosen under scheduler headroom can never alias a direct
+            # call's full bound — nothing bound-shaped is cached.
+            k_q = self._pick_k_for_time(table_name, q, phi)
+            return self._scan_and_answer(q, table_name, phi, k_q, confidence)
+
+        # §4.4 ELP reuse: one pilot per (family × template × bound); later
+        # instantiations replay the full DECISION (family, K, certification,
+        # predicted half-width), generation-pinned to the decided family.
         struct, _ = exec_lib.pred_structure(
             exec_lib.bind_predicate(q.predicate, self._encode(table_name)))
         elp_key = (table_name, phi, struct, q.agg, q.value_column,
                    q.group_by, repr(q.bound))
-        if self.config.reuse_elp and elp_key in self._elp_cache:
-            k_q = self._elp_cache[elp_key]
-            mom, rows_read, dt, rep, qpair = self._scan_for_query(
-                table_name, q, phi, k_q)
-            return self._answer_from_moments(q, table_name, phi, k_q, mom,
-                                             rows_read, dt, confidence,
-                                             faults=rep, qpair=qpair)
-
-        if isinstance(q.bound, ErrorBound):
-            mom, rows_read, dt, _, qpair = self._scan_for_query(
-                table_name, q, phi, k_probe)
-            est = self._estimate_for(q, table_name, phi, k_probe, mom, qpair)
-            n_req = np.asarray(est_lib.required_n_for_error(
-                q.agg, est, q.bound.eps, confidence, q.bound.relative))
-            k_q = elp_lib.pick_k_for_error(fam, np.asarray(est.n), n_req, k_probe)
-        elif isinstance(q.bound, TimeBound):
-            k_q = self._pick_k_for_time(table_name, q, phi)
-        else:
-            k_q = fam.ks[0]  # no bound: most accurate available sample
-
-        self._elp_cache[elp_key] = k_q
-        mom, rows_read, dt, rep, qpair = self._scan_for_query(
-            table_name, q, phi, k_q)
-        return self._answer_from_moments(q, table_name, phi, k_q, mom,
-                                         rows_read, dt, confidence,
-                                         faults=rep, qpair=qpair)
+        dec = (self._cached_decision(elp_key, table_name)
+               if self.config.reuse_elp else None)
+        if dec is None:
+            if isinstance(q.bound, ErrorBound):
+                dec = self._plan_error_bound(table_name, q, phi, confidence)
+            else:   # no bound: most accurate available sample
+                dec = ElpDecision(
+                    phi, self.families[table_name][phi].ks[0], None,
+                    gen=self.family_generation(table_name, phi))
+            self._elp_cache[elp_key] = dec
+        return self._execute_decision(q, table_name, dec, confidence)
 
     def _pick_k_for_time(self, table_name: str, q: Query,
                          phi: tuple[str, ...],
@@ -1037,17 +1379,25 @@ class BlinkDB:
         """§4.2 latency profile: calibrate t(rows) on the smallest
         resolutions, then pick the largest K inside the bound. Shared by
         query() and query_batch() (timing probes are inherently sequential).
-        `headroom_s` shrinks the bound's scan budget — the admission
-        scheduler reserves its batching window this way (docs/SERVICE.md)."""
+
+        The fitted LatencyModel is the reuse unit — cached per (table,
+        family) and re-projected against each call's effective budget
+        (bound minus `headroom_s`, the admission scheduler's batching
+        window, docs/SERVICE.md). The old design cached the RESOLVED K
+        under a key that ignored headroom, so a batch-path decision made
+        under a nonzero window could be replayed for a direct call (or vice
+        versa) and silently bust the time bound."""
         fam = self.families[table_name][phi]
-        probes = elp_lib.run_probes(
-            fam,
-            lambda k: (lambda m, r, t, _rep: (float(jnp.sum(m.n)), t))(
-                *self._run_at_k(table_name, q, phi, k)),
-            n_probes=self.config.probe_resolutions)
-        model = elp_lib.fit_latency([p.rows_read for p in probes],
-                                    [p.elapsed_s for p in probes])
-        self._latency[(table_name, phi)] = model
+        model = self._latency.get((table_name, phi))
+        if model is None:
+            probes = elp_lib.run_probes(
+                fam,
+                lambda k: (lambda m, r, t, _rep: (float(jnp.sum(m.n)), t))(
+                    *self._run_at_k(table_name, q, phi, k)),
+                n_probes=self.config.probe_resolutions)
+            model = elp_lib.fit_latency([p.rows_read for p in probes],
+                                        [p.elapsed_s for p in probes])
+            self._latency[(table_name, phi)] = model
         return elp_lib.pick_k_for_time(fam, model, q.bound.seconds,
                                        headroom_s=headroom_s)
 
@@ -1146,6 +1496,54 @@ class BlinkDB:
         dt = time.perf_counter() - t0
         return jax.tree.map(lambda x: x[:n_q], mom), dt, report
 
+    def _run_batched_subsampled(self, scan_key, ks: Sequence[float],
+                                consts_list: Sequence[tuple[float, ...]]
+                                ) -> tuple[est_lib.GroupedMoments, float,
+                                           None]:
+        """Batched scan with per-subsample segments (ci_method=
+        "subsampling"): the [Q, n_groups·B] analogue of _run_batched, same
+        padding/chunking. Never fault-sharded — query_batch routes
+        armed-plan scans to the closed-form path, so the report slot is
+        always None."""
+        table_name, phi, struct, value_col, group_col, n_groups = scan_key
+        striped = self._striped_for(table_name, phi)
+        n_q = len(ks)
+        if n_q > _MAX_SCAN_BATCH:
+            moms, total_dt = [], 0.0
+            for i in range(0, n_q, _MAX_SCAN_BATCH):
+                m, d, _ = self._run_batched_subsampled(
+                    scan_key, ks[i:i + _MAX_SCAN_BATCH],
+                    consts_list[i:i + _MAX_SCAN_BATCH])
+                moms.append(m)
+                total_dt += d
+            return (jax.tree.map(lambda *xs: jnp.concatenate(xs), *moms),
+                    total_dt, None)
+        b = self.config.n_subsamples
+        q_pad = 1 << max(0, n_q - 1).bit_length()
+        n_atoms = len(exec_lib.flat_atoms(struct))
+        ks_arr = np.asarray(list(ks) + [ks[0]] * (q_pad - n_q), np.float32)
+        consts = np.asarray(
+            [list(c) for c in consts_list] +
+            [list(consts_list[0])] * (q_pad - n_q),
+            np.float32).reshape(q_pad, n_atoms)
+        ks_dev, consts_dev = jnp.asarray(ks_arr), jnp.asarray(consts)
+        sub = self._subsample_codes_for(table_name, phi, striped)
+        args = exec_lib.scan_args(striped)
+        pkey = scan_key + (striped.shape_class, q_pad, b)
+        fn = self._batched_subsampled_programs.get(pkey)
+        if fn is None:
+            jfn = exec_lib.make_batched_subsampled_query_fn(
+                struct, value_col, group_col, n_groups, b,
+                mesh=self.mesh, data_axes=self.data_axes)
+            fn = jfn.lower(ks_dev, consts_dev, sub, *args).compile()  # AOT
+            self._batched_subsampled_programs[pkey] = fn
+        inject.site("engine.scan", table=table_name)
+        t0 = time.perf_counter()
+        mom = fn(ks_dev, consts_dev, sub, *args)
+        mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+        dt = time.perf_counter() - t0
+        return jax.tree.map(lambda x: x[:n_q], mom), dt, None
+
     def query_batch(self, queries: Sequence[Query],
                     deadline_headroom_s: float = 0.0) -> list[Answer]:
         """Execute N concurrent queries, sharing one family scan per
@@ -1163,9 +1561,17 @@ class BlinkDB:
         `deadline_headroom_s` (the admission scheduler's batching window)
         tightens every TimeBound query's scan budget by that amount, so a
         query that waited up to one window for coalescing still meets its
-        bound end to end. TimeBound ELP decisions made under a nonzero
-        headroom are cached under a headroom-qualified key — they must not
-        leak into direct query() calls projecting against the full bound.
+        bound end to end. TimeBound decisions are never cached: the latency
+        MODEL is (per table × family), and K re-projects against each
+        call's effective budget, so headroom cannot alias between the batch
+        path and direct query() calls.
+
+        ErrorBound queries run the same a-priori contract ladder as
+        query(): the shared batched probe scan doubles as the pilot, and
+        jobs the pilot cannot certify escalate / fall back to exact /
+        annotate bound_met=False out of band (a strict bound raises
+        BoundUnreachableError — the admission scheduler's per-query
+        fallback path isolates it to the offending submitter).
         """
         queries = list(queries)
         if not queries:
@@ -1177,29 +1583,43 @@ class BlinkDB:
             for sq in rewrite_disjuncts(q):
                 jobs.append(self._plan_batch_job(pi, n_subs[pi], sq, sel_cache))
                 n_subs[pi] += 1
-        if deadline_headroom_s:
-            for job in jobs:
-                if isinstance(job.q.bound, TimeBound):
-                    job.elp_key = job.elp_key + (
-                        round(float(deadline_headroom_s), 6),)
 
-        # ELP resolution (§4.2/§4.4): cached templates skip straight to K;
-        # uncached ErrorBound queries share one batched probe scan per group;
-        # TimeBound queries need wall-clock probes (inherently sequential).
+        # Decisions that cannot join the shared scan — exact fallback, or
+        # escalation onto a family the batch didn't plan for — run out of
+        # band through the same decision runner query() uses.
+        oob: dict[int, ElpDecision] = {}
+
+        def apply_decision(job: _BatchJob, dec: ElpDecision) -> None:
+            if dec.exact or dec.phi != job.phi:
+                oob[id(job)] = dec
+                return
+            job.k = dec.k
+            job.certified = dec.certified
+            job.predicted_half = dec.predicted_half_width
+
+        # ELP resolution (§4.2/§4.4): cached templates replay their
+        # decision; uncached ErrorBound queries share one batched pilot scan
+        # per group; TimeBound queries need wall-clock probes (inherently
+        # sequential, one model fit per family).
         probe_groups: dict[tuple, list[_BatchJob]] = {}
         for job in jobs:
             fam = self.families[job.table][job.phi]
-            if self.config.reuse_elp and job.elp_key in self._elp_cache:
-                job.k = self._elp_cache[job.elp_key]
-            elif isinstance(job.q.bound, ErrorBound):
-                probe_groups.setdefault(job.scan_key, []).append(job)
-            elif isinstance(job.q.bound, TimeBound):
+            if isinstance(job.q.bound, TimeBound):
                 job.k = self._pick_k_for_time(job.table, job.q, job.phi,
                                               headroom_s=deadline_headroom_s)
-                self._elp_cache[job.elp_key] = job.k
-            else:
-                job.k = fam.ks[0]  # no bound: most accurate available sample
-                self._elp_cache[job.elp_key] = job.k
+                continue
+            dec = (self._cached_decision(job.elp_key, job.table)
+                   if self.config.reuse_elp else None)
+            if dec is not None:
+                apply_decision(job, dec)
+            elif isinstance(job.q.bound, ErrorBound):
+                probe_groups.setdefault(job.scan_key, []).append(job)
+            else:   # no bound: most accurate available sample
+                dec = ElpDecision(
+                    job.phi, fam.ks[0], None,
+                    gen=self.family_generation(job.table, job.phi))
+                self._elp_cache[job.elp_key] = dec
+                apply_decision(job, dec)
 
         for scan_key, group in probe_groups.items():
             fam = self.families[group[0].table][group[0].phi]
@@ -1208,38 +1628,75 @@ class BlinkDB:
                                           [j.consts for j in group])
             for i, job in enumerate(group):
                 # Sequential-contract parity (§4.4): once the first job of an
-                # elp_key resolves its K, later jobs reuse it — exactly as
-                # sequential calls 2..N would hit the cache query 1 wrote.
-                if self.config.reuse_elp and job.elp_key in self._elp_cache:
-                    job.k = self._elp_cache[job.elp_key]
-                    continue
-                mi = est_lib.moments_slice(mom, i)
-                est = (self._quantile_estimate(job.q, job.table, job.phi,
-                                               k_probe, mi)
-                       if job.q.agg is AggOp.QUANTILE
-                       else est_lib.estimate(job.q.agg, mi))
-                n_req = np.asarray(est_lib.required_n_for_error(
-                    job.q.agg, est, job.q.bound.eps, job.confidence,
-                    job.q.bound.relative))
-                job.k = elp_lib.pick_k_for_error(fam, np.asarray(est.n),
-                                                 n_req, k_probe)
-                self._elp_cache[job.elp_key] = job.k
+                # elp_key resolves, later jobs replay its decision — exactly
+                # as sequential calls 2..N would hit the cache query 1 wrote.
+                dec = (self._cached_decision(job.elp_key, job.table)
+                       if self.config.reuse_elp else None)
+                if dec is None:
+                    mi = est_lib.moments_slice(mom, i)
+                    est = (self._quantile_estimate(job.q, job.table,
+                                                   job.phi, k_probe, mi)
+                           if job.q.agg is AggOp.QUANTILE
+                           else est_lib.estimate(job.q.agg, mi))
+                    n_pilot = np.asarray(est.n, dtype=np.float64)
+                    infl = est_lib.pilot_inflation(n_pilot, job.confidence)
+                    n_req = np.asarray(est_lib.required_n_for_error(
+                        job.q.agg, est, job.q.bound.eps, job.confidence,
+                        job.q.bound.relative))
+                    k_q = elp_lib.pick_k_for_error(fam, n_pilot,
+                                                   n_req * infl, k_probe)
+                    k_half = k_q if k_q is not None else fam.ks[0]
+                    half = self._predicted_half(job.q, est, infl, k_probe,
+                                                k_half, job.confidence)
+                    # The shared batched probe IS this job's pilot; only
+                    # unreachable bounds walk the rest of the ladder.
+                    dec = self._plan_error_bound(job.table, job.q, job.phi,
+                                                 job.confidence,
+                                                 first=(k_q, half))
+                    self._elp_cache[job.elp_key] = dec
+                apply_decision(job, dec)
 
         # Final fused scan: one pass per (table, family, template) group.
         final_groups: dict[tuple, list[_BatchJob]] = {}
         for job in jobs:
+            if id(job) in oob:
+                continue
             final_groups.setdefault(job.scan_key, []).append(job)
         sub_answers: list[list[tuple[int, Answer]]] = [[] for _ in queries]
+        use_sub = (self.config.ci_method == "subsampling"
+                   and inject.active() is None)
+        b = self.config.n_subsamples
         for scan_key, group in final_groups.items():
-            mom, dt, rep = self._run_batched(scan_key, [j.k for j in group],
-                                             [j.consts for j in group])
+            n_groups = scan_key[5]
+            # QUANTILE replicates need the per-subsample histogram pass —
+            # batched groups containing one keep the closed-form CIs.
+            sub_mode = use_sub and all(j.q.agg is not AggOp.QUANTILE
+                                       for j in group)
+            runner = (self._run_batched_subsampled if sub_mode
+                      else self._run_batched)
+            mom, dt, rep = runner(scan_key, [j.k for j in group],
+                                  [j.consts for j in group])
             per_query_dt = dt / len(group)  # amortized shared-scan time
             for i, job in enumerate(group):
                 fam = self.families[job.table][job.phi]
+                mi = est_lib.moments_slice(mom, i)
+                est = None
+                if sub_mode:
+                    est = est_lib.subsampling_estimate(job.q.agg, mi,
+                                                       n_groups, b)
+                    mi = est_lib.fold_subsamples(mi, n_groups, b)
                 ans = self._answer_from_moments(
-                    job.q, job.table, job.phi, job.k,
-                    est_lib.moments_slice(mom, i), fam.prefix_for_k(job.k),
-                    per_query_dt, job.confidence, faults=rep)
+                    job.q, job.table, job.phi, job.k, mi,
+                    fam.prefix_for_k(job.k), per_query_dt, job.confidence,
+                    faults=rep, certified=job.certified,
+                    predicted_half_width=job.predicted_half, est=est)
+                sub_answers[job.parent].append((job.order, ans))
+
+        for job in jobs:
+            dec = oob.get(id(job))
+            if dec is not None:
+                ans = self._execute_decision(job.q, job.table, dec,
+                                             job.confidence)
                 sub_answers[job.parent].append((job.order, ans))
 
         out = []
@@ -1354,6 +1811,10 @@ def _union_answers(q: Query, answers: list[Answer]) -> Answer:
         g.ci_low = g.estimate - z * g.stderr
         g.ci_high = g.estimate + z * g.stderr
         groups.append(g)
+    mets = [a.bound_met for a in answers]
+    certs = [a.certified for a in answers]
+    preds = [a.predicted_half_width for a in answers
+             if a.predicted_half_width is not None]
     return Answer(q, groups, answers[0].sample_phi, answers[0].sample_k,
                   sum(a.rows_read for a in answers), answers[0].rows_total,
                   sum(a.elapsed_s for a in answers), answers[0].confidence,
@@ -1363,4 +1824,12 @@ def _union_answers(q: Query, answers: list[Answer]) -> Answer:
                   degraded=any(a.degraded for a in answers),
                   shards_lost=max(a.shards_lost for a in answers),
                   shards_total=max(a.shards_total for a in answers),
-                  staleness_s=max(a.staleness_s for a in answers))
+                  staleness_s=max(a.staleness_s for a in answers),
+                  # Contract provenance: the union claims the bound only
+                  # when EVERY disjunct did; the predicted half-width is
+                  # the worst sub-answer's (conservative for a sum).
+                  bound_met=(None if all(m is None for m in mets)
+                             else all(bool(m) for m in mets)),
+                  certified=(None if all(c is None for c in certs)
+                             else all(bool(c) for c in certs)),
+                  predicted_half_width=max(preds) if preds else None)

@@ -18,6 +18,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.scipy.special import ndtri
 
 from repro.core.types import AggOp
@@ -114,6 +115,36 @@ def moments_slice(mom: GroupedMoments, i: int) -> GroupedMoments:
     return jax.tree.map(lambda x: x[i], mom)
 
 
+def effective_sample_size(mom: GroupedMoments) -> jax.Array:
+    """Kish effective sample size (Σw)²/Σw² per group, derived from the
+    stored leaves without a new reduction: each selected row contributes
+    (1-r)/r² = w² - w to var_count, so Σw² = var_count + wsum. Equals the
+    raw n for uniform full-rate samples and shrinks under heterogeneous HT
+    rates — the correct "n" for Table-2 formulas that assume iid draws."""
+    w2sum = mom.var_count + mom.wsum
+    return jnp.where(w2sum > 0.0, mom.wsum * mom.wsum
+                     / jnp.maximum(w2sum, 1e-12), 0.0)
+
+
+def pilot_inflation(n_pilot, confidence: float):
+    """Finite-sample variance inflation for a-priori certification.
+
+    A pilot variance estimate S² from n rows understates the truth with
+    probability ~50%; certifying a K from it would bust the bound about
+    half the time. Inflate to the (confidence)-upper confidence limit of
+    the true variance, Var_up = S²·ν/χ²_{α,ν} with ν = n-1, α = 1-conf —
+    the PilotDB correction — using the Wilson–Hilferty cube approximation
+    of the chi-square lower quantile (no scipy dependency). Returns a
+    factor ≥ 1 per group; huge for tiny pilots, →1 as n grows.
+    """
+    n = np.maximum(np.asarray(n_pilot, dtype=np.float64), 2.0)
+    nu = n - 1.0
+    z_lo = -z_value(max(2.0 * confidence - 1.0, 1e-9))  # = Φ⁻¹(1-conf) < 0
+    h = 2.0 / (9.0 * nu)
+    chi_lo = nu * np.maximum(1.0 - h + z_lo * np.sqrt(h), 1e-3) ** 3
+    return np.maximum(nu / chi_lo, 1.0)
+
+
 @dataclasses.dataclass
 class Estimate:
     value: jax.Array    # f32[G] point estimates
@@ -140,8 +171,13 @@ def estimate(agg: AggOp, mom: GroupedMoments, *, quantile_value: jax.Array | Non
     if agg is AggOp.QUANTILE:
         # Table 2: Var = p(1-p) / (n f(x_p)²), with f estimated from the
         # sample histogram (executor supplies value + density per group).
+        # n is the EFFECTIVE sample size (Σw)²/Σw², not the raw selected-row
+        # count: under stratified HT rates the weighted empirical CDF behind
+        # the quantile has the information content of n_eff equally-weighted
+        # draws, and the raw n over-counts whenever rates are heterogeneous
+        # (verified against the variational-subsampling CI in tests).
         assert quantile_value is not None and quantile_density is not None
-        n = jnp.maximum(mom.n, 1.0)
+        n = jnp.maximum(effective_sample_size(mom), 1.0)
         f2 = jnp.maximum(quantile_density, eps) ** 2
         var = q * (1.0 - q) / (n * f2)
         return Estimate(quantile_value, var, mom.n)
@@ -165,3 +201,90 @@ def ci(est: Estimate, confidence: float) -> tuple[jax.Array, jax.Array, jax.Arra
     z = z_value(confidence)
     stderr = jnp.sqrt(jnp.maximum(est.variance, 0.0))
     return stderr, est.value - z * stderr, est.value + z * stderr
+
+
+# ---------------------------------------------------------------------------
+# Variational subsampling (VerdictDB): CIs from the same segment reductions
+# ---------------------------------------------------------------------------
+# The sample's rows are partitioned into B disjoint subsamples by a hash of
+# their slot index. A scan with segment ids g·B + j (n_groups·B segments)
+# yields per-(group, subsample) partial moments in ONE pass; the full-scan
+# moments are recovered by summing the B axis (segment sums are additive), so
+# the point estimate is identical to the plain scan and the CI costs only the
+# wider segment reduction — a small constant factor, even at batch size 32.
+# Each subsample is itself an HT sample with inclusion rate r_i/B, so B·(its
+# HT total) estimates the population total; the spread of the B replicate
+# estimates θ_j gives Var(θ̂) ≈ Var_j(θ_j)/B (subsample size n/B ⇒ the n_s/n
+# scaling of classical subsampling is exactly 1/B).
+
+N_SUBSAMPLES = 32
+
+
+def fold_subsamples(mom: GroupedMoments, n_groups: int,
+                    n_subsamples: int) -> GroupedMoments:
+    """[..., G·B] subsampled leaves → [..., G] full-scan moments. Exact up to
+    float summation order: the B partial sums re-add what one segment sum
+    would have accumulated."""
+    def fold(x):
+        return x.reshape(*x.shape[:-1], n_groups, n_subsamples).sum(axis=-1)
+    return jax.tree.map(fold, mom)
+
+
+def subsample_replicates(agg: AggOp, mom: GroupedMoments, n_groups: int,
+                         n_subsamples: int, *,
+                         quantile_values: jax.Array | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Per-(group, subsample) replicate estimates θ_j → (theta[G,B],
+    valid[G,B]). COUNT/SUM totals are scaled by B (each subsample's HT rate
+    is r/B); AVG is a scale-free ratio; QUANTILE replicates come from the
+    per-subsample histogram quantiles the executor computed in the same
+    pass. Empty subsamples (no selected row) are masked out."""
+    b = n_subsamples
+
+    def rs(x):
+        return x.reshape(*x.shape[:-1], n_groups, b)
+
+    nsel, wsum, wxsum = rs(mom.n), rs(mom.wsum), rs(mom.wxsum)
+    valid = nsel > 0.0
+    if agg is AggOp.COUNT:
+        theta = b * wsum
+    elif agg is AggOp.SUM:
+        theta = b * wxsum
+    elif agg is AggOp.AVG:
+        theta = wxsum / jnp.maximum(wsum, 1e-12)
+    elif agg is AggOp.QUANTILE:
+        assert quantile_values is not None
+        theta = rs(quantile_values)
+    else:
+        raise ValueError(f"unsupported aggregate {agg}")
+    return theta, valid
+
+
+def subsampling_variance(theta: jax.Array, valid: jax.Array) -> jax.Array:
+    """Var(θ̂) from the replicate spread: sample variance of the θ_j over
+    the non-empty subsamples, scaled by 1/B_valid. Groups with < 2 live
+    replicates report 0 variance (no spread information — the engine only
+    reaches them for near-empty selections)."""
+    v = valid.astype(theta.dtype)
+    bv = jnp.maximum(v.sum(axis=-1), 1.0)
+    mean = (theta * v).sum(axis=-1) / bv
+    dev2 = ((theta - mean[..., None]) ** 2) * v
+    var_j = dev2.sum(axis=-1) / jnp.maximum(bv - 1.0, 1.0)
+    return jnp.where(v.sum(axis=-1) > 1.0, var_j / bv, 0.0)
+
+
+def subsampling_estimate(agg: AggOp, mom_sub: GroupedMoments, n_groups: int,
+                         n_subsamples: int, *,
+                         quantile_value: jax.Array | None = None,
+                         quantile_density: jax.Array | None = None,
+                         quantile_values_sub: jax.Array | None = None,
+                         q: float = 0.5) -> Estimate:
+    """Point estimate from the FOLDED moments (identical to the plain scan)
+    with variance from the subsample replicate spread."""
+    full = fold_subsamples(mom_sub, n_groups, n_subsamples)
+    base = estimate(agg, full, quantile_value=quantile_value,
+                    quantile_density=quantile_density, q=q)
+    theta, valid = subsample_replicates(
+        agg, mom_sub, n_groups, n_subsamples,
+        quantile_values=quantile_values_sub)
+    return Estimate(base.value, subsampling_variance(theta, valid), base.n)

@@ -737,6 +737,170 @@ def make_batched_query_fn(struct,
 
 
 # ---------------------------------------------------------------------------
+# Variational-subsampling scans (VerdictDB-style CIs, estimators.py §subsamp.)
+# ---------------------------------------------------------------------------
+#
+# The CI path needs per-(group, subsample) partial moments; they come out of
+# the SAME segment reduction the plain scan runs, just over n_groups·B
+# segments with ids g·B + j. Subsample membership j is a pure function of
+# the row's linear slot index — hashed, NOT idx % B, so membership is
+# decorrelated from entry-key order (consecutive slots of a stratum share
+# nearly-sorted entry keys; a modulo would give systematically balanced
+# subsamples and bias the replicate spread low). These are jnp-path programs:
+# subsampled scans are the CI/verification path, and fall back from Pallas.
+
+_SUBSAMPLE_HASH_SHIFT = 7   # decouple from shard_valid_mask's low-bit use
+
+
+def subsample_codes(n_shards: int, n_local: int,
+                    n_subsamples: int) -> np.ndarray:
+    """int32[S, n_local] deterministic subsample id per slot, hashed from the
+    linear slot index (slot j ↔ shard j % S, local j // S). Stable across
+    appends that keep the padded shape (a slot keeps its subsample for life),
+    so subsampled programs cache exactly like the plain scans."""
+    lin = (np.arange(n_local, dtype=np.uint32)[None, :] * np.uint32(n_shards)
+           + np.arange(n_shards, dtype=np.uint32)[:, None])
+    h = (lin * np.uint32(_SHARD_HASH_MULT)) >> np.uint32(_SUBSAMPLE_HASH_SHIFT)
+    return (h % np.uint32(n_subsamples)).astype(np.int32)
+
+
+def make_subsampled_query_fn(struct, value_col: str | None,
+                             group_col: str | None, n_groups: int,
+                             n_subsamples: int, mesh: Mesh | None = None,
+                             data_axes: tuple[str, ...] = ("data",)):
+    """make_query_fn analogue with per-subsample segments. Returns jitted
+    fn(k, pred_vals, sub, cols, unit, strat, freq_table, valid) ->
+    GroupedMoments with [n_groups·B] leaves (group-major: segment g·B + j).
+    `sub` is the subsample_codes array, a traced arg like the block."""
+    b = n_subsamples
+
+    def shard_fn(k, pred_vals, sub, cols, unit, strat, ftab, valid):
+        values = (cols[value_col].astype(jnp.float32)
+                  if value_col is not None else jnp.ones_like(unit))
+        gcodes = (cols[group_col].astype(jnp.int32)
+                  if group_col is not None else jnp.zeros(unit.shape, jnp.int32))
+        freq, ek = derive_ht(unit, strat, ftab)
+        mask = eval_pred(struct, cols, pred_vals) & valid & (ek < k)
+        rates = jnp.minimum(1.0, k / freq)
+        g = gcodes * b + sub
+        return est_lib.grouped_moments(values, rates, mask, g, n_groups * b)
+
+    if mesh is None:
+        def fn(k, pred_vals, sub, cols, unit, strat, freq_table, valid):
+            mom = jax.vmap(lambda sb, c, u, s, v: shard_fn(
+                k, pred_vals, sb, c, u, s, freq_table, v)
+            )(sub, cols, unit, strat, valid)
+            return jax.tree.map(lambda x: x.sum(axis=0), mom)
+        return jax.jit(fn)
+
+    pspec = P(data_axes)
+
+    def fn(k, pred_vals, sub, cols, unit, strat, freq_table, valid):
+        inner = _shard_map(
+            lambda sb, c, u, s, ft, v: _merge_psum(
+                jax.tree.map(lambda x: x[0],
+                             jax.vmap(lambda sbb, cc, uu, ss, vv: shard_fn(
+                                 k, pred_vals, sbb, cc, uu, ss, ft, vv)
+                             )(sb, c, u, s, v)),
+                data_axes),
+            mesh=mesh,
+            in_specs=(pspec, pspec, pspec, pspec, P(), pspec),
+            out_specs=P(),
+        )
+        return inner(sub, cols, unit, strat, freq_table, valid)
+    return jax.jit(fn)
+
+
+def make_batched_subsampled_query_fn(struct, value_col: str | None,
+                                     group_col: str | None, n_groups: int,
+                                     n_subsamples: int,
+                                     mesh: Mesh | None = None,
+                                     data_axes: tuple[str, ...] = ("data",)):
+    """Batched analogue: fn(ks, pred_consts, sub, cols, unit, strat,
+    freq_table, valid) -> GroupedMoments [Q, n_groups·B]. One family pass
+    serves Q queries' point estimates AND their subsampling CIs: relative to
+    make_batched_query_fn the only extra cost is the B-times-wider segment
+    reduction — the streamed bytes are identical."""
+    b = n_subsamples
+
+    def shard_fn(ks, pred_consts, sub, cols, unit, strat, ftab, valid):
+        values = (cols[value_col].astype(jnp.float32)
+                  if value_col is not None else jnp.ones_like(unit))
+        gcodes = (cols[group_col].astype(jnp.int32)
+                  if group_col is not None else jnp.zeros(unit.shape, jnp.int32))
+        freq, ek = derive_ht(unit, strat, ftab)
+        g = gcodes * b + sub
+
+        def one(k, consts):
+            mask = eval_pred_flat(struct, cols, consts) & valid & (ek < k)
+            rates = jnp.minimum(1.0, k / freq)
+            return est_lib.grouped_moments(values, rates, mask, g,
+                                           n_groups * b)
+        return jax.vmap(one)(ks, pred_consts)
+
+    if mesh is None:
+        def fn(ks, pred_consts, sub, cols, unit, strat, freq_table, valid):
+            mom = jax.vmap(lambda sb, c, u, s, v: shard_fn(
+                ks, pred_consts, sb, c, u, s, freq_table, v)
+            )(sub, cols, unit, strat, valid)
+            return jax.tree.map(lambda x: x.sum(axis=0), mom)
+        return jax.jit(fn)
+
+    pspec = P(data_axes)
+
+    def fn(ks, pred_consts, sub, cols, unit, strat, freq_table, valid):
+        def per_shard(sb, c, u, s, ft, v):
+            mom = jax.tree.map(
+                lambda x: x[0],
+                jax.vmap(lambda sbb, cc, uu, ss, vv: shard_fn(
+                    ks, pred_consts, sbb, cc, uu, ss, ft, vv))(sb, c, u, s, v))
+            leaves, treedef = jax.tree.flatten(mom)
+            merged = jax.lax.psum(jnp.stack(leaves), data_axes)
+            return jax.tree.unflatten(treedef, list(merged))
+        inner = _shard_map(per_shard, mesh=mesh,
+                           in_specs=(pspec, pspec, pspec, pspec, P(), pspec),
+                           out_specs=P())
+        return inner(sub, cols, unit, strat, freq_table, valid)
+    return jax.jit(fn)
+
+
+def make_subsampled_quantile_fn(struct, value_col: str,
+                                group_col: str | None, n_groups: int,
+                                n_subsamples: int,
+                                mesh: Mesh | None = None,
+                                data_axes: tuple[str, ...] = ("data",),
+                                n_bins: int = 256):
+    """QUANTILE subsampling program (jnp flat layout like make_quantile_fn).
+
+    Returns jitted fn(k, pred_vals, level, sub, cols, unit, strat,
+    freq_table, valid) -> (mom_sub [G·B], qval[G], dens[G], qsub[G·B]):
+    the per-subsample moments, the FULL-sample histogram quantile (point
+    estimate + density, same numerics as the plain path), and per-subsample
+    replicate quantiles — all from one streaming pass over the prefix."""
+    b = n_subsamples
+
+    def fn(k, pred_vals, level, sub, cols, unit, strat, freq_table, valid):
+        flat = {c: v.reshape(-1) for c, v in cols.items()}
+        fqf, ekf = derive_ht(unit.reshape(-1), strat.reshape(-1), freq_table)
+        mask = eval_pred(struct, flat, pred_vals) & valid.reshape(-1) \
+            & (ekf < k)
+        rates = jnp.minimum(1.0, k / fqf)
+        w = mask.astype(jnp.float32) / rates
+        g = (flat[group_col].astype(jnp.int32) if group_col
+             else jnp.zeros(ekf.shape, jnp.int32))
+        g_sub = g * b + sub.reshape(-1)
+        values = flat[value_col].astype(jnp.float32)
+        mom_sub = est_lib.grouped_moments(values, rates, mask, g_sub,
+                                          n_groups * b)
+        qval, dens = grouped_quantile(values, w, g, n_groups, level,
+                                      n_bins=n_bins)
+        qsub, _ = grouped_quantile(values, w, g_sub, n_groups * b, level,
+                                   n_bins=n_bins)
+        return mom_sub, qval, dens, qsub
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
 # Fault-domain sharded scans (replicated logical shards over a striped block)
 # ---------------------------------------------------------------------------
 #

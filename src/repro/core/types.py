@@ -250,10 +250,27 @@ class AggOp(enum.Enum):
 @dataclasses.dataclass(frozen=True)
 class ErrorBound:
     """`ERROR WITHIN eps AT CONFIDENCE conf` (paper §2). eps is relative
-    (fraction of the estimate) when `relative` else absolute."""
+    (fraction of the estimate) when `relative` else absolute.
+
+    `strict` (BlinkQL `... OR FAIL`) makes the a-priori contract a hard
+    one: when the pilot cannot certify the bound on any family and the
+    exact fallback is unavailable, the engine raises BoundUnreachableError
+    instead of serving a best-effort answer annotated bound_met=False."""
     eps: float
     confidence: float = 0.95
     relative: bool = True
+    strict: bool = False
+
+
+class BoundUnreachableError(RuntimeError):
+    """Typed refusal for a strict ERROR WITHIN contract: the pilot projected
+    that no available resolution/family meets the bound and no exact
+    fallback may run. Carries the best predicted half-width (in the bound's
+    units) so clients can renegotiate eps instead of guessing."""
+
+    def __init__(self, msg: str, predicted_half_width: float | None = None):
+        super().__init__(msg)
+        self.predicted_half_width = predicted_half_width
 
 
 @dataclasses.dataclass(frozen=True)
@@ -292,7 +309,7 @@ class Query:
         bound = self.bound
         if isinstance(bound, ErrorBound):
             bound = ErrorBound(float(bound.eps), float(bound.confidence),
-                               bool(bound.relative))
+                               bool(bound.relative), bool(bound.strict))
         elif isinstance(bound, TimeBound):
             bound = TimeBound(float(bound.seconds), float(bound.confidence))
         return dataclasses.replace(
@@ -348,6 +365,18 @@ class Answer:
     shards_lost: int = 0          # fault-domain shards with no live replica
     shards_total: int = 0         # logical shards the scan ran over (0: unsharded)
     staleness_s: float = 0.0      # age of a stale-cache serve (0: fresh)
+    # A-priori ERROR WITHIN contract provenance (docs/SERVICE.md). For an
+    # ErrorBound query, `certified` says whether the pilot certified the
+    # chosen (family, K) BEFORE the main scan, and `bound_met` is the
+    # contract verdict: certified AND the realized CI half-width (after any
+    # degradation widening) sits inside eps. An uncertified best-effort
+    # answer is always bound_met=False — never a silent claim. None on
+    # unbounded / TimeBound queries. `predicted_half_width` is the pilot's
+    # projected half-width at the chosen K, in the bound's units (a relative
+    # fraction for relative bounds, absolute otherwise); 0.0 for exact scans.
+    bound_met: bool | None = None
+    certified: bool | None = None
+    predicted_half_width: float | None = None
 
     @property
     def max_rel_err(self) -> float:

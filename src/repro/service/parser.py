@@ -335,7 +335,16 @@ def _parse_bound(p: _Parser) -> ErrorBound | TimeBound | None:
             eps, relative = eps / 100.0, True
         if eps <= 0.0:
             raise BlinkQLError(f"error bound must be positive, got {eps}")
-        return ErrorBound(eps, _parse_confidence(p), relative)
+        conf = _parse_confidence(p)
+        # `... OR FAIL`: strict contract — the engine must certify the bound
+        # a-priori (or fall back to exact) and raises BoundUnreachableError
+        # instead of serving a best-effort answer (docs/SERVICE.md).
+        strict = False
+        if p.at_keyword("OR"):
+            p.take()
+            p.expect_keyword("FAIL")
+            strict = True
+        return ErrorBound(eps, conf, relative, strict)
     if p.at_keyword("WITHIN"):
         p.take()
         seconds = p.expect_number("the time bound")

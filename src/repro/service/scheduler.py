@@ -70,7 +70,7 @@ from collections import deque
 from concurrent.futures import Future
 from typing import Sequence
 
-from repro.core.types import Answer, Query, TimeBound
+from repro.core.types import Answer, ErrorBound, Query, TimeBound
 from repro.fault import inject
 from repro.fault.inject import FaultError
 from repro.fault.supervisor import RetryLoop
@@ -463,6 +463,14 @@ class BlinkQLService:
             if stale is not None:
                 ans, age = stale
                 if age <= self.config.stale_max_s:
+                    # A stale answer was certified against data that has
+                    # since changed: the contract provenance cannot survive
+                    # the serve, so an ErrorBound claim is demoted (never
+                    # silently kept); unbounded/TimeBound stay None.
+                    if isinstance(q.bound, ErrorBound):
+                        return dataclasses.replace(
+                            ans, degraded=True, staleness_s=age,
+                            bound_met=False, certified=False)
                     return dataclasses.replace(ans, degraded=True,
                                                staleness_s=age)
         final = DegradedServiceError(

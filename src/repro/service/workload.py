@@ -69,8 +69,15 @@ def _met_bound(q: Query, answer: Answer,
                elapsed_s: float | None = None) -> bool | None:
     """Did the answer meet its a-priori contract? None when unbounded. The
     contract is on the CI half-width z·stderr (what required_n_for_error
-    targets), not the bare stderr."""
+    targets), not the bare stderr.
+
+    ErrorBound answers from the contract engine carry their own verdict
+    (Answer.bound_met: certified a-priori AND realized post-hoc) — trust it
+    when present; the post-hoc recomputation below remains for answers that
+    predate the contract path (stale cache entries, unions)."""
     if isinstance(q.bound, ErrorBound):
+        if answer.bound_met is not None:
+            return answer.bound_met
         z = est_lib.z_value(q.bound.confidence)
         if q.bound.relative:
             half = max((abs(z * g.stderr / g.estimate)

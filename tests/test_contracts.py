@@ -1,0 +1,204 @@
+"""A-priori ERROR WITHIN contracts: pilot certification, variational-
+subsampling CIs vs the closed-form Table-2 formulas, QUANTILE effective
+sample size, and batch/sequential contract parity (docs/SERVICE.md)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimators as est_lib
+from repro.core import table as table_lib
+from repro.core.engine import BlinkDB, EngineConfig
+from repro.core.estimators import GroupedMoments
+from repro.core.types import (AggOp, Atom, CmpOp, ErrorBound, Predicate,
+                              Query, QueryTemplate)
+from repro.data import synth
+
+
+@pytest.fixture(scope="module")
+def db():
+    tbl = table_lib.from_columns("sessions",
+                                 synth.sessions_table(80_000, seed=11))
+    db = BlinkDB(EngineConfig(k1=1500.0, c=2.0, m=4, uniform_fraction=0.3))
+    db.register_table("sessions", tbl)
+    templates = [QueryTemplate(frozenset({"OS"}), 0.5),
+                 QueryTemplate(frozenset({"City"}), 0.5)]
+    db.build_samples("sessions", templates, storage_budget_fraction=0.5)
+    return db
+
+
+# -- certification ------------------------------------------------------------
+
+def test_certified_answer_carries_contract_provenance(db):
+    """A reachable ERROR WITHIN must come back certified a-priori with the
+    pilot's predicted half-width inside eps, and the realized verdict set."""
+    q = Query("sessions", AggOp.AVG, value_column="SessionTime",
+              group_by=("OS",), bound=ErrorBound(0.05, 0.95, relative=True))
+    ans = db.query(q)
+    assert ans.certified is True
+    assert ans.bound_met is True
+    assert ans.predicted_half_width is not None
+    assert ans.predicted_half_width <= 0.05 + 1e-9
+    # realized half-width honors the contract too
+    z = est_lib.z_value(0.95)
+    for g in ans.groups:
+        if g.exact or not g.estimate:
+            continue
+        assert abs(z * g.stderr / g.estimate) <= 0.05 + 1e-9
+
+
+def test_unbounded_answer_has_no_contract_fields(db):
+    ans = db.query(Query("sessions", AggOp.COUNT, group_by=("OS",)))
+    assert ans.bound_met is None
+    assert ans.certified is None
+    assert ans.predicted_half_width is None
+
+
+# -- variational subsampling vs closed form -----------------------------------
+
+def _both_ci_methods(db, q):
+    """Run q under closed-form and subsampling CIs; restore config."""
+    old = db.config.ci_method
+    try:
+        db.config.ci_method = "closed"
+        closed = db.query(q)
+        db.config.ci_method = "subsampling"
+        sub = db.query(q)
+    finally:
+        db.config.ci_method = old
+    return closed, sub
+
+
+@pytest.mark.parametrize("agg,vcol", [(AggOp.COUNT, None),
+                                      (AggOp.SUM, "SessionTime"),
+                                      (AggOp.AVG, "SessionTime")])
+def test_subsampling_ci_agrees_with_closed_form(db, agg, vcol):
+    """Point estimates are IDENTICAL (the fold re-adds the same segment sums)
+    and the replicate-spread stderr tracks the Table-2 closed form within the
+    sampling noise of B=32 replicates."""
+    q = Query("sessions", agg, value_column=vcol, group_by=("OS",),
+              bound=ErrorBound(0.2, 0.95, relative=True))
+    closed, sub = _both_ci_methods(db, q)
+    c_by = {g.key: g for g in closed.groups}
+    assert set(c_by) == {g.key: g for g in sub.groups}.keys()
+    for g in sub.groups:
+        c = c_by[g.key]
+        assert g.estimate == pytest.approx(c.estimate, rel=1e-4)
+        if c.exact or g.exact:
+            continue
+        assert c.stderr > 0 and g.stderr > 0
+        ratio = g.stderr / c.stderr
+        assert 0.45 <= ratio <= 2.2, (g.key, ratio)
+
+
+def test_subsampling_quantile_validates_closed_form_n_eff(db):
+    """The QUANTILE closed form (q(1-q)/(n_eff f²), with the Kish effective
+    sample size) and the per-subsample histogram-quantile replicates are two
+    independent routes to the same CI — they must land within a small factor
+    of each other. This is the regression test for the old raw-n bug: with
+    raw n the closed form understates the stderr by ~sqrt(n/n_eff)."""
+    q = Query("sessions", AggOp.QUANTILE, value_column="SessionTime",
+              predicate=Predicate.where(Atom("OS", CmpOp.EQ, "os0")),
+              bound=ErrorBound(0.2, 0.95, relative=True))
+    closed, sub = _both_ci_methods(db, q)
+    (gc,), (gs,) = closed.groups, sub.groups
+    assert gs.estimate == pytest.approx(gc.estimate, rel=0.02)
+    assert gc.stderr > 0 and gs.stderr > 0
+    ratio = gs.stderr / gc.stderr
+    assert 0.3 <= ratio <= 3.0, ratio
+
+
+def test_quantile_variance_uses_effective_sample_size():
+    """Hand-built moments with heterogeneous HT weights: the QUANTILE
+    variance must use n_eff = (Σw)²/Σw², not the raw selected-row count."""
+    w = np.array([1.0, 1.0, 4.0, 4.0])
+    mom = GroupedMoments(
+        n=jnp.array([4.0]),
+        wsum=jnp.array([w.sum()]),
+        wxsum=jnp.array([0.0]), wx2sum=jnp.array([0.0]),
+        var_count=jnp.array([(w * w - w).sum()]),   # Σ(w²-w)
+        var_sum=jnp.array([0.0]), var_sum2=jnp.array([0.0]))
+    n_eff = w.sum() ** 2 / (w * w).sum()            # 100/34 ≈ 2.94 < 4
+    assert float(est_lib.effective_sample_size(mom)[0]) == pytest.approx(n_eff)
+    est = est_lib.estimate(AggOp.QUANTILE, mom,
+                           quantile_value=jnp.array([5.0]),
+                           quantile_density=jnp.array([1.0]), q=0.5)
+    assert float(est.variance[0]) == pytest.approx(0.25 / n_eff)
+    # the raw-n bug would report the smaller 0.25/4
+    assert float(est.variance[0]) > 0.25 / 4.0
+
+
+def test_effective_sample_size_equals_raw_n_for_uniform_weights():
+    """Full-rate uniform sampling (w≡1): var_count = 0, n_eff == Σw == n."""
+    mom = GroupedMoments(
+        n=jnp.array([7.0]), wsum=jnp.array([7.0]),
+        wxsum=jnp.array([0.0]), wx2sum=jnp.array([0.0]),
+        var_count=jnp.array([0.0]),
+        var_sum=jnp.array([0.0]), var_sum2=jnp.array([0.0]))
+    assert float(est_lib.effective_sample_size(mom)[0]) == pytest.approx(7.0)
+
+
+def test_pilot_inflation_properties():
+    """The finite-sample inflation is >1, shrinks with pilot size, and grows
+    with the demanded confidence — certifying from a small pilot must cost
+    more headroom than from a large one."""
+    i_small = float(est_lib.pilot_inflation(jnp.array(30.0), 0.95))
+    i_large = float(est_lib.pilot_inflation(jnp.array(3000.0), 0.95))
+    i_conf = float(est_lib.pilot_inflation(jnp.array(30.0), 0.99))
+    assert i_small > i_large > 1.0
+    assert i_conf > i_small
+    assert i_large < 1.1
+
+
+# -- batch / sequential parity ------------------------------------------------
+
+def test_batch_matches_sequential_contracts(db):
+    qs = [
+        Query("sessions", AggOp.AVG, value_column="SessionTime",
+              group_by=("OS",), bound=ErrorBound(0.05, 0.95, relative=True)),
+        Query("sessions", AggOp.COUNT, group_by=("City",),
+              bound=ErrorBound(0.15, 0.95, relative=True)),
+        Query("sessions", AggOp.SUM, value_column="SessionTime",
+              predicate=Predicate.where(Atom("OS", CmpOp.EQ, "os1")),
+              bound=ErrorBound(0.1, 0.95, relative=True)),
+    ]
+    seq = [db.query(q) for q in qs]
+    bat = db.query_batch(qs)
+    for s, b in zip(seq, bat):
+        assert b.sample_phi == s.sample_phi
+        assert b.sample_k == s.sample_k
+        assert b.certified == s.certified
+        assert b.bound_met == s.bound_met
+        s_by = {g.key: g for g in s.groups}
+        assert {g.key for g in b.groups} == set(s_by)
+        for g in b.groups:
+            assert g.estimate == pytest.approx(s_by[g.key].estimate,
+                                               rel=1e-4)
+
+
+def test_batch_parity_under_subsampling(db):
+    """query_batch with ci_method=subsampling folds the same moments: point
+    estimates match the sequential subsampled path exactly."""
+    qs = [
+        Query("sessions", AggOp.AVG, value_column="SessionTime",
+              group_by=("OS",), bound=ErrorBound(0.05, 0.95, relative=True)),
+        Query("sessions", AggOp.COUNT, group_by=("OS",),
+              bound=ErrorBound(0.15, 0.95, relative=True)),
+    ]
+    old = db.config.ci_method
+    try:
+        db.config.ci_method = "subsampling"
+        seq = [db.query(q) for q in qs]
+        bat = db.query_batch(qs)
+    finally:
+        db.config.ci_method = old
+    for s, b in zip(seq, bat):
+        assert b.certified == s.certified
+        s_by = {g.key: g for g in s.groups}
+        for g in b.groups:
+            assert g.estimate == pytest.approx(s_by[g.key].estimate,
+                                               rel=1e-4)
+            if not g.exact:
+                assert g.stderr == pytest.approx(s_by[g.key].stderr,
+                                                 rel=1e-4, abs=1e-9)

@@ -129,17 +129,23 @@ def _prefix_inputs(fam, k, value_col="SessionTime", group_col="OS"):
     return x, rates, g
 
 
-def _bootstrap_quantiles(x, w, q=0.5, n_boot=40, seed=0):
-    """Weighted-quantile bootstrap percentile band (2.5/50/97.5)."""
-    rng = np.random.default_rng(seed)
-    n = len(x)
+def _subsampling_quantile_band(x, w, q=0.5, n_sub=32):
+    """Variational-subsampling weighted-quantile band (2.5/50/97.5): rows are
+    hash-partitioned into n_sub DISJOINT subsamples (the same multiplicative
+    hash the executor's subsample_codes uses), each contributing one weighted
+    quantile replicate. Replaces the old bootstrap band — one pass over the
+    data, fully deterministic, no RNG state to thread through tests."""
+    sub = ((np.arange(len(x), dtype=np.uint64) * np.uint64(2654435761))
+           >> np.uint64(7)) % np.uint64(n_sub)
     out = []
-    for _ in range(n_boot):
-        take = rng.integers(0, n, n)
-        xx, ww = x[take], w[take]
+    for j in range(n_sub):
+        m = sub == j
+        if not m.any():
+            continue
+        xx, ww = x[m], w[m]
         s = np.argsort(xx, kind="stable")
         cw = np.cumsum(ww[s])
-        out.append(xx[s][min(np.searchsorted(cw, q * cw[-1]), n - 1)])
+        out.append(xx[s][min(np.searchsorted(cw, q * cw[-1]), len(xx) - 1)])
     return np.percentile(out, [2.5, 50.0, 97.5])
 
 
@@ -147,7 +153,7 @@ def test_mutated_family_estimators_match_clean_rebuild():
     """Estimator-under-mutation regression: after a delete/update/append
     churn, ALL SEVEN scan statistics (the GroupedMoments leaves), the
     closed-form estimates + CIs for every aggregate, the histogram quantile,
-    and bootstrap quantile bands computed from the mutated family match a
+    and subsampling quantile bands computed from the mutated family match a
     clean from-scratch rebuild within float tolerance, at every resolution."""
     from test_mutations import MutationMirror, _apply_op, _mk_db
     from repro.core import executor as exec_lib
@@ -171,7 +177,7 @@ def test_mutated_family_estimators_match_clean_rebuild():
             quants.append(exec_lib.grouped_quantile(
                 jnp.asarray(x), jnp.asarray(1.0 / rates), jnp.asarray(g),
                 n_groups, 0.5))
-            boots.append(_bootstrap_quantiles(
+            boots.append(_subsampling_quantile_band(
                 x.astype(np.float64), 1.0 / rates.astype(np.float64)))
         # all seven sufficient statistics, leaf by leaf
         leaves_a = jax.tree.leaves(moms[0])
@@ -203,7 +209,7 @@ def test_mutated_family_estimators_match_clean_rebuild():
         for ca, cb in zip(est_lib.ci(eqa, 0.95), est_lib.ci(eqb, 0.95)):
             np.testing.assert_allclose(np.asarray(ca), np.asarray(cb),
                                        rtol=1e-5, atol=1e-5)
-        # bootstrap quantile bands (same seeded resamples, same rows)
+        # subsampling quantile bands (same hash partition, same rows)
         np.testing.assert_allclose(boots[0], boots[1], rtol=1e-7)
 
 

@@ -1,5 +1,8 @@
 """§4.1 family selection rules, §4.2 latency profiles, §4.5 maintenance."""
+import types
+
 import numpy as np
+import pytest
 
 from repro.core import elp as elp_lib
 from repro.core import table as table_lib
@@ -7,8 +10,9 @@ from repro.core.engine import BlinkDB, EngineConfig
 from repro.core.maintenance import (MaintenanceConfig, SampleMaintainer,
                                     distribution_drift)
 from repro.core.selection import rewrite_disjuncts, select_family
-from repro.core.types import (AggOp, Atom, CmpOp, Conjunction, ErrorBound,
-                              Predicate, Query, QueryTemplate)
+from repro.core.types import (AggOp, Atom, BoundUnreachableError, CmpOp,
+                              Conjunction, ErrorBound, Predicate, Query,
+                              QueryTemplate)
 from repro.data import synth
 
 
@@ -45,6 +49,94 @@ def test_latency_model_fit_and_inversion():
     assert abs(m.a - 1e-5) < 2e-6
     assert m.max_rows_within(0.041) >= 3500
     assert m.predict(4000) <= 0.05
+
+
+def test_latency_fit_refits_negative_intercept_under_constraint():
+    """Probe timings implying a negative intercept: the unconstrained lstsq
+    optimum is infeasible, so the NNLS optimum lies on the b=0 face — the
+    slope must be REFIT through the origin, not kept from the fit that used
+    the discarded intercept (the old independent clamp kept a slope biased
+    by exactly that intercept, mis-projecting max_rows_within)."""
+    rows = [1000.0, 2000.0]
+    times = [0.005, 0.012]            # exact 2-pt fit: a=7e-6, b=-2e-3 < 0
+    m = elp_lib.fit_latency(rows, times)
+    assert m.a >= 0.0 and m.b >= 0.0
+    a0 = float(np.dot(rows, times) / np.dot(rows, rows))   # b=0 refit
+    assert m.a == pytest.approx(a0)
+    assert m.b == 0.0
+    # the biased slope the old clamp kept (7e-6) under-admits by ~17%
+    assert m.max_rows_within(0.029) == pytest.approx(0.029 / a0)
+
+
+def test_latency_fit_negative_slope_face_is_finite_mean():
+    """Noisy flat timings can fit a negative slope; the a=0 face must carry
+    the mean (its own least-squares optimum), keeping predict() sane."""
+    rows = [1000.0, 2000.0, 4000.0]
+    times = [0.010, 0.009, 0.0095]
+    m = elp_lib.fit_latency(rows, times)
+    assert m.a >= 0.0 and m.b >= 0.0
+    assert m.a == 0.0 and m.b == pytest.approx(np.mean(times))
+
+
+def test_pick_k_for_error_unreachable_returns_none():
+    """No K in the family projects enough selected rows — or the probe saw
+    none at all: the ELP must say so (None), not silently hand back a K
+    that busts the bound."""
+    fam = types.SimpleNamespace(ks=(100.0, 50.0))
+    assert elp_lib.pick_k_for_error(fam, [10.0], [1e6], 50.0) is None
+    assert elp_lib.pick_k_for_error(fam, [0.0], [100.0], 50.0) is None
+    assert elp_lib.pick_k_for_error(fam, [10.0], [15.0], 50.0) == 100.0
+
+
+def _tiny_db(**cfg):
+    tbl = table_lib.from_columns("s", synth.sessions_table(8000, seed=3))
+    db = BlinkDB(EngineConfig(k1=200.0, m=2, **cfg))
+    db.register_table("s", tbl)
+    db.build_samples("s", [QueryTemplate(frozenset({"City"}), 1.0)],
+                     storage_budget_fraction=0.4)
+    return db
+
+
+def test_unreachable_bound_exact_fallback_not_silent():
+    """Tiny family, absurd ERROR WITHIN: no K can meet it. The engine must
+    walk the ladder to the exact base-table scan (bound met by
+    construction), never silently return fam.ks[0] with a busted bound."""
+    db = _tiny_db()
+    q = Query("s", AggOp.AVG, value_column="SessionTime",
+              bound=ErrorBound(0.0002, 0.95))
+    ans = db.query(q)
+    assert ans.sample_phi == ("<exact>",)
+    assert ans.certified is True and ans.bound_met is True
+    assert ans.predicted_half_width == 0.0
+    assert all(g.exact for g in ans.groups)
+
+
+def test_unreachable_bound_annotated_when_ladder_disabled():
+    """Same unreachable bound with escalation AND exact fallback disabled:
+    the best-effort answer must carry certified=False / bound_met=False and
+    the predicted half-width that busts the bound — the typed replacement
+    for the old silent fam.ks[0] return."""
+    db = _tiny_db(escalate_on_unreachable=False, exact_fallback=False)
+    q = Query("s", AggOp.AVG, value_column="SessionTime",
+              bound=ErrorBound(0.0002, 0.95))
+    ans = db.query(q)
+    assert ans.sample_phi != ("<exact>",)
+    assert ans.certified is False and ans.bound_met is False
+    assert ans.predicted_half_width is not None
+    assert ans.predicted_half_width > 0.0002
+
+
+def test_unreachable_strict_bound_raises_typed_refusal():
+    """`... OR FAIL` on an unreachable bound with no fallback: a typed
+    BoundUnreachableError carrying the predicted half-width, so clients can
+    renegotiate eps instead of guessing."""
+    db = _tiny_db(escalate_on_unreachable=False, exact_fallback=False)
+    q = Query("s", AggOp.AVG, value_column="SessionTime",
+              bound=ErrorBound(0.0002, 0.95, relative=True, strict=True))
+    with pytest.raises(BoundUnreachableError) as ei:
+        db.query(q)
+    assert ei.value.predicted_half_width is not None
+    assert ei.value.predicted_half_width > 0.0002
 
 
 def test_drift_metric():
