@@ -38,7 +38,7 @@ import sys
 
 BENCH_FILES = ("BENCH_batch.json", "BENCH_error.json", "BENCH_fault.json",
                "BENCH_ingest.json", "BENCH_kernel.json",
-               "BENCH_mutation.json", "BENCH_serve.json")
+               "BENCH_mutation.json", "BENCH_obs.json", "BENCH_serve.json")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +143,14 @@ GATES = [
     Gate("BENCH_error.json", "error_coverage", "n_claims", floor=1.0),
     Gate("BENCH_error.json", "error_ci_cost", "ci_cost_ratio",
          higher=False, ceiling=3.0),
+    # ---- observability plane: the overhead contract. qps_ratio is a
+    # same-machine ratio of traced (sample_every=1, all-contract workload —
+    # the worst case) vs trace=False serving throughput: tracing may cost
+    # at most ~5%. behavior_drift is EXACT — tracing is metadata; a single
+    # ULP of estimate movement means instrumentation leaked into compute.
+    Gate("BENCH_obs.json", "obs_overhead_s*", "qps_ratio", floor=0.95),
+    Gate("BENCH_obs.json", "obs_overhead_s*", "behavior_drift",
+         higher=False, ceiling=0.0),
 ]
 
 

@@ -1,0 +1,193 @@
+"""Observability overhead gate: traced vs untraced serving throughput.
+
+The tracing/metrics plane (docs/OBSERVABILITY.md) promises to be near-free:
+`span()` with no listener is a thread-local read + a singleton, metrics are
+one tiny per-child lock, and sampling bounds the recording cost. This
+benchmark PROVES it on the serving path, worst case first:
+
+* **traced**: `BlinkQLService` with `trace_sample_every=1` and an ERROR
+  WITHIN workload — every single query is a contract query, so every query
+  records a full span tree (parse → admit → plan → scan → estimate) and
+  every answer gets a traced copy attached;
+* **untraced**: the same service with `trace=False` — the sampling decision
+  short-circuits and engine spans hit the no-listener fast path.
+
+Both disciplines drive the SAME warm engine from 32 concurrent sessions
+(cache disabled: memoization would hide the per-query cost), interleaved to
+cancel container clock drift. Reported:
+
+* `qps_ratio` = traced / untraced queries-per-second — the regression gate
+  floor is 0.95 (tracing may cost at most ~5%);
+* `behavior_drift` = max |estimate difference| between traced and untraced
+  answers to identical queries — gated at 0.0: tracing is pure metadata and
+  must NEVER perturb an estimate;
+* `snapshot_ms` / `prometheus_ms` / `to_json_ms` — the cost of one metrics
+  export while the registry is populated (scrape-path sanity, ungated).
+
+Emits BENCH_obs.json (CI-tracked, gated by benchmarks/check_regression.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+try:
+    from benchmarks import _bootstrap  # noqa: F401  (module mode)
+except ImportError:
+    import _bootstrap  # noqa: F401  (script mode: benchmarks/ is sys.path[0])
+
+from repro.obs import metrics as obs_metrics
+from repro.service import BlinkQLService, ServiceConfig
+from benchmarks import common
+
+
+def _texts(db, n: int) -> list[str]:
+    cities = db.tables["sessions"].dictionaries["City"]
+    return [
+        f"SELECT COUNT(*) FROM sessions WHERE City = "
+        f"'{cities[i % len(cities)]}' ERROR WITHIN 10% CONFIDENCE 95%"
+        for i in range(n)
+    ]
+
+
+def _run_sessions(n_sessions: int, per_session: int, texts: list[str],
+                  answer_fn) -> float:
+    """Drive n_sessions threads, each submitting per_session queries
+    round-robin from `texts`. Returns wall-clock elapsed seconds."""
+    barrier = threading.Barrier(n_sessions + 1)
+
+    def session(sid: int):
+        barrier.wait()
+        for j in range(per_session):
+            answer_fn(texts[(sid * per_session + j) % len(texts)])
+
+    threads = [threading.Thread(target=session, args=(s,))
+               for s in range(n_sessions)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def run(n_rows: int = 400_000, n_sessions: int = 32, per_session: int = 16,
+        repeats: int = 3, batch_window_s: float = 0.005,
+        json_path: str | None = None) -> list[dict]:
+    db = common.conviva_db(n_rows=n_rows)
+    if ("City",) not in db.families["sessions"]:
+        db.add_family("sessions", ("City",))
+    texts = _texts(db, 64)
+
+    # Warm striping + program/ELP caches for the template and the batched
+    # pad classes, exactly as serve_throughput does — the gate measures
+    # observability overhead, not first-call compilation.
+    from repro.service.parser import parse_blinkql
+    warm_queries = [parse_blinkql(t, db).normalized() for t in texts]
+    db.query(warm_queries[0])
+    q_pad = 1
+    while q_pad <= 64:
+        db.query_batch(warm_queries[:q_pad])
+        q_pad *= 2
+
+    cfg_traced = ServiceConfig(batch_window_s=batch_window_s,
+                               use_cache=False, trace=True,
+                               trace_sample_every=1)
+    cfg_off = ServiceConfig(batch_window_s=batch_window_s,
+                            use_cache=False, trace=False)
+    svc_traced = BlinkQLService(db, config=cfg_traced)
+    svc_off = BlinkQLService(db, config=cfg_off)
+    total = n_sessions * per_session
+    try:
+        # Interleave the disciplines (alternating order) so container clock
+        # drift cancels instead of billing whichever runs second.
+        runs_t, runs_o = [], []
+        for r in range(repeats):
+            pair = [("t", svc_traced.submit), ("o", svc_off.submit)]
+            if r % 2:
+                pair.reverse()
+            for kind, fn in pair:
+                dt = _run_sessions(n_sessions, per_session, texts, fn)
+                (runs_t if kind == "t" else runs_o).append(dt)
+        qps_traced = total / min(runs_t)
+        qps_off = total / min(runs_o)
+
+        # Behavior drift: identical queries answered under both disciplines
+        # must be numerically IDENTICAL — tracing is metadata, not compute.
+        drift = 0.0
+        traced_any = 0
+        for t in texts[:8]:
+            a = svc_traced.submit(t)
+            b = svc_off.submit(t)
+            traced_any += a.trace is not None
+            assert b.trace is None, "trace=False must attach nothing"
+            ga = {g.key: g for g in a.groups}
+            gb = {g.key: g for g in b.groups}
+            assert ga.keys() == gb.keys()
+            for k in ga:
+                drift = max(drift,
+                            abs(ga[k].estimate - gb[k].estimate),
+                            abs(ga[k].stderr - gb[k].stderr))
+        assert traced_any == 8, "every contract query must be traced"
+
+        # Export cost while the registry is hot (scrape-path sanity).
+        t0 = time.perf_counter()
+        snap = svc_traced.metrics_snapshot()
+        snapshot_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        obs_metrics.render_prometheus(snap)
+        prometheus_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        obs_metrics.to_json(snap)
+        to_json_ms = (time.perf_counter() - t0) * 1e3
+    finally:
+        svc_traced.close()
+        svc_off.close()
+
+    ratio = qps_traced / qps_off
+    rows = [{
+        "name": f"obs_overhead_s{n_sessions}",
+        "us_per_call": min(runs_t) / total * 1e6,
+        "derived": (f"qps_traced={qps_traced:.1f} qps_off={qps_off:.1f} "
+                    f"ratio={ratio:.3f} drift={drift:.3g} "
+                    f"snapshot={snapshot_ms:.2f}ms"),
+        "n_sessions": n_sessions,
+        "queries_per_session": per_session,
+        "qps_traced": qps_traced,
+        "qps_untraced": qps_off,
+        "qps_ratio": ratio,
+        "behavior_drift": drift,
+        "snapshot_ms": snapshot_ms,
+        "prometheus_ms": prometheus_ms,
+        "to_json_ms": to_json_ms,
+        "n_rows": n_rows,
+    }]
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_obs.json")
+    ap.add_argument("--n-rows", type=int, default=400_000)
+    ap.add_argument("--quick", action="store_true",
+                    help="small data + fewer queries (CI smoke)")
+    args = ap.parse_args()
+    kw = dict(json_path=args.json)
+    if args.quick:
+        kw.update(n_rows=60_000, per_session=8, n_sessions=16)
+    else:
+        kw.update(n_rows=args.n_rows)
+    rows = run(**kw)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+
+
+if __name__ == "__main__":
+    main()

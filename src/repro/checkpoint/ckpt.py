@@ -18,11 +18,12 @@ import json
 import os
 import shutil
 import threading
-import time
 from typing import Any
 
 import jax
 import numpy as np
+
+from repro.obs.clock import wall_s
 
 
 SEP = "/"
@@ -75,7 +76,7 @@ class CheckpointManager:
                 fn = os.path.join(arrays_dir, name.replace(SEP, "__") + ".npy")
                 np.save(fn, leaf)
             meta = {"step": step, "leaves": [n for n, _ in leaves],
-                    "time": time.time(), **(extra_meta or {})}
+                    "time": wall_s(), **(extra_meta or {})}
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
                 f.flush()

@@ -31,6 +31,19 @@ from repro.core.types import (AggOp, Answer, BoundUnreachableError,
                               QueryTemplate, TimeBound)
 from repro.core.selection import rewrite_disjuncts, select_family
 from repro.fault import inject
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+
+def _scan_stream_bytes(striped: "exec_lib.StripedFamily") -> int:
+    """Bytes/row the fused scan streams from HBM (trace attribute only —
+    computed lazily when a trace is active). Delegates to the roofline's
+    dtype-exact accounting; streamed blocks are the scan_args tail minus the
+    VMEM-resident freq table."""
+    from repro.launch import roofline
+    return roofline.scan_bytes_per_row(
+        [a.dtype for a in striped.columns.values()]
+        + [striped.unit.dtype, striped.strat.dtype, striped.valid.dtype])
 
 
 @dataclasses.dataclass
@@ -147,10 +160,36 @@ class _BatchJob:
 
 class BlinkDB:
     def __init__(self, config: EngineConfig | None = None, mesh=None,
-                 data_axes: tuple[str, ...] = ("data",)):
+                 data_axes: tuple[str, ...] = ("data",),
+                 metrics: "obs_metrics.MetricsRegistry | None" = None):
         self.config = config or EngineConfig()
         self.mesh = mesh
         self.data_axes = data_axes
+        # Observability plane (docs/OBSERVABILITY.md): engine-scoped
+        # registry — everything hanging off this engine (service scheduler,
+        # cache, workload monitor, maintainer) registers here, so two
+        # engines in one process never bleed counters into each other.
+        self.metrics = (metrics if metrics is not None
+                        else obs_metrics.MetricsRegistry())
+        self._m_queries = self.metrics.counter(
+            "engine_queries_total", "Queries executed, by execution path",
+            labels=("path",))
+        self._m_rows_read = self.metrics.counter(
+            "engine_rows_read_total", "Sample/base rows scanned on device")
+        self._m_escalations = self.metrics.counter(
+            "engine_k_escalations_total",
+            "ErrorBound plans escalated past the selected family (§4.2)")
+        self._m_exact_fallbacks = self.metrics.counter(
+            "engine_exact_fallbacks_total",
+            "ErrorBound plans resolved to exact base-table scans")
+        self._m_scan_seconds = self.metrics.histogram(
+            "engine_scan_seconds", "Device scan wall time per fused pass")
+        self._m_shards_lost = self.metrics.counter(
+            "engine_shards_lost_total",
+            "Logical shards lost (no surviving replica) across scans")
+        self._m_shard_reroutes = self.metrics.counter(
+            "engine_shard_reroutes_total",
+            "Logical shards served by a replica > 0")
         self.tables: dict[str, table_lib.Table] = {}
         # table -> {phi: SampleFamily}; striped views cached alongside
         self.families: dict[str, dict[tuple[str, ...], samp_lib.SampleFamily]] = {}
@@ -857,24 +896,39 @@ class BlinkDB:
             fn = jfn.lower(jnp.float32(k), vals, *args).compile()
             self._programs[key] = fn
         inject.site("engine.scan", table=table_name)
-        t0 = time.perf_counter()
-        report = None
-        if self._fault_sharding_active():
-            def call(mask):
-                m = fn(jnp.float32(k), vals, striped.columns, striped.unit,
-                       striped.strat, striped.freq_table, mask)
-                return jax.tree.map(lambda x: x.block_until_ready(), m)
-            mom, report = exec_lib.run_sharded_scan(
-                call, striped,
-                n_logical=self.config.n_logical_shards,
-                n_replicas=self.config.shard_replicas,
-                site_ctx={"table": table_name},
-                deadline_s=self.config.straggler_deadline_s)
-        else:
-            mom = fn(jnp.float32(k), vals, *args)
-            mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
-        dt = time.perf_counter() - t0
-        return mom, fam.prefix_for_k(k), dt, report
+        with obs_trace.span("scan", table=table_name, k=float(k)) as sp:
+            if obs_trace.tracing_active():
+                sp.set(bytes_per_row=_scan_stream_bytes(striped))
+            t0 = time.perf_counter()
+            report = None
+            if self._fault_sharding_active():
+                def call(mask):
+                    m = fn(jnp.float32(k), vals, striped.columns,
+                           striped.unit, striped.strat, striped.freq_table,
+                           mask)
+                    return jax.tree.map(lambda x: x.block_until_ready(), m)
+                mom, report = exec_lib.run_sharded_scan(
+                    call, striped,
+                    n_logical=self.config.n_logical_shards,
+                    n_replicas=self.config.shard_replicas,
+                    site_ctx={"table": table_name},
+                    deadline_s=self.config.straggler_deadline_s)
+            else:
+                mom = fn(jnp.float32(k), vals, *args)
+                mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+            dt = time.perf_counter() - t0
+            rows = fam.prefix_for_k(k)
+            sp.set(rows_read=rows, elapsed_s=dt)
+            if report is not None:
+                sp.set(shards=report.n_shards, lost=list(report.lost),
+                       rerouted=list(report.rerouted),
+                       reweight=report.reweight)
+        self._m_scan_seconds.observe(dt)
+        self._m_rows_read.inc(rows)
+        if report is not None:
+            self._m_shards_lost.inc(len(report.lost))
+            self._m_shard_reroutes.inc(len(report.rerouted))
+        return mom, rows, dt, report
 
     def _answer_from_moments(self, q: Query, table_name: str,
                              phi: tuple[str, ...], k: float,
@@ -887,9 +941,11 @@ class BlinkDB:
         tbl = self.tables[table_name]
         fam = self.families[table_name][phi]
         degraded = faults is not None and faults.degraded
-        if est is None:
-            est = self._estimate_for(q, table_name, phi, k, mom, qpair)
-        stderr, lo, hi = est_lib.ci(est, confidence)
+        with obs_trace.span("estimate", agg=q.agg.name,
+                            degraded=bool(degraded)):
+            if est is None:
+                est = self._estimate_for(q, table_name, phi, k, mom, qpair)
+            stderr, lo, hi = est_lib.ci(est, confidence)
         group_col = q.group_by[0] if q.group_by else None
         vals = np.asarray(est.value)
         errs = np.asarray(stderr)
@@ -990,11 +1046,17 @@ class BlinkDB:
         plain scan program); timed like _run_at_k."""
         fam = self.families[table_name][phi]
         inject.site("engine.scan", table=table_name)
-        t0 = time.perf_counter()
-        mom, qpair = self._quantile_scan(q, table_name, phi, k)
-        mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
-        dt = time.perf_counter() - t0
-        return mom, fam.prefix_for_k(k), dt, None, qpair
+        with obs_trace.span("scan", table=table_name, k=float(k),
+                            quantile=True) as sp:
+            t0 = time.perf_counter()
+            mom, qpair = self._quantile_scan(q, table_name, phi, k)
+            mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+            dt = time.perf_counter() - t0
+            rows = fam.prefix_for_k(k)
+            sp.set(rows_read=rows, elapsed_s=dt)
+        self._m_scan_seconds.observe(dt)
+        self._m_rows_read.inc(rows)
+        return mom, rows, dt, None, qpair
 
     def _scan_for_query(self, table_name: str, q: Query,
                         phi: tuple[str, ...], k: float):
@@ -1067,35 +1129,46 @@ class BlinkDB:
                striped.shape_class, b)
         args = exec_lib.scan_args(striped)
         inject.site("engine.scan", table=table_name)
-        t0 = time.perf_counter()
-        if q.agg is AggOp.QUANTILE:
-            fn = self._subsampled_quantile_programs.get(key)
-            if fn is None:
-                fn = exec_lib.make_subsampled_quantile_fn(
-                    struct, q.value_column, group_col, n_groups, b,
-                    mesh=self.mesh, data_axes=self.data_axes)
-                self._subsampled_quantile_programs[key] = fn
-            mom_sub, qv, dens, qsub = fn(jnp.float32(k), vals,
-                                         jnp.float32(q.quantile), sub, *args)
-            mom_sub = jax.tree.map(lambda x: x.block_until_ready(), mom_sub)
-            est = est_lib.subsampling_estimate(
-                AggOp.QUANTILE, mom_sub, n_groups, b, quantile_value=qv,
-                quantile_density=dens, quantile_values_sub=qsub,
-                q=q.quantile)
-        else:
-            fn = self._subsampled_programs.get(key)
-            if fn is None:
-                fn = exec_lib.make_subsampled_query_fn(
-                    struct, q.value_column, group_col, n_groups, b,
-                    mesh=self.mesh, data_axes=self.data_axes)
-                self._subsampled_programs[key] = fn
-            mom_sub = fn(jnp.float32(k), vals, sub, *args)
-            mom_sub = jax.tree.map(lambda x: x.block_until_ready(), mom_sub)
-            est = est_lib.subsampling_estimate(q.agg, mom_sub, n_groups, b)
-        dt = time.perf_counter() - t0
+        with obs_trace.span("scan", table=table_name, k=float(k),
+                            subsampled=True) as sp:
+            if obs_trace.tracing_active():
+                sp.set(bytes_per_row=_scan_stream_bytes(striped))
+            t0 = time.perf_counter()
+            if q.agg is AggOp.QUANTILE:
+                fn = self._subsampled_quantile_programs.get(key)
+                if fn is None:
+                    fn = exec_lib.make_subsampled_quantile_fn(
+                        struct, q.value_column, group_col, n_groups, b,
+                        mesh=self.mesh, data_axes=self.data_axes)
+                    self._subsampled_quantile_programs[key] = fn
+                mom_sub, qv, dens, qsub = fn(jnp.float32(k), vals,
+                                             jnp.float32(q.quantile), sub,
+                                             *args)
+                mom_sub = jax.tree.map(lambda x: x.block_until_ready(),
+                                       mom_sub)
+                est = est_lib.subsampling_estimate(
+                    AggOp.QUANTILE, mom_sub, n_groups, b, quantile_value=qv,
+                    quantile_density=dens, quantile_values_sub=qsub,
+                    q=q.quantile)
+            else:
+                fn = self._subsampled_programs.get(key)
+                if fn is None:
+                    fn = exec_lib.make_subsampled_query_fn(
+                        struct, q.value_column, group_col, n_groups, b,
+                        mesh=self.mesh, data_axes=self.data_axes)
+                    self._subsampled_programs[key] = fn
+                mom_sub = fn(jnp.float32(k), vals, sub, *args)
+                mom_sub = jax.tree.map(lambda x: x.block_until_ready(),
+                                       mom_sub)
+                est = est_lib.subsampling_estimate(q.agg, mom_sub, n_groups, b)
+            dt = time.perf_counter() - t0
+            rows = fam.prefix_for_k(k)
+            sp.set(rows_read=rows, elapsed_s=dt)
+        self._m_scan_seconds.observe(dt)
+        self._m_rows_read.inc(rows)
         mom = est_lib.fold_subsamples(mom_sub, n_groups, b)
         return self._answer_from_moments(
-            q, table_name, phi, k, mom, fam.prefix_for_k(k), dt, confidence,
+            q, table_name, phi, k, mom, rows, dt, confidence,
             certified=certified, predicted_half_width=predicted_half_width,
             est=est)
 
@@ -1208,8 +1281,12 @@ class BlinkDB:
                                predicted_half_width=half,
                                gen=self.family_generation(table_name, p))
 
-        k_q, half = (self._pilot_certify(table_name, q, phi, confidence)
-                     if first is None else first)
+        if first is None:
+            with obs_trace.span("plan.pilot", family=list(phi)):
+                k_q, half = self._pilot_certify(table_name, q, phi,
+                                                confidence)
+        else:
+            k_q, half = first
         if k_q is None and half is not None:
             # Containment refinement: the linear Var ∝ 1/n projection cannot
             # see that the family's largest prefix may fully CONTAIN the
@@ -1217,7 +1294,9 @@ class BlinkDB:
             # variance), so it declares unreachable bounds that the top
             # resolution meets outright. One scan at ks[0] certifies from
             # the realized inflated CI before the ladder escalates.
-            k_q, half = self._certify_at_top(table_name, q, phi, confidence)
+            with obs_trace.span("plan.certify_top", family=list(phi)):
+                k_q, half = self._certify_at_top(table_name, q, phi,
+                                                 confidence)
         if k_q is not None:
             return decide(phi, k_q, True, half)
         best_phi, best_half = phi, half
@@ -1227,9 +1306,11 @@ class BlinkDB:
             for p2 in sorted((p for p in fams
                               if p != phi and size(p) > size(phi)),
                              key=size):
-                k2, half2 = self._pilot_certify(table_name, q, p2,
-                                                confidence)
+                with obs_trace.span("plan.escalate", family=list(p2)):
+                    k2, half2 = self._pilot_certify(table_name, q, p2,
+                                                    confidence)
                 if k2 is not None:
+                    self._m_escalations.inc()
                     return decide(p2, k2, True, half2)
                 if half2 is not None and (best_half is None
                                           or half2 < best_half):
@@ -1244,6 +1325,7 @@ class BlinkDB:
             # takes the exact fallback) because it demands a guarantee.
             if isinstance(q.bound, ErrorBound) and q.bound.strict:
                 if self.config.exact_fallback:
+                    self._m_exact_fallbacks.inc()
                     return decide(phi, float(fams[phi].ks[0]), True, 0.0,
                                   exact=True)
                 raise BoundUnreachableError(
@@ -1252,6 +1334,7 @@ class BlinkDB:
                     f"row (nothing to project from)", None)
             return decide(phi, fams[phi].ks[0], False, None)
         if self.config.exact_fallback:
+            self._m_exact_fallbacks.inc()
             return decide(phi, float(fams[phi].ks[0]), True, 0.0, exact=True)
         if q.bound.strict:
             raise BoundUnreachableError(
@@ -1341,36 +1424,48 @@ class BlinkDB:
             answers = [self.query(sq) for sq in subqueries]
             return _union_answers(q, answers)
 
+        self._m_queries.labels("query").inc()
         table_name = q.table
         self._resolve_joins(table_name, q)
-        phi = self._select_phi(table_name, q)
-        confidence = q.bound.confidence if q.bound else 0.95
+        with obs_trace.span("plan", table=table_name) as sp:
+            phi = self._select_phi(table_name, q)
+            confidence = q.bound.confidence if q.bound else 0.95
 
-        if isinstance(q.bound, TimeBound):
-            # TimeBound reuse unit is the LatencyModel (self._latency); K
-            # re-projects against each call's effective budget, so a K
-            # chosen under scheduler headroom can never alias a direct
-            # call's full bound — nothing bound-shaped is cached.
-            k_q = self._pick_k_for_time(table_name, q, phi)
-            return self._scan_and_answer(q, table_name, phi, k_q, confidence)
-
-        # §4.4 ELP reuse: one pilot per (family × template × bound); later
-        # instantiations replay the full DECISION (family, K, certification,
-        # predicted half-width), generation-pinned to the decided family.
-        struct, _ = exec_lib.pred_structure(
-            exec_lib.bind_predicate(q.predicate, self._encode(table_name)))
-        elp_key = (table_name, phi, struct, q.agg, q.value_column,
-                   q.group_by, repr(q.bound))
-        dec = (self._cached_decision(elp_key, table_name)
-               if self.config.reuse_elp else None)
+            if isinstance(q.bound, TimeBound):
+                # TimeBound reuse unit is the LatencyModel (self._latency); K
+                # re-projects against each call's effective budget, so a K
+                # chosen under scheduler headroom can never alias a direct
+                # call's full bound — nothing bound-shaped is cached.
+                k_q = self._pick_k_for_time(table_name, q, phi)
+                sp.set(bound="time", family=list(phi), k=float(k_q))
+                dec = None
+            else:
+                # §4.4 ELP reuse: one pilot per (family × template × bound);
+                # later instantiations replay the full DECISION (family, K,
+                # certification, predicted half-width), generation-pinned to
+                # the decided family.
+                struct, _ = exec_lib.pred_structure(
+                    exec_lib.bind_predicate(q.predicate,
+                                            self._encode(table_name)))
+                elp_key = (table_name, phi, struct, q.agg, q.value_column,
+                           q.group_by, repr(q.bound))
+                cached = (self._cached_decision(elp_key, table_name)
+                          if self.config.reuse_elp else None)
+                dec = cached
+                if dec is None:
+                    if isinstance(q.bound, ErrorBound):
+                        dec = self._plan_error_bound(table_name, q, phi,
+                                                     confidence)
+                    else:   # no bound: most accurate available sample
+                        dec = ElpDecision(
+                            phi, self.families[table_name][phi].ks[0], None,
+                            gen=self.family_generation(table_name, phi))
+                    self._elp_cache[elp_key] = dec
+                sp.set(family=list(dec.phi), k=float(dec.k),
+                       certified=dec.certified, exact=dec.exact,
+                       cached=cached is not None)
         if dec is None:
-            if isinstance(q.bound, ErrorBound):
-                dec = self._plan_error_bound(table_name, q, phi, confidence)
-            else:   # no bound: most accurate available sample
-                dec = ElpDecision(
-                    phi, self.families[table_name][phi].ks[0], None,
-                    gen=self.family_generation(table_name, phi))
-            self._elp_cache[elp_key] = dec
+            return self._scan_and_answer(q, table_name, phi, k_q, confidence)
         return self._execute_decision(q, table_name, dec, confidence)
 
     def _pick_k_for_time(self, table_name: str, q: Query,
@@ -1477,23 +1572,37 @@ class BlinkDB:
             fn = jfn.lower(ks_dev, consts_dev, *args).compile()  # AOT
             self._batched_programs[pkey] = fn
         inject.site("engine.scan", table=table_name)
-        t0 = time.perf_counter()
-        report = None
-        if self._fault_sharding_active():
-            def call(mask):
-                m = fn(ks_dev, consts_dev, striped.columns, striped.unit,
-                       striped.strat, striped.freq_table, mask)
-                return jax.tree.map(lambda x: x.block_until_ready(), m)
-            mom, report = exec_lib.run_sharded_scan(
-                call, striped,
-                n_logical=self.config.n_logical_shards,
-                n_replicas=self.config.shard_replicas,
-                site_ctx={"table": table_name},
-                deadline_s=self.config.straggler_deadline_s)
-        else:
-            mom = fn(ks_dev, consts_dev, *args)
-            mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
-        dt = time.perf_counter() - t0
+        with obs_trace.span("scan", table=table_name, batch=n_q,
+                            k=float(max(ks))) as sp:
+            if obs_trace.tracing_active():
+                sp.set(bytes_per_row=_scan_stream_bytes(striped))
+            t0 = time.perf_counter()
+            report = None
+            if self._fault_sharding_active():
+                def call(mask):
+                    m = fn(ks_dev, consts_dev, striped.columns, striped.unit,
+                           striped.strat, striped.freq_table, mask)
+                    return jax.tree.map(lambda x: x.block_until_ready(), m)
+                mom, report = exec_lib.run_sharded_scan(
+                    call, striped,
+                    n_logical=self.config.n_logical_shards,
+                    n_replicas=self.config.shard_replicas,
+                    site_ctx={"table": table_name},
+                    deadline_s=self.config.straggler_deadline_s)
+            else:
+                mom = fn(ks_dev, consts_dev, *args)
+                mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+            dt = time.perf_counter() - t0
+            rows = self.families[table_name][phi].prefix_for_k(max(ks))
+            sp.set(rows_read=rows, elapsed_s=dt)
+            if report is not None:
+                sp.set(shards=report.n_shards, lost=list(report.lost),
+                       rerouted=list(report.rerouted))
+        self._m_scan_seconds.observe(dt)
+        self._m_rows_read.inc(rows)
+        if report is not None:
+            self._m_shards_lost.inc(len(report.lost))
+            self._m_shard_reroutes.inc(len(report.rerouted))
         return jax.tree.map(lambda x: x[:n_q], mom), dt, report
 
     def _run_batched_subsampled(self, scan_key, ks: Sequence[float],
@@ -1538,10 +1647,18 @@ class BlinkDB:
             fn = jfn.lower(ks_dev, consts_dev, sub, *args).compile()  # AOT
             self._batched_subsampled_programs[pkey] = fn
         inject.site("engine.scan", table=table_name)
-        t0 = time.perf_counter()
-        mom = fn(ks_dev, consts_dev, sub, *args)
-        mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
-        dt = time.perf_counter() - t0
+        with obs_trace.span("scan", table=table_name, batch=n_q,
+                            k=float(max(ks)), subsampled=True) as sp:
+            if obs_trace.tracing_active():
+                sp.set(bytes_per_row=_scan_stream_bytes(striped))
+            t0 = time.perf_counter()
+            mom = fn(ks_dev, consts_dev, sub, *args)
+            mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+            dt = time.perf_counter() - t0
+            rows = self.families[table_name][phi].prefix_for_k(max(ks))
+            sp.set(rows_read=rows, elapsed_s=dt)
+        self._m_scan_seconds.observe(dt)
+        self._m_rows_read.inc(rows)
         return jax.tree.map(lambda x: x[:n_q], mom), dt, None
 
     def query_batch(self, queries: Sequence[Query],
@@ -1576,13 +1693,16 @@ class BlinkDB:
         queries = list(queries)
         if not queries:
             return []
+        self._m_queries.labels("batch").inc(len(queries))
         sel_cache: dict = {}
         jobs: list[_BatchJob] = []
         n_subs = [0] * len(queries)
-        for pi, q in enumerate(queries):
-            for sq in rewrite_disjuncts(q):
-                jobs.append(self._plan_batch_job(pi, n_subs[pi], sq, sel_cache))
-                n_subs[pi] += 1
+        with obs_trace.span("plan", batch=len(queries), stage="select"):
+            for pi, q in enumerate(queries):
+                for sq in rewrite_disjuncts(q):
+                    jobs.append(self._plan_batch_job(pi, n_subs[pi], sq,
+                                                     sel_cache))
+                    n_subs[pi] += 1
 
         # Decisions that cannot join the shared scan — exact fallback, or
         # escalation onto a family the batch didn't plan for — run out of
@@ -1624,8 +1744,10 @@ class BlinkDB:
         for scan_key, group in probe_groups.items():
             fam = self.families[group[0].table][group[0].phi]
             k_probe = min(fam.ks)
-            mom, _, _ = self._run_batched(scan_key, [k_probe] * len(group),
-                                          [j.consts for j in group])
+            with obs_trace.span("plan.pilot", batch=len(group)):
+                mom, _, _ = self._run_batched(scan_key,
+                                              [k_probe] * len(group),
+                                              [j.consts for j in group])
             for i, job in enumerate(group):
                 # Sequential-contract parity (§4.4): once the first job of an
                 # elp_key resolves, later jobs replay its decision — exactly
@@ -1709,6 +1831,7 @@ class BlinkDB:
     def exact_query(self, q: Query) -> Answer:
         """Ground truth: run the aggregation over the FULL table (rate=1),
         via a cached compiled program (fair timing baseline for E1)."""
+        self._m_queries.labels("exact").inc()
         tbl = self.tables[q.table]
         self._resolve_joins(q.table, q)
         bound_pred = exec_lib.bind_predicate(q.predicate, self._encode(q.table))
@@ -1743,27 +1866,31 @@ class BlinkDB:
             fn = jax.jit(build).lower(vals, tcols, live).compile()  # AOT
             self._exact_programs[key] = fn
 
-        t0 = time.perf_counter()
-        mom = fn(vals, tcols, live)
-        mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
-        if q.agg is AggOp.QUANTILE:
-            # Only the quantile pass needs the raw mask/values/groups — the
-            # compiled program above already evaluated the predicate for the
-            # moment statistics.
-            mask = exec_lib.predicate_mask(tcols, bound_pred) & live
-            values = (tcols[q.value_column].astype(jnp.float32)
-                      if q.value_column
-                      else jnp.ones(tbl.n_rows, jnp.float32))
-            g = (tcols[group_col].astype(jnp.int32) if group_col
-                 else jnp.zeros(tbl.n_rows, jnp.int32))
-            qv, dens = exec_lib.grouped_quantile(
-                values, mask.astype(jnp.float32), g, n_groups, q.quantile)
-            est = est_lib.estimate(AggOp.QUANTILE, mom, quantile_value=qv,
-                                   quantile_density=dens, q=q.quantile)
-        else:
-            est = est_lib.estimate(q.agg, mom)
-        est.value.block_until_ready()
-        dt = time.perf_counter() - t0
+        with obs_trace.span("scan.exact", table=q.table) as sp:
+            t0 = time.perf_counter()
+            mom = fn(vals, tcols, live)
+            mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
+            if q.agg is AggOp.QUANTILE:
+                # Only the quantile pass needs the raw mask/values/groups —
+                # the compiled program above already evaluated the predicate
+                # for the moment statistics.
+                mask = exec_lib.predicate_mask(tcols, bound_pred) & live
+                values = (tcols[q.value_column].astype(jnp.float32)
+                          if q.value_column
+                          else jnp.ones(tbl.n_rows, jnp.float32))
+                g = (tcols[group_col].astype(jnp.int32) if group_col
+                     else jnp.zeros(tbl.n_rows, jnp.int32))
+                qv, dens = exec_lib.grouped_quantile(
+                    values, mask.astype(jnp.float32), g, n_groups, q.quantile)
+                est = est_lib.estimate(AggOp.QUANTILE, mom, quantile_value=qv,
+                                       quantile_density=dens, q=q.quantile)
+            else:
+                est = est_lib.estimate(q.agg, mom)
+            est.value.block_until_ready()
+            dt = time.perf_counter() - t0
+            sp.set(rows_read=tbl.n_rows, elapsed_s=dt)
+        self._m_scan_seconds.observe(dt)
+        self._m_rows_read.inc(tbl.n_rows)
         vals = np.asarray(est.value)
         ns = np.asarray(est.n)
         groups = []

@@ -65,6 +65,7 @@ from repro.core.types import (AggOp, Atom, CmpOp, Conjunction, Predicate,
                               cmp_fns)
 from repro.fault import inject
 from repro.fault.inject import AllShardsLostError, FaultError, ShardScanError
+from repro.obs import trace as obs_trace
 
 _CMP = cmp_fns()
 
@@ -1001,25 +1002,32 @@ def run_sharded_scan(call, striped: StripedFamily, *, n_logical: int,
         mom = None
         for r in range(n_replicas):
             t0 = time.perf_counter()
-            try:
-                action = inject.site("shard.scan", shard=s, replica=r, **ctx)
-                m = call(mask)
-                if action == "poison":
-                    m = jax.tree.map(lambda x: x.block_until_ready(),
-                                     _poison_moments(m))
-                if deadline_s is not None \
-                        and time.perf_counter() - t0 > deadline_s:
-                    raise ShardScanError(
-                        f"shard {s} replica {r} missed the straggler "
-                        f"deadline ({deadline_s:.3f}s)")
-                if not est_lib.moments_finite(m):
-                    raise ShardScanError(
-                        f"shard {s} replica {r} returned non-finite "
-                        "statistics (poisoned partial)")
-                mom = m
-                break
-            except FaultError:
-                continue    # next replica; non-fault errors propagate
+            # Each attempt is its own span: a trace of a degraded query
+            # shows every replica tried, which ones a fault plan failed
+            # (attrs carry ok=False + error), and which one finally served.
+            with obs_trace.span("scan.shard", shard=s, replica=r) as sp:
+                try:
+                    action = inject.site("shard.scan", shard=s, replica=r,
+                                         **ctx)
+                    m = call(mask)
+                    if action == "poison":
+                        m = jax.tree.map(lambda x: x.block_until_ready(),
+                                         _poison_moments(m))
+                    if deadline_s is not None \
+                            and time.perf_counter() - t0 > deadline_s:
+                        raise ShardScanError(
+                            f"shard {s} replica {r} missed the straggler "
+                            f"deadline ({deadline_s:.3f}s)")
+                    if not est_lib.moments_finite(m):
+                        raise ShardScanError(
+                            f"shard {s} replica {r} returned non-finite "
+                            "statistics (poisoned partial)")
+                    mom = m
+                    sp.set(ok=True)
+                    break
+                except FaultError as e:
+                    sp.set(ok=False, error=type(e).__name__)
+                    continue    # next replica; non-fault errors propagate
         if mom is None:
             lost.append(s)
         else:

@@ -112,6 +112,16 @@ class SampleMaintainer:
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self.epochs = 0
+        # Maintainer plane of the engine's metrics registry
+        # (docs/OBSERVABILITY.md): epoch durations by kind, reclamation
+        # work items by kind.
+        self._m_epoch_s = db.metrics.histogram(
+            "maintenance_epoch_seconds", "Maintenance epoch wall time",
+            labels=("kind",))
+        self._m_reclaim = db.metrics.counter(
+            "maintenance_reclaim_total",
+            "Storage-reclamation work items by kind",
+            labels=("kind",))
 
     # -- drift detection -----------------------------------------------------
     def check_drift(self, new_table: table_lib.Table) -> dict[tuple[str, ...], float]:
@@ -220,6 +230,15 @@ class SampleMaintainer:
                 report["base_compacted"] = comp.n_dropped
         report["decayed"] = self.decay()
         report["compacted"] = self.compact()
+        if report["base_compacted"]:
+            self._m_reclaim.labels("base_rows_dropped").inc(
+                report["base_compacted"])
+        n_decayed = sum(len(s) for s in report["decayed"].values())
+        if n_decayed:
+            self._m_reclaim.labels("strata_decayed").inc(n_decayed)
+        if report["compacted"]:
+            self._m_reclaim.labels("families_compacted").inc(
+                len(report["compacted"]))
         return report
 
     # -- workload-only epoch (template churn, no data delta) -------------------
@@ -234,6 +253,7 @@ class SampleMaintainer:
         epoch seed. Closes the ROADMAP workload-drift-epoch item: the §3.2
         framework now reacts to template churn end-to-end, not only to data
         deltas."""
+        t0 = time.perf_counter()
         self.epochs += 1
         epoch_seed = (self.base_seed + self.epochs) if seed is None else seed
         before = set(self.db.families[self.table_name])
@@ -249,11 +269,13 @@ class SampleMaintainer:
         # the monitor's drift baseline says they were never adopted).
         self.templates = new_templates
         after = set(self.db.families[self.table_name])
-        return {"added": sorted(after - before),
-                "dropped": sorted(before - after),
-                "kept": sorted(after & before),
-                "objective": sol.objective, "storage": sol.storage_used,
-                **self.reclaim()}
+        out = {"added": sorted(after - before),
+               "dropped": sorted(before - after),
+               "kept": sorted(after & before),
+               "objective": sol.objective, "storage": sol.storage_used,
+               **self.reclaim()}
+        self._m_epoch_s.labels("workload").observe(time.perf_counter() - t0)
+        return out
 
     # -- one maintenance epoch -------------------------------------------------
     def run_epoch(self, new_table: table_lib.Table | None = None,
@@ -277,6 +299,7 @@ class SampleMaintainer:
                              "(replacement), not both")
         if new_templates is not None:
             self.templates = list(new_templates)
+        t0 = time.perf_counter()
         self.epochs += 1
         epoch_seed = (self.base_seed + self.epochs) if seed is None else seed
 
@@ -301,12 +324,15 @@ class SampleMaintainer:
                     if phi in self.db.families[self.table_name]:
                         self.db.add_family(self.table_name, phi,
                                            seed=epoch_seed)
-            return {"drift": drift, "rebuilt": stale,
-                    "merged": report.merged, "restriped": report.restriped,
-                    "appended_rows": report.delta.n_rows,
-                    **self.reclaim(),
-                    "objective": sol.objective if sol else None,
-                    "storage": sol.storage_used if sol else None}
+            out = {"drift": drift, "rebuilt": stale,
+                   "merged": report.merged, "restriped": report.restriped,
+                   "appended_rows": report.delta.n_rows,
+                   **self.reclaim(),
+                   "objective": sol.objective if sol else None,
+                   "storage": sol.storage_used if sol else None}
+            self._m_epoch_s.labels("delta").observe(
+                time.perf_counter() - t0)
+            return out
 
         tbl = new_table if new_table is not None else self.db.tables[self.table_name]
         drift = self.check_drift(tbl) if new_table is not None else {}
@@ -342,9 +368,13 @@ class SampleMaintainer:
         for phi in stale:
             if phi in self.db.families[self.table_name]:
                 self.db.add_family(self.table_name, phi, seed=epoch_seed)
-        return {"drift": drift, "rebuilt": stale,
-                **self.reclaim(), "objective": sol.objective,
-                "storage": sol.storage_used}
+        out = {"drift": drift, "rebuilt": stale,
+               **self.reclaim(), "objective": sol.objective,
+               "storage": sol.storage_used}
+        self._m_epoch_s.labels(
+            "replace" if new_table is not None else "refresh").observe(
+            time.perf_counter() - t0)
+        return out
 
     # -- background thread (low-priority task per §4.5) -----------------------
     def start(self, period_s: float | None = None) -> None:

@@ -377,6 +377,14 @@ class Answer:
     bound_met: bool | None = None
     certified: bool | None = None
     predicted_half_width: float | None = None
+    # Observability plane (docs/OBSERVABILITY.md): when the query was traced
+    # (sampling policy: contract queries, armed fault plans, 1-in-N), the
+    # full span tree (obs.trace.QueryTrace) and its per-stage breakdown
+    # ({"parse": s, "plan": s, "scan": s, ..., "total": s}). Pure metadata:
+    # attached AFTER execution, excluded from caching, and never consulted
+    # by estimation — a traced answer is bit-identical to an untraced one.
+    trace: Any = None
+    timings: dict[str, float] | None = None
 
     @property
     def max_rel_err(self) -> float:

@@ -177,9 +177,17 @@ def site(name: str, **ctx) -> str | None:
     fired = plan.visit(name, ctx)
     if not fired:
         return None
+    # The fault layer is process-global (exactly one environment), so its
+    # observed-injection counters live on the process-default registry —
+    # BlinkService.metrics_snapshot() merges them next to the engine's.
+    from repro.obs import metrics as obs_metrics
+    m = obs_metrics.default_registry().counter(
+        "fault_injections_total", "Fault-plan specs observed firing",
+        labels=("site", "kind"))
     poison = None
     kill: tuple[int, FaultSpec] | None = None
     for i, spec in fired:
+        m.labels(name, spec.kind).inc()
         if spec.kind == "delay":
             time.sleep(spec.delay_s)
         elif spec.kind == "poison":

@@ -22,6 +22,8 @@ from typing import Callable
 
 import numpy as np
 
+from repro.obs.clock import now_s
+
 
 @dataclasses.dataclass
 class Heartbeat:
@@ -29,20 +31,36 @@ class Heartbeat:
 
     def __post_init__(self):
         self.last_step = np.zeros(self.n_workers, dtype=np.int64)
-        # Per-worker stamps: one shared time.time() call would give every
+        # Per-worker stamps (monotonic now_s — beat AGES must survive
+        # wall-clock adjustments): one shared reading would give every
         # worker the registry's construction instant, skewing the first
         # deadline by however long construction-to-first-beat takes to
         # drift apart across workers.
-        self.last_time = np.array([time.time()
+        self.last_time = np.array([now_s()
                                    for _ in range(self.n_workers)])
         self.step_times: list[float] = []
 
     def beat(self, worker: int, step: int) -> None:
-        now = time.time()
+        now = now_s()
         if step > self.last_step[worker] and self.last_step[worker] > 0:
             self.step_times.append(now - self.last_time[worker])
         self.last_step[worker] = step
         self.last_time[worker] = now
+
+    def last_beat_age_s(self, worker: int,
+                        now: float | None = None) -> float:
+        """Seconds since this worker's last beat — the per-worker liveness
+        gauge the metrics plane exports (docs/OBSERVABILITY.md)."""
+        now = now if now is not None else now_s()
+        return max(0.0, float(now - self.last_time[worker]))
+
+    def stalest(self, now: float | None = None) -> tuple[int, float]:
+        """(worker, age_s) of the longest-silent worker — what
+        ServiceUnhealthyError reports."""
+        now = now if now is not None else now_s()
+        ages = now - self.last_time
+        w = int(np.argmax(ages))
+        return w, max(0.0, float(ages[w]))
 
 
 @dataclasses.dataclass
@@ -51,7 +69,7 @@ class StragglerPolicy:
     min_deadline_s: float = 1.0
 
     def stragglers(self, hb: Heartbeat, now: float | None = None) -> list[int]:
-        now = now if now is not None else time.time()
+        now = now if now is not None else now_s()
         if not hb.step_times:
             return []
         median = float(np.median(hb.step_times[-100:]))

@@ -15,7 +15,6 @@ inputs (experiments/dryrun/<mesh>/<arch>__<shape>.json).
 """
 import argparse
 import json
-import time
 import traceback
 
 import jax
@@ -25,6 +24,7 @@ from repro.configs import all_archs, get_config, shapes_for
 from repro.launch import roofline as roof_lib
 from repro.launch.cells import build_cell
 from repro.launch.mesh import make_production_mesh
+from repro.obs.clock import now_s
 from repro.sharding import rules as rules_lib
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -39,7 +39,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     if skip_if_done and os.path.exists(out_path):
         with open(out_path) as f:
             return json.load(f)
-    t0 = time.time()
+    t0 = now_s()
     mesh = make_production_mesh(multi_pod=multi_pod)
     cell = build_cell(arch, shape_name, mesh, multi_pod, policy=policy)
     chips = int(np.prod(list(mesh.shape.values())))
@@ -49,9 +49,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                      donate_argnums=cell.donate)
     with rules_lib.activate(cell.mesh, cell.rules):
         lowered = jitted.lower(*cell.args_sds)
-    t_lower = time.time() - t0
+    t_lower = now_s() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = now_s() - t0
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}

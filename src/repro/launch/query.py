@@ -7,7 +7,6 @@ batch of bounded queries (the serving-side launcher for the paper's engine).
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
@@ -15,6 +14,7 @@ from repro.core import (AggOp, Atom, BlinkDB, CmpOp, EngineConfig, ErrorBound,
                         Predicate, Query, QueryTemplate, TimeBound)
 from repro.core import table as table_lib
 from repro.data import synth
+from repro.obs.clock import now_s
 
 
 def main() -> None:
@@ -28,7 +28,7 @@ def main() -> None:
                     help="use the Pallas fused scan (interpret mode on CPU)")
     args = ap.parse_args()
 
-    t0 = time.time()
+    t0 = now_s()
     tbl = table_lib.from_columns("sessions", synth.sessions_table(args.rows))
     db = BlinkDB(EngineConfig(k1=args.k1, m=5, use_pallas=args.pallas))
     db.register_table("sessions", tbl)
@@ -38,7 +38,7 @@ def main() -> None:
         QueryTemplate(frozenset({"OS", "URL"}), 0.25),
         QueryTemplate(frozenset({"Genre"}), 0.2),
     ], storage_budget_fraction=args.budget)
-    print(f"[offline {time.time()-t0:.1f}s] families: "
+    print(f"[offline {now_s()-t0:.1f}s] families: "
           f"{[tuple(sorted(c.phi)) for c in sol.chosen]} "
           f"({sol.storage_used/tbl.nbytes:.1%} of table)")
 

@@ -1,0 +1,16 @@
+"""Observability plane: per-query tracing + service metrics
+(docs/OBSERVABILITY.md)."""
+from repro.obs.clock import now_s, wall_s
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               default_registry, merge_snapshots,
+                               render_prometheus, to_json)
+from repro.obs.trace import (QueryTrace, SpanRecord, Tracer, activate,
+                             active_traces, get_tracer, span)
+
+__all__ = [
+    "now_s", "wall_s",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
+    "merge_snapshots", "render_prometheus", "to_json",
+    "QueryTrace", "SpanRecord", "Tracer", "activate", "active_traces",
+    "get_tracer", "span",
+]

@@ -5,7 +5,8 @@ admission scheduler that coalesces compatible queries into shared scans,
 backed by a generation-validated answer cache and a workload monitor that
 drives §3.2 re-optimization on template churn. See docs/SERVICE.md."""
 from repro.service.cache import AnswerCache, CacheStats
-from repro.service.parser import BlinkQLError, parse_blinkql
+from repro.service.parser import (BlinkQLError, Explain, ShowMetrics,
+                                  parse_blinkql, parse_statement)
 from repro.service.scheduler import (AdmissionError, BlinkQLService,
                                      DeadlineShedError, DegradedServiceError,
                                      ServiceConfig, ServiceUnhealthyError)
@@ -13,6 +14,7 @@ from repro.service.workload import WorkloadConfig, WorkloadMonitor
 
 __all__ = [
     "AnswerCache", "CacheStats", "BlinkQLError", "parse_blinkql",
+    "parse_statement", "ShowMetrics", "Explain",
     "AdmissionError", "BlinkQLService", "ServiceConfig",
     "DeadlineShedError", "DegradedServiceError", "ServiceUnhealthyError",
     "WorkloadConfig", "WorkloadMonitor",

@@ -32,10 +32,11 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from collections import OrderedDict
 
 from repro.core.types import Answer, Query
+from repro.obs import metrics as obs_metrics
+from repro.obs.clock import now_s
 
 
 @dataclasses.dataclass
@@ -66,6 +67,19 @@ class AnswerCache:
         self.db = db
         self.capacity = int(capacity)
         self.stats = CacheStats()
+        # CacheStats stays the tests' plain-int source of truth; every
+        # increment is mirrored onto the engine's metrics registry so
+        # metrics_snapshot() exports the cache plane without a second
+        # bookkeeping path.
+        reg = (getattr(db, "metrics", None)
+               or obs_metrics.default_registry())
+        self._m = reg.counter("cache_events_total",
+                              "Answer-cache events by kind",
+                              labels=("kind",))
+        reg.gauge("cache_entries", "Live answer-cache entries"
+                  ).labels().set_function(lambda: float(len(self)))
+        reg.gauge("cache_stale_entries", "Demoted (stale-rung) entries"
+                  ).labels().set_function(lambda: float(len(self._stale)))
         self._lock = threading.Lock()
         self._entries: OrderedDict[Query, _Entry] = OrderedDict()
         # Invalidated entries demoted here instead of discarded: the
@@ -104,6 +118,7 @@ class AnswerCache:
             for q in stale:
                 self._demote(q, self._entries.pop(q))
             self.stats.invalidations += len(stale)
+            self._m.labels("invalidation").inc(len(stale))
 
     # -- lookup / insert -----------------------------------------------------
     def _current(self, entry: _Entry) -> bool:
@@ -124,14 +139,18 @@ class AnswerCache:
             entry = self._entries.get(key)
             if entry is None:
                 self.stats.misses += 1
+                self._m.labels("miss").inc()
                 return None
             if not self._current(entry):   # belt-and-braces vs missed hooks
                 self._demote(key, self._entries.pop(key))
                 self.stats.invalidations += 1
                 self.stats.misses += 1
+                self._m.labels("invalidation").inc()
+                self._m.labels("miss").inc()
                 return None
             self._entries.move_to_end(key)
             self.stats.hits += 1
+            self._m.labels("hit").inc()
             return entry.answer
 
     def get_stale(self, key: Query) -> tuple[Answer, float] | None:
@@ -148,7 +167,8 @@ class AnswerCache:
             if entry is None:
                 return None
             self.stats.stale_serves += 1
-            return entry.answer, max(0.0, time.monotonic() - entry.t_put)
+            self._m.labels("stale_serve").inc()
+            return entry.answer, max(0.0, now_s() - entry.t_put)
 
     def snapshot(self, table: str) -> dict:
         """Generations of a table's family set as of NOW — taken by the
@@ -174,7 +194,7 @@ class AnswerCache:
         entry = _Entry(
             answer=answer, table=table,
             fam_deps=tuple((p, snap["fams"].get(p, 0)) for p in phis),
-            set_gen=snap["set"], t_put=time.monotonic())
+            set_gen=snap["set"], t_put=now_s())
         with self._lock:
             self._entries[key] = entry
             self._entries.move_to_end(key)
@@ -183,3 +203,4 @@ class AnswerCache:
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
                 self.stats.evictions += 1
+                self._m.labels("eviction").inc()

@@ -9,9 +9,16 @@ Grammar (keywords case-insensitive; one statement per string):
          | ERROR WITHIN <abs> [[AT] CONFIDENCE <c>%]
          | WITHIN <s> SECONDS [[AT] CONFIDENCE <c>%]]
 
+    EXPLAIN <select-statement>
+    SHOW METRICS [FORMAT {JSON | PROMETHEUS}]
+
     <agg>  := COUNT(*) | COUNT(<column>) | SUM(<column>) | AVG(<column>)
               | QUANTILE(<column>, <q>)
     <atom> := <column> <op> <literal>      with <op> in = == != <> < <= > >=
+
+`parse_blinkql` parses SELECT statements only (onto `Query`); the service
+statements (EXPLAIN, SHOW METRICS — docs/OBSERVABILITY.md) go through
+`parse_statement`, which `BlinkQLService.execute` uses.
 
 WHERE is DNF by precedence (AND binds tighter than OR), mapping 1:1 onto
 `Predicate(disjuncts=(Conjunction(atoms), ...))` — exactly the §4.1
@@ -26,6 +33,7 @@ GROUP BY must name a categorical column. Every rejection raises
 """
 from __future__ import annotations
 
+import dataclasses
 import difflib
 import re
 from typing import Any
@@ -177,12 +185,59 @@ def _literal_for_column(tbl, col: str, kind: str, raw: str) -> Any:
             f"{dict_vals.dtype} dictionary of column {col!r}") from e
 
 
+@dataclasses.dataclass(frozen=True)
+class ShowMetrics:
+    """SHOW METRICS [FORMAT {JSON|PROMETHEUS}] — export the metrics plane."""
+    fmt: str = "json"              # "json" | "prometheus"
+
+
+@dataclasses.dataclass(frozen=True)
+class Explain:
+    """EXPLAIN <select> — execute with forced tracing, return answer + plan."""
+    query: Query
+    text: str                      # the inner SELECT, as written
+
+
+def parse_statement(text: str, db) -> Query | ShowMetrics | Explain:
+    """Parse one BlinkQL statement of ANY kind: a SELECT (returned as the
+    engine `Query`), SHOW METRICS, or EXPLAIN <select>. This is the entry
+    point `BlinkQLService.execute` uses; `parse_blinkql` stays SELECT-only
+    for callers that want a `Query` and nothing else."""
+    p = _Parser(text)
+    if p.at_keyword("SHOW"):
+        p.take()
+        p.expect_keyword("METRICS")
+        fmt = "json"
+        if p.at_keyword("FORMAT"):
+            p.take()
+            t = p.peek()
+            if t is None or t[0] != "word" \
+                    or t[1].upper() not in ("JSON", "PROMETHEUS"):
+                raise p._fail("expected JSON or PROMETHEUS after FORMAT")
+            fmt = p.take()[1].lower()
+        if p.peek() is not None:
+            raise p._fail("unexpected trailing input after SHOW METRICS")
+        return ShowMetrics(fmt)
+    if p.at_keyword("EXPLAIN"):
+        p.take()
+        if p.i >= len(p.toks):
+            raise p._fail("EXPLAIN needs a statement to explain")
+        inner = text[p.toks[p.i][2]:]
+        return Explain(query=parse_blinkql(inner, db), text=inner.strip())
+    return parse_blinkql(text, db)
+
+
 def parse_blinkql(text: str, db) -> Query:
-    """Parse one BlinkQL statement against a BlinkDB's registered tables.
+    """Parse one BlinkQL SELECT against a BlinkDB's registered tables.
     Returns the engine `Query` (un-normalized; the service normalizes for
     cache/workload keys). Raises BlinkQLError with position context on any
-    syntactic or schema/dictionary resolution failure."""
+    syntactic or schema/dictionary resolution failure. Service statements
+    (SHOW METRICS, EXPLAIN) are rejected here — route those through
+    `parse_statement` / `BlinkQLService.execute`."""
     p = _Parser(text)
+    if p.at_keyword("SHOW", "EXPLAIN"):
+        raise p._fail("service statement — use BlinkQLService.execute "
+                      "(parse_blinkql parses SELECT only)")
     p.expect_keyword("SELECT")
 
     agg_word = p.expect_identifier("an aggregate (COUNT/SUM/AVG/QUANTILE)")

@@ -73,9 +73,13 @@ from typing import Sequence
 from repro.core.types import Answer, ErrorBound, Query, TimeBound
 from repro.fault import inject
 from repro.fault.inject import FaultError
-from repro.fault.supervisor import RetryLoop
+from repro.fault.supervisor import Heartbeat, RetryLoop
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.trace import QueryTrace, Tracer
 from repro.service.cache import AnswerCache
-from repro.service.parser import parse_blinkql
+from repro.service.parser import (Explain, ShowMetrics, parse_blinkql,
+                                  parse_statement)
 from repro.service.workload import WorkloadConfig, WorkloadMonitor
 
 
@@ -119,6 +123,14 @@ class ServiceConfig:
     serve_stale: bool = True        # stale-cache rung of the ladder
     stale_max_s: float = 300.0      # oldest stale answer worth serving
     shed_deadlines: bool = True     # deadline-aware admission load shedding
+    # Observability (docs/OBSERVABILITY.md): per-query tracing is SAMPLED —
+    # always-on for contract queries (ErrorBound/TimeBound) and while a
+    # fault plan is armed, 1-in-`trace_sample_every` for the rest. `trace`
+    # False disables the plane entirely (bit-identical answers, no trace
+    # attached); `trace_capacity` bounds the ring of retained traces.
+    trace: bool = True
+    trace_sample_every: int = 16
+    trace_capacity: int = 256
 
 
 @dataclasses.dataclass
@@ -129,6 +141,7 @@ class _Request:
     answer: Answer | None = None
     error: BaseException | None = None
     future: Future | None = None    # submit_async/submit_many completion
+    trace: QueryTrace | None = None  # sampled-in span tree (else None)
 
 
 class BlinkQLService:
@@ -157,12 +170,60 @@ class BlinkQLService:
         else:
             self.monitor = WorkloadMonitor(self.config.workload)
         self.workload_epochs: list[dict] = []
-        self.n_batches = 0
-        self.n_queries = 0
-        self.n_degraded = 0      # answers served with degraded=True
-        self.n_stale = 0         # of those, stale-cache serves
-        self.n_shed = 0          # requests rejected by deadline shedding
         self._queue: deque[_Request] = deque()
+        # Observability plane (docs/OBSERVABILITY.md). Scheduler instruments
+        # live on the ENGINE's registry so metrics_snapshot() exports one
+        # coherent document per engine; the legacy n_* ints are read-through
+        # properties over these handles — ONE bookkeeping path.
+        m = db.metrics
+        self._m_batches = m.counter("service_batches_total",
+                                    "Coalesced engine executions")
+        self._m_queries = m.counter(
+            "service_queries_total", "Queries served, by path",
+            labels=("path",))               # solo | batch | cache_hit
+        self._m_ladder = m.counter(
+            "service_ladder_total",
+            "Degradation-ladder rung activations (docs/FAULTS.md)",
+            labels=("rung",))  # shed|retry|degraded|stale_serve|exhausted
+        self._m_solo = m.counter("service_solo_bypass_total",
+                                 "Queries executed inline by the solo bypass")
+        self._m_width = m.histogram("service_batch_width",
+                                    "Requests per coalesced batch")
+        m.gauge("service_queue_depth", "Requests awaiting dispatch"
+                ).labels().set_function(lambda: float(len(self._queue)))
+        # A registry outlives any one service (several services can be built
+        # over one engine): the per-SERVICE n_* properties subtract the
+        # values observed at construction.
+        self._base = {
+            "batches": self._m_batches.value(),
+            "solo": self._m_queries.value("solo"),
+            "batch": self._m_queries.value("batch"),
+            "degraded": self._m_ladder.value("degraded"),
+            "stale_serve": self._m_ladder.value("stale_serve"),
+            "shed": self._m_ladder.value("shed"),
+        }
+        # The EWMA shedding load model reads/writes THROUGH the registry
+        # (the `_exec_ewma` property below): the gauge is the state.
+        self._g_ewma = m.gauge(
+            "service_exec_ewma_seconds",
+            "EWMA batch execution time (deadline-shedding load model)"
+        ).labels()
+        self.monitor.attach_metrics(m)
+        # Dispatcher liveness: worker 0 of a one-worker Heartbeat, beaten
+        # once per dispatch iteration; exported as a callback gauge and
+        # quoted by ServiceUnhealthyError so a stuck dispatcher reports HOW
+        # long it has been silent.
+        self.heartbeat = Heartbeat(1)
+        self._beat_step = 0
+        m.gauge("service_last_beat_age_s",
+                "Seconds since each worker's last heartbeat",
+                labels=("worker",)
+                ).set_function(lambda: self.heartbeat.last_beat_age_s(0),
+                               "dispatcher")
+        # Per-service tracing: sampling policy + ring retention.
+        self.tracer = Tracer(capacity=self.config.trace_capacity,
+                             sample_every=self.config.trace_sample_every)
+        self.tracer.enabled = self.config.trace
         self._cond = threading.Condition()
         self._stop = False
         self._epoch_pending = False   # cache-hit path saw drift: wake & check
@@ -208,13 +269,54 @@ class BlinkQLService:
         if self.cache is not None:
             self.cache.detach()   # don't leave hooks on a long-lived engine
         if self._dispatcher.is_alive():
+            _, age = self.heartbeat.stalest()
             raise ServiceUnhealthyError(
                 "dispatcher thread failed to join within 10s — it is wedged "
-                "(likely stuck in the engine) and is being leaked")
+                "(likely stuck in the engine) and is being leaked "
+                f"(last heartbeat {age:.1f}s ago)")
 
     @property
     def healthy(self) -> bool:
         return self._failed is None
+
+    # Legacy counter surface: callers (and the test suite) read these as
+    # plain ints; the metrics registry is the single source of truth, and
+    # each property is this SERVICE's share (value since construction).
+    def _since_base(self, key: str, value: float) -> int:
+        return int(round(value - self._base[key]))
+
+    @property
+    def n_batches(self) -> int:
+        return self._since_base("batches", self._m_batches.value())
+
+    @property
+    def n_queries(self) -> int:
+        """Queries EXECUTED (solo + batch) — cache hits excluded, exactly
+        the pre-registry semantics."""
+        return (self._since_base("solo", self._m_queries.value("solo"))
+                + self._since_base("batch", self._m_queries.value("batch")))
+
+    @property
+    def n_degraded(self) -> int:
+        return self._since_base("degraded",
+                                self._m_ladder.value("degraded"))
+
+    @property
+    def n_stale(self) -> int:
+        return self._since_base("stale_serve",
+                                self._m_ladder.value("stale_serve"))
+
+    @property
+    def n_shed(self) -> int:
+        return self._since_base("shed", self._m_ladder.value("shed"))
+
+    @property
+    def _exec_ewma(self) -> float:
+        return self._g_ewma.value
+
+    @_exec_ewma.setter
+    def _exec_ewma(self, v: float) -> None:
+        self._g_ewma.set(v)
 
     # ----------------------------------------------------------- admission
     def _shed_guard(self, q: Query) -> None:
@@ -231,7 +333,7 @@ class BlinkQLService:
         expected = self.config.batch_window_s \
             + batches_ahead * self._exec_ewma
         if expected > bound.seconds:
-            self.n_shed += 1
+            self._m_ladder.labels("shed").inc()
             raise DeadlineShedError(
                 f"deadline {bound.seconds:.3f}s cannot be met: "
                 f"{len(self._queue)} request(s) queued ahead at "
@@ -262,6 +364,7 @@ class BlinkQLService:
         (≈0 for a hit), and a cached workload still drifts — wake the
         dispatcher so the reoptimize trigger is evaluated even when nothing
         executes."""
+        self._m_queries.labels("cache_hit").inc()
         self.monitor.record(q, hit, cache_hit=True,
                             elapsed_s=time.monotonic() - t0)
         if self.config.reoptimize and self.maintainer is not None \
@@ -271,6 +374,62 @@ class BlinkQLService:
                 self._epoch_pending = True
                 self._cond.notify_all()
 
+    # ----------------------------------------------------------- tracing
+    def _start_trace(self, q: Query, text: str, t0: float, t_parsed: float,
+                     forced: bool = False) -> QueryTrace | None:
+        """Sampling decision + root/parse backfill. `t0` is the submit-path
+        monotonic stamp taken before parsing; span clocks are the SAME
+        monotonic clock (obs.clock.now_s is time.monotonic), so it backdates
+        the trace and the parse span to cover the whole request."""
+        reason = self.tracer.should_sample(
+            contract=q.bound is not None, forced=forced)
+        if reason is None:
+            return None
+        tr = self.tracer.start(text, reason)
+        tr.t0 = t0
+        root = tr.open_span("request", {})
+        root.t0 = t0
+        # New threads (the dispatcher) adopting this trace nest under the
+        # request root, not at top level.
+        tr.set_anchor(root.index)
+        rec = tr.open_span("parse", {})
+        tr.close_span(rec)
+        rec.t0, rec.t1 = t0, t_parsed
+        return tr
+
+    def _finish_trace(self, tr: QueryTrace | None,
+                      error: BaseException | None = None) -> None:
+        """Close the request root and retire the trace into the ring."""
+        if tr is None:
+            return
+        if tr.spans:
+            tr.close_span(tr.spans[0])
+        self.tracer.finish(
+            tr, None if error is None else type(error).__name__)
+
+    def _attach_trace(self, ans: Answer, tr: QueryTrace | None) -> Answer:
+        """Finish `tr` and return a copy of `ans` carrying it. Called once
+        per REQUEST at delivery, always AFTER caching — cached answers stay
+        untraced (a trace is one request's history, not the answer's), and
+        a traced answer is bit-identical to its untraced original."""
+        if tr is None:
+            return ans
+        self._finish_trace(tr)
+        return dataclasses.replace(ans, trace=tr, timings=tr.timings())
+
+    def _cache_lookup(self, q: Query, tr: QueryTrace | None) -> Answer | None:
+        """Cache probe with its span recorded straight onto `tr` (no
+        thread-local activation needed: the probe is synchronous here)."""
+        if self.cache is None:
+            return None
+        rec = None if tr is None else tr.open_span("cache", {})
+        hit = self.cache.get(q)
+        if rec is not None:
+            rec.attrs["hit"] = hit is not None
+            tr.close_span(rec)
+        return hit
+
+    # ----------------------------------------------------------- submission
     def submit(self, query: str | Query,
                timeout: float | None = None) -> Answer:
         """Parse (if text), admit, and block until answered.
@@ -281,33 +440,48 @@ class BlinkQLService:
         any engine-side execution error the degradation ladder could not
         absorb."""
         t0 = time.monotonic()
+        text = query if isinstance(query, str) else repr(query)
         if isinstance(query, str):
             query = parse_blinkql(query, self.db)
         q = query.normalized()
-        if self.cache is not None:
-            hit = self.cache.get(q)
-            if hit is not None:
-                self._record_hit(q, hit, t0)
-                return hit
+        tr = self._start_trace(q, text, t0, time.monotonic())
+        return self._submit_traced(q, tr, t0, timeout)
+
+    def _submit_traced(self, q: Query, tr: QueryTrace | None, t0: float,
+                       timeout: float | None) -> Answer:
+        hit = self._cache_lookup(q, tr)
+        if hit is not None:
+            self._record_hit(q, hit, t0)
+            return self._attach_trace(hit, tr)
         # Inline execution cannot honor a caller timeout (the caller IS the
         # executor — there is no one to stop waiting on), so timed submits
         # always take the queued path, whose done.wait(timeout) contract
         # raises TimeoutError as documented.
         if self.config.solo_bypass and timeout is None:
-            ans = self._try_solo_bypass(q, t0)
+            ans = self._try_solo_bypass(q, t0, tr)
             if ans is not None:
                 return ans
-        req = _Request(q, threading.Event(), time.monotonic())
-        self._admit([req])
+        req = _Request(q, threading.Event(), time.monotonic(), trace=tr)
+        try:
+            self._admit([req])
+        except BaseException as e:
+            self._finish_trace(tr, e)   # shed / unhealthy / closed
+            raise
         if not req.done.wait(timeout):
             # Free the admission slot: an abandoned request must not occupy
             # max_queue (a no-op if the dispatcher already dequeued it).
+            removed = False
             with self._cond:
                 try:
                     self._queue.remove(req)
+                    removed = True
                 except ValueError:
                     pass
-            raise TimeoutError("query was not answered within the timeout")
+            err = TimeoutError("query was not answered within the timeout")
+            if removed:
+                # Still queued: nobody else will ever finish this trace.
+                self._finish_trace(tr, err)
+            raise err
         if req.error is not None:
             raise req.error
         assert req.answer is not None
@@ -321,19 +495,25 @@ class BlinkQLService:
         submissions always take the queued path (the bypass exists to skip
         waiting, and an async caller is not waiting)."""
         t0 = time.monotonic()
+        text = query if isinstance(query, str) else repr(query)
         if isinstance(query, str):
             query = parse_blinkql(query, self.db)
         q = query.normalized()
+        tr = self._start_trace(q, text, t0, time.monotonic())
         fut: Future = Future()
         fut.set_running_or_notify_cancel()
-        if self.cache is not None:
-            hit = self.cache.get(q)
-            if hit is not None:
-                self._record_hit(q, hit, t0)
-                fut.set_result(hit)
-                return fut
-        req = _Request(q, threading.Event(), time.monotonic(), future=fut)
-        self._admit([req])
+        hit = self._cache_lookup(q, tr)
+        if hit is not None:
+            self._record_hit(q, hit, t0)
+            fut.set_result(self._attach_trace(hit, tr))
+            return fut
+        req = _Request(q, threading.Event(), time.monotonic(), future=fut,
+                       trace=tr)
+        try:
+            self._admit([req])
+        except BaseException as e:
+            self._finish_trace(tr, e)
+            raise
         return fut
 
     def submit_many(self, queries: Sequence[str | Query],
@@ -347,20 +527,27 @@ class BlinkQLService:
         results: list[Answer | None] = [None] * len(queries)
         pending: list[tuple[int, _Request]] = []
         for i, query in enumerate(queries):
+            text = query if isinstance(query, str) else repr(query)
             if isinstance(query, str):
                 query = parse_blinkql(query, self.db)
             q = query.normalized()
-            hit = self.cache.get(q) if self.cache is not None else None
+            tr = self._start_trace(q, text, t0, time.monotonic())
+            hit = self._cache_lookup(q, tr)
             if hit is not None:
                 self._record_hit(q, hit, t0)
-                results[i] = hit
+                results[i] = self._attach_trace(hit, tr)
             else:
                 req = _Request(q, threading.Event(), time.monotonic(),
-                               future=Future())
+                               future=Future(), trace=tr)
                 req.future.set_running_or_notify_cancel()
                 pending.append((i, req))
         if pending:
-            self._admit([r for _, r in pending])
+            try:
+                self._admit([r for _, r in pending])
+            except BaseException as e:
+                for _, req in pending:
+                    self._finish_trace(req.trace, e)
+                raise
             deadline = None if timeout is None else t0 + timeout
             try:
                 for i, req in pending:
@@ -383,7 +570,8 @@ class BlinkQLService:
                     "batch was not answered within the timeout") from None
         return results
 
-    def _try_solo_bypass(self, q: Query, t0: float) -> Answer | None:
+    def _try_solo_bypass(self, q: Query, t0: float,
+                         tr: QueryTrace | None = None) -> Answer | None:
         """Inline execution for demonstrably solo traffic: nothing queued
         and the previous batch had ≤ 1 request. Returns None (caller falls
         back to the queued path) when another request is in flight, the
@@ -405,28 +593,41 @@ class BlinkQLService:
             snapshot = (self.cache.snapshot(q.table)
                         if self.cache is not None else None)
             t_exec = time.monotonic()
+            if tr is not None:
+                # Admission marker: this request skipped the queue entirely.
+                rec = tr.open_span("admit", {"solo_bypass": True})
+                tr.close_span(rec)
+                rec.t0, rec.t1 = t0, t_exec
             try:
                 # Ladder rung 1: retry-with-backoff around the engine call
                 # (the engine's own sharded path absorbs shard faults into
                 # degraded answers before an error ever reaches here).
-                ans = self._retry(lambda: self.db.query(q))
+                # activate() makes this thread's engine spans record into
+                # the request's trace.
+                with obs_trace.activate(tr):
+                    ans = self._retry(lambda: self.db.query(q))
             except BaseException as e:   # noqa: BLE001
-                fallback = self._fallback_result(q, e)
+                with obs_trace.activate(tr):
+                    fallback = self._fallback_result(q, e)
                 if isinstance(fallback, BaseException):
                     # A non-transient error propagates to this caller alone
                     # — exactly the per-query error contract of the batched
                     # fallback path. (No `from None`: _fallback_result sets
                     # __cause__ on the errors it mints.)
+                    self._finish_trace(tr, fallback)
                     raise fallback
                 ans = fallback
             self._note_exec_time(time.monotonic() - t_exec)
             self._last_batch_size = 1
-            self.n_batches += 1
-            self.n_queries += 1
+            self._m_batches.inc()
+            self._m_queries.labels("solo").inc()
+            self._m_solo.inc()
+            self._m_width.observe(1.0)
             self._count_served(ans)
             if self.cache is not None and not ans.degraded:
                 self.cache.put(q, ans, snapshot=snapshot)
             self.monitor.record(q, ans, elapsed_s=time.monotonic() - t0)
+            ans = self._attach_trace(ans, tr)
         finally:
             self._exec_lock.release()
         if self.config.reoptimize and self.maintainer is not None \
@@ -440,11 +641,19 @@ class BlinkQLService:
     # ------------------------------------------------- degradation ladder
     def _retry(self, step_fn):
         """Rung 1: RetryLoop over the transient tuple; `raise_last` keeps
-        the final original exception (per-error-type contracts downstream)."""
+        the final original exception (per-error-type contracts downstream).
+        Each transient failure leaves a ladder.retry marker span in any
+        active traces and bumps the ladder counter."""
+        def _on_failure(e: Exception, attempt: int) -> None:
+            self._m_ladder.labels("retry").inc()
+            with obs_trace.span("ladder.retry", attempt=attempt,
+                                error=type(e).__name__):
+                pass
         return RetryLoop(max_retries=self.config.retry_attempts,
                          backoff_s=self.config.retry_backoff_s,
                          retry_on=self.config.retry_on,
-                         raise_last=True).run(step_fn)
+                         raise_last=True).run(step_fn,
+                                              on_failure=_on_failure)
 
     def _fallback_result(self, q: Query, err: BaseException
                          ) -> Answer | BaseException:
@@ -463,6 +672,9 @@ class BlinkQLService:
             if stale is not None:
                 ans, age = stale
                 if age <= self.config.stale_max_s:
+                    with obs_trace.span("ladder.stale_serve", age_s=age,
+                                        error=type(err).__name__):
+                        pass
                     # A stale answer was certified against data that has
                     # since changed: the contract provenance cannot survive
                     # the serve, so an ErrorBound claim is demoted (never
@@ -473,6 +685,9 @@ class BlinkQLService:
                             bound_met=False, certified=False)
                     return dataclasses.replace(ans, degraded=True,
                                                staleness_s=age)
+        self._m_ladder.labels("exhausted").inc()
+        with obs_trace.span("ladder.exhausted", error=type(err).__name__):
+            pass
         final = DegradedServiceError(
             f"execution failed after {self.config.retry_attempts} "
             f"retr{'y' if self.config.retry_attempts == 1 else 'ies'} and "
@@ -486,9 +701,9 @@ class BlinkQLService:
 
     def _count_served(self, ans: Answer) -> None:
         if ans.degraded:
-            self.n_degraded += 1
+            self._m_ladder.labels("degraded").inc()
             if ans.staleness_s > 0.0:
-                self.n_stale += 1
+                self._m_ladder.labels("stale_serve").inc()
 
     def _finish(self, r: _Request) -> None:
         """Deliver a request's result to both completion channels."""
@@ -548,6 +763,8 @@ class BlinkQLService:
         try:
             while True:
                 batch = self._collect_batch()
+                self._beat_step += 1
+                self.heartbeat.beat(0, self._beat_step)
                 # Track the held batch so a dispatcher death between
                 # dequeue and delivery still fails these requests (they are
                 # in neither the queue nor anyone else's hands).
@@ -574,8 +791,10 @@ class BlinkQLService:
         service unhealthy (later admissions are rejected with a typed
         error), then fail every request it was holding or that was queued —
         their submitters must not hang until their timeouts."""
+        _, age = self.heartbeat.stalest()
         failure = ServiceUnhealthyError(
-            f"dispatcher thread died: {err!r}")
+            f"dispatcher thread died: {err!r} "
+            f"(last heartbeat {age:.1f}s ago)")
         failure.__cause__ = err
         with self._cond:
             self._failed = failure
@@ -590,6 +809,7 @@ class BlinkQLService:
                 f"request abandoned: dispatcher thread died ({err!r})")
             e.__cause__ = err
             r.error = e
+            self._finish_trace(r.trace, e)
             self._finish(r)
 
     def _execute(self, batch: list[_Request]) -> None:
@@ -615,27 +835,44 @@ class BlinkQLService:
                       for t in {q.table for q in unique}}
                      if self.cache is not None else {})
         t_exec = time.monotonic()
+        for r in batch:
+            if r.trace is not None:
+                # Backfill the queue wait (admission → this execution slot):
+                # t_submit is the same monotonic clock spans use.
+                rec = r.trace.open_span("admit", {"batch": len(batch)})
+                r.trace.close_span(rec)
+                rec.t0, rec.t1 = r.t_submit, t_exec
+        traces = [r.trace for r in batch if r.trace is not None]
         try:
-            answers: list = self._retry(lambda: self.db.query_batch(
-                unique, deadline_headroom_s=self.config.batch_window_s))
+            # The shared call activates EVERY sampled trace in the batch:
+            # a coalesced scan legitimately belongs to each query it serves.
+            with obs_trace.activate(*traces):
+                answers: list = self._retry(lambda: self.db.query_batch(
+                    unique, deadline_headroom_s=self.config.batch_window_s))
         except BaseException:                # noqa: BLE001
             # One bad query must not poison every session in the batch:
             # fall back to per-query execution so each request gets its OWN
             # answer, degraded answer, or error — and each failing query
-            # walks the ladder's lower rungs individually.
+            # walks the ladder's lower rungs individually. Only THAT query's
+            # traces are active here — ladder spans must not leak into the
+            # rest of the batch.
             answers = []
             for q in unique:
+                trs = [r.trace for r in batch if r.query == q]
                 try:
-                    answers.append(self._retry(
-                        lambda q=q: self.db.query_batch(
-                            [q],
-                            deadline_headroom_s=self.config.batch_window_s
-                        )[0]))
+                    with obs_trace.activate(*trs):
+                        answers.append(self._retry(
+                            lambda q=q: self.db.query_batch(
+                                [q],
+                                deadline_headroom_s=self.config.batch_window_s
+                            )[0]))
                 except BaseException as e:   # noqa: BLE001 — per-query
-                    answers.append(self._fallback_result(q, e))
+                    with obs_trace.activate(*trs):
+                        answers.append(self._fallback_result(q, e))
         self._note_exec_time(time.monotonic() - t_exec)
-        self.n_batches += 1
-        self.n_queries += len(batch)
+        self._m_batches.inc()
+        self._m_queries.labels("batch").inc(len(batch))
+        self._m_width.observe(float(len(batch)))
         for q, ans in zip(unique, answers):
             # Degraded answers (shard loss, stale re-serves) are never
             # cached: the cache must only ever hit with full-fidelity
@@ -660,8 +897,13 @@ class BlinkQLService:
                         pass
                 claimed.add(id(result))
                 r.error = result
+                self._finish_trace(r.trace, result)
             else:
-                r.answer = result
+                # Trace attachment is per-REQUEST and happens here, after
+                # the cache.put loop above: the cache only ever holds
+                # untraced answers, and deduped requests each get their own
+                # traced copy.
+                r.answer = self._attach_trace(result, r.trace)
                 self._count_served(result)
                 self.monitor.record(
                     r.query, result,
@@ -693,6 +935,61 @@ class BlinkQLService:
             return
         self.workload_epochs.append(report)
         self.monitor.rebase(templates)
+
+    # ------------------------------------------------------- observability
+    def metrics_snapshot(self) -> dict:
+        """One merged, stable-schema document (docs/OBSERVABILITY.md): the
+        engine's registry (engine/scheduler/cache/workload/maintenance
+        planes) unioned with the process-global registry (fault injection).
+        This is what `SHOW METRICS` returns."""
+        return obs_metrics.merge_snapshots(
+            self.db.metrics.snapshot(),
+            obs_metrics.default_registry().snapshot())
+
+    def render_prometheus(self) -> str:
+        """The merged snapshot in Prometheus text exposition format."""
+        return obs_metrics.render_prometheus(self.metrics_snapshot())
+
+    def explain(self, query: str | Query,
+                timeout: float | None = None) -> dict:
+        """Execute with tracing FORCED (sampling bypassed; honored unless
+        config.trace is False) and return a JSON-friendly report:
+        {"answer": Answer, "trace": span tree, "timings": stage seconds,
+        "plan": the planner's decision attributes (family, K, certified,
+        ...)}."""
+        t0 = time.monotonic()
+        text = query if isinstance(query, str) else repr(query)
+        if isinstance(query, str):
+            query = parse_blinkql(query, self.db)
+        q = query.normalized()
+        tr = self._start_trace(q, text, t0, time.monotonic(), forced=True)
+        ans = self._submit_traced(q, tr, t0, timeout)
+        if tr is None:   # tracing disabled by config: answer only
+            return {"answer": ans, "trace": None, "timings": {}, "plan": {}}
+        plan: dict = {}
+        for s in tr.find("plan"):
+            plan.update(s.attrs)
+        if not plan and tr.find("cache"):
+            plan["cached"] = True
+        return {"answer": ans, "trace": tr.to_dict(),
+                "timings": tr.timings(), "plan": plan}
+
+    def execute(self, text: str, timeout: float | None = None):
+        """One BlinkQL statement of ANY kind:
+
+        * ``SELECT ...``                     → Answer (exactly `submit`);
+        * ``EXPLAIN <select>``               → the `explain` report dict;
+        * ``SHOW METRICS``                   → merged snapshot dict;
+        * ``SHOW METRICS FORMAT PROMETHEUS`` → exposition text (str).
+        """
+        stmt = parse_statement(text, self.db)
+        if isinstance(stmt, ShowMetrics):
+            if stmt.fmt == "prometheus":
+                return self.render_prometheus()
+            return self.metrics_snapshot()
+        if isinstance(stmt, Explain):
+            return self.explain(stmt.text, timeout=timeout)
+        return self.submit(stmt, timeout=timeout)
 
     # ----------------------------------------------------------- stats
     def stats(self) -> dict:

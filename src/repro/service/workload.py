@@ -109,6 +109,23 @@ class WorkloadMonitor:
         self._baseline: dict[frozenset, float] = dict(baseline or {})
         self._since_epoch = 0
         self.epochs_triggered = 0
+        self._m_outcomes = None    # registry mirror (attach_metrics)
+        self._m_epochs = None
+
+    def attach_metrics(self, registry) -> None:
+        """Mirror the monitor's observations onto a shared MetricsRegistry
+        (the scheduler attaches the engine's): per-(table, outcome) query
+        counts, epoch triggers, and drift as a callback gauge evaluated at
+        snapshot time."""
+        self._m_outcomes = registry.counter(
+            "workload_queries_total",
+            "Recorded queries by table and contract outcome",
+            labels=("table", "outcome"))
+        self._m_epochs = registry.counter(
+            "workload_epochs_total", "Re-optimization epochs triggered")
+        registry.gauge("workload_drift_score",
+                       "TV distance of recent QCS stream vs baseline"
+                       ).labels().set_function(lambda: self.drift_score())
 
     @classmethod
     def from_templates(cls, templates: Sequence[QueryTemplate],
@@ -128,6 +145,7 @@ class WorkloadMonitor:
         scan time the Answer reports."""
         qcs = frozenset(q.where_group_columns)
         key = (q.table, qcs)
+        outcome = "unjudged"
         with self._lock:
             self._window.append(key)
             self._all_time[key] += 1
@@ -140,10 +158,15 @@ class WorkloadMonitor:
                 met = _met_bound(q, answer, elapsed_s)
                 if met is None:
                     st.unbounded += 1
+                    outcome = "unbounded"
                 elif met:
                     st.bound_met += 1
+                    outcome = "bound_met"
                 else:
                     st.bound_missed += 1
+                    outcome = "bound_missed"
+        if self._m_outcomes is not None:
+            self._m_outcomes.labels(q.table, outcome).inc()
 
     # -- statistics ----------------------------------------------------------
     def qcs_frequencies(self, table: str | None = None,
@@ -210,6 +233,8 @@ class WorkloadMonitor:
             if templates is not None:
                 self._baseline = {t.columns: t.weight for t in templates}
                 self.epochs_triggered += 1
+                if self._m_epochs is not None:
+                    self._m_epochs.inc()
             else:
                 self._baseline = {}
                 for (tbl, qcs), n in Counter(self._window).items():

@@ -17,6 +17,7 @@ from repro.data import synth
 from repro.data.tokens import DataConfig, SyntheticTokenStream
 from repro.fault.supervisor import (Heartbeat, RetryLoop, StragglerPolicy,
                                     elastic_plan)
+from repro.obs.clock import now_s
 from repro.train import optim as optim_lib
 
 
@@ -55,7 +56,7 @@ def test_checkpoint_restore_missing_raises():
 
 def test_straggler_detection():
     hb = Heartbeat(4)
-    now = time.time()
+    now = now_s()   # Heartbeat stamps are monotonic — use the same clock
     for w in range(4):
         hb.beat(w, 1)
         hb.beat(w, 2)
