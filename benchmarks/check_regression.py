@@ -151,6 +151,23 @@ GATES = [
     Gate("BENCH_obs.json", "obs_overhead_s*", "qps_ratio", floor=0.95),
     Gate("BENCH_obs.json", "obs_overhead_s*", "behavior_drift",
          higher=False, ceiling=0.0),
+    # ---- shard-count scaling (ISSUE-10): placement is fault-domain
+    # metadata, so the clean-path curve at 256 sessions is a PARITY
+    # contract — qps at every shard count stays within noise of the
+    # 1-shard run (floor 0.9: any sustained dip means shard count leaked
+    # into the fused clean path) and answers are bit-identical to the
+    # unsharded direct-query path (ceiling 0.0, exact). The loss row is
+    # the serving-tier availability floor under machine loss: every
+    # admitted query still answers (floor 1.0) and carries degraded=True
+    # provenance (floor 0.95, same bar as fault_shard_down).
+    Gate("BENCH_serve.json", "serve_scaling_shards*",
+         "qps_ratio_vs_1shard", floor=0.9),
+    Gate("BENCH_serve.json", "serve_scaling_shards*",
+         "max_abs_diff_vs_unsharded", higher=False, ceiling=0.0),
+    Gate("BENCH_serve.json", "serve_scaling_shard_loss", "availability",
+         floor=1.0),
+    Gate("BENCH_serve.json", "serve_scaling_shard_loss", "degraded_frac",
+         floor=0.95),
 ]
 
 
@@ -205,10 +222,21 @@ def _check_one(gate: Gate, name: str, fresh: dict, base: dict | None
     return out
 
 
-def check(bench_dir: str, baseline_dir: str) -> int:
-    violations: list[str] = []
+def check(bench_dir: str, baseline_dir: str,
+          only: list[str] | None = None,
+          report_path: str | None = None) -> int:
+    """`only` restricts checking to the named BENCH files (for CI jobs
+    that regenerate a single benchmark, e.g. the shard-scaling job).
+    `report_path` writes a machine-readable gate report regardless of
+    outcome — CI uploads it as an artifact so a red run still ships the
+    numbers that failed it."""
+    files = BENCH_FILES if not only else tuple(f for f in BENCH_FILES
+                                               if f in only)
+    unknown = [] if not only else [f for f in only if f not in BENCH_FILES]
+    violations: list[str] = [f"--only names unknown benchmark file {f!r}"
+                             for f in unknown]
     checked = 0
-    for file in BENCH_FILES:
+    for file in files:
         fresh_path = os.path.join(bench_dir, file)
         base_path = os.path.join(baseline_dir, file)
         gates = [g for g in GATES if g.file == file]
@@ -236,6 +264,12 @@ def check(bench_dir: str, baseline_dir: str) -> int:
         print(f"  REGRESSION: {v}")
     if not violations:
         print("  all gates passed")
+    if report_path:
+        with open(report_path, "w") as f:
+            json.dump({"files": list(files), "gated_metrics_checked": checked,
+                       "violations": violations,
+                       "passed": not violations}, f, indent=1)
+        print(f"  gate report written to {report_path}")
     return 1 if violations else 0
 
 
@@ -261,10 +295,17 @@ def main() -> None:
     ap.add_argument("--rebaseline", action="store_true",
                     help="copy the fresh BENCH_*.json over the baselines "
                          "instead of checking")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="BENCH_x.json",
+                    help="check only this benchmark file (repeatable); "
+                         "other files' gates are skipped entirely")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write a JSON gate report here, pass or fail")
     args = ap.parse_args()
     if args.rebaseline:
         sys.exit(rebaseline(args.bench_dir, args.baselines))
-    sys.exit(check(args.bench_dir, args.baselines))
+    sys.exit(check(args.bench_dir, args.baselines,
+                   only=args.only, report_path=args.report))
 
 
 if __name__ == "__main__":

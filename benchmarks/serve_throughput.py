@@ -15,6 +15,17 @@ Two serving disciplines over the SAME warm engine:
 
 Reports queries/sec plus p50/p99 per-request latency at 1/8/32 sessions and
 emits BENCH_serve.json (CI-tracked, gated by benchmarks/check_regression.py).
+
+Shard-count scaling (ISSUE-10): a second section drives 256 simulated
+sessions through the coalesced service at n_logical_shards ∈ {1, 2, 4, 8}.
+Placement is fault-domain metadata — with no fault plan armed every shard
+count runs the SAME fused single-pass program — so the curve's acceptance
+bar is parity: qps_ratio_vs_1shard stays ≥ 0.9 at every shard count (any
+sustained dip means shard count leaked into the clean path) and
+max_abs_diff_vs_unsharded is exactly 0.0 (answers bit-identical to the
+unsharded direct-query path). A final row arms a single-shard-loss fault
+plan (shard 1, both replicas) and reports availability/degraded_frac at 256
+sessions — the serving-tier availability floor under machine loss.
 The ISSUE-4 acceptance floor is coalesced qps ≥ 3× naive at 32 sessions; the
 ISSUE-5 floor is speedup ≥ 1.0× at 1 session (the scheduler's solo bypass —
 a lone analyst must not pay the batching window; with the bypass the two
@@ -42,6 +53,8 @@ from repro.service import BlinkQLService, ServiceConfig
 from benchmarks import common
 
 SESSION_COUNTS = (1, 8, 32)
+SHARD_COUNTS = (1, 2, 4, 8)
+SCALE_SESSIONS = 256
 
 
 def _texts(db, n: int) -> list[str]:
@@ -79,8 +92,122 @@ def _run_sessions(n_sessions: int, per_session: int, texts: list[str],
     return time.perf_counter() - t0, latencies
 
 
+def _drive_outcomes(svc, n_sessions: int, per_session: int,
+                    texts: list[str]) -> tuple[float, np.ndarray]:
+    """Like _run_sessions but under an armed fault plan: every submit must
+    end in an answer (1), a degraded answer (2), or a typed error (3) —
+    that's the chaos contract; a hang would stall the join and fail CI on
+    the job timeout. Returns (elapsed_s, outcomes)."""
+    outcomes = np.zeros(n_sessions * per_session, dtype=np.int32)
+    barrier = threading.Barrier(n_sessions + 1)
+
+    def session(sid: int):
+        barrier.wait()
+        for j in range(per_session):
+            i = sid * per_session + j
+            try:
+                ans = svc.submit(texts[i % len(texts)], timeout=60.0)
+                outcomes[i] = 2 if ans.degraded else 1
+            except Exception:   # typed service errors count as unavailable
+                outcomes[i] = 3
+
+    threads = [threading.Thread(target=session, args=(s,))
+               for s in range(n_sessions)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0, outcomes
+
+
+def _scaling_rows(db, texts: list[str], *, n_sessions: int,
+                  per_session: int, batch_window_s: float,
+                  shard_counts=SHARD_COUNTS) -> list[dict]:
+    """The ISSUE-10 shard-count scaling curve + single-shard-loss row."""
+    from repro.service.parser import parse_blinkql
+    from repro.fault.inject import FaultPlan, FaultSpec, arm
+
+    saved_shards = db.config.n_logical_shards
+    # Unsharded direct-query reference answers for the bit-identity metric.
+    ref_texts = texts[:16]
+    reference = [db.query(parse_blinkql(t, db).normalized())
+                 for t in ref_texts]
+
+    rows = []
+    base_qps = None
+    total = n_sessions * per_session
+    for n_shards in shard_counts:
+        db.config.n_logical_shards = n_shards
+        svc = BlinkQLService(db, config=ServiceConfig(
+            batch_window_s=batch_window_s, use_cache=False))
+        runs = [_run_sessions(n_sessions, per_session, texts, svc.submit)
+                for _ in range(2)]
+        max_diff = 0.0
+        for text, ref in zip(ref_texts, reference):
+            ans = svc.submit(text)
+            got = {g.key: g.estimate for g in ans.groups}
+            want = {g.key: g.estimate for g in ref.groups}
+            keys = set(got) | set(want)
+            max_diff = max([max_diff] + [
+                abs(got.get(k, float("nan")) - want.get(k, float("nan")))
+                for k in keys])
+        svc.close()
+        elapsed = min(r[0] for r in runs)
+        qps = total / elapsed
+        if base_qps is None:
+            base_qps = qps
+        ratio = qps / base_qps
+        rows.append({
+            "name": f"serve_scaling_shards{n_shards}",
+            "us_per_call": elapsed / total * 1e6,
+            "derived": (f"qps={qps:.1f} ratio_vs_1shard={ratio:.2f} "
+                        f"max_abs_diff={max_diff:.3g}"),
+            "n_shards": n_shards,
+            "n_sessions": n_sessions,
+            "queries_per_session": per_session,
+            "qps": qps,
+            "qps_ratio_vs_1shard": ratio,
+            "max_abs_diff_vs_unsharded": float(max_diff),
+        })
+
+    # Single-shard loss at the full session count: kill every replica of
+    # logical shard 1 — the engine's sharded path must absorb it into
+    # degraded answers (HT reweight), not errors (availability floor 1.0).
+    loss_shards = 4
+    db.config.n_logical_shards = loss_shards
+    svc = BlinkQLService(db, config=ServiceConfig(
+        batch_window_s=batch_window_s, use_cache=False))
+    plan = FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                match=(("shard", 1),))], seed=0)
+    with arm(plan):
+        elapsed, outcomes = _drive_outcomes(svc, n_sessions, per_session,
+                                            texts)
+    svc.close()
+    db.config.n_logical_shards = saved_shards
+    answered = int(np.sum((outcomes == 1) | (outcomes == 2)))
+    degraded = int(np.sum(outcomes == 2))
+    rows.append({
+        "name": "serve_scaling_shard_loss",
+        "us_per_call": elapsed / total * 1e6,
+        "derived": (f"availability={answered / total:.3f} "
+                    f"degraded_frac={degraded / max(answered, 1):.3f}"),
+        "n_shards": loss_shards,
+        "n_sessions": n_sessions,
+        "queries_per_session": per_session,
+        "qps": total / elapsed,
+        "availability": answered / total,
+        "degraded_frac": degraded / max(answered, 1),
+    })
+    return rows
+
+
 def run(n_rows: int = 400_000, session_counts=SESSION_COUNTS,
         per_session: int = 16, batch_window_s: float = 0.01,
+        scale_sessions: int = SCALE_SESSIONS,
+        scale_per_session: int | None = None,
+        shard_counts=SHARD_COUNTS,
         json_path: str | None = None) -> list[dict]:
     db = common.conviva_db(n_rows=n_rows)
     if ("City",) not in db.families["sessions"]:
@@ -162,6 +289,12 @@ def run(n_rows: int = 400_000, session_counts=SESSION_COUNTS,
             "batch_window_s": batch_window_s,
             "n_rows": n_rows,
         })
+    if scale_per_session is None:
+        scale_per_session = max(2, per_session // 4)
+    rows.extend(_scaling_rows(
+        db, texts, n_sessions=scale_sessions,
+        per_session=scale_per_session, batch_window_s=batch_window_s,
+        shard_counts=shard_counts))
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=1)

@@ -33,6 +33,7 @@ from repro.core.selection import rewrite_disjuncts, select_family
 from repro.fault import inject
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.sharding import placement as place_lib
 
 
 def _scan_stream_bytes(striped: "exec_lib.StripedFamily") -> int:
@@ -80,6 +81,15 @@ class EngineConfig:
     n_logical_shards: int = 4
     shard_replicas: int = 2
     straggler_deadline_s: float | None = None   # per-attempt deadline
+    # Fleet placement (sharding/placement.py): logical shards get HOME
+    # processes round-robin over n_processes simulated processes; replica
+    # attempt r of shard s executes on process (s + r) % n_processes, so a
+    # process-kill fault fails over to replicas homed elsewhere. Families
+    # the workload monitor marks HOT (mark_hot_family) run hot_replicas-long
+    # chains. Placement is provenance + fault-domain metadata only — the
+    # fault-free fused path is untouched (docs/SERVICE.md).
+    n_processes: int = 2
+    hot_replicas: int = 3
 
 
 # Largest Q per fused scan invocation. Pallas: the Qp·B VMEM terms scale
@@ -190,6 +200,23 @@ class BlinkDB:
         self._m_shard_reroutes = self.metrics.counter(
             "engine_shard_reroutes_total",
             "Logical shards served by a replica > 0")
+        self._m_shard_scans = self.metrics.counter(
+            "engine_shard_scans_total",
+            "Sharded-path scans by logical shard (per-shard serving load)",
+            labels=("shard",))
+        self._m_hot_promotions = self.metrics.counter(
+            "engine_hot_promotions_total",
+            "Families promoted to hot replication by the workload monitor")
+        # Shard placement over the simulated process fleet (ISSUE-10):
+        # lazily built per (table, family, n_logical), widened on hot marks.
+        self.placements = place_lib.PlacementMap(place_lib.PlacementConfig(
+            n_processes=self.config.n_processes,
+            n_replicas=self.config.shard_replicas,
+            hot_replicas=self.config.hot_replicas))
+        self.metrics.gauge(
+            "engine_hot_families", "Families under hot replication"
+        ).labels().set_function(
+            lambda: float(len(self.placements.hot_families())))
         self.tables: dict[str, table_lib.Table] = {}
         # table -> {phi: SampleFamily}; striped views cached alongside
         self.families: dict[str, dict[tuple[str, ...], samp_lib.SampleFamily]] = {}
@@ -863,6 +890,74 @@ class BlinkDB:
         return (plan is not None and bool(plan)
                 and self.config.n_logical_shards > 1)
 
+    # ------------------------------------------- fleet placement (ISSUE-10)
+    def _placement_for(self, table_name: str, phi: tuple[str, ...]
+                       ) -> "place_lib.FamilyPlacement":
+        return self.placements.for_family(table_name, phi,
+                                          self.config.n_logical_shards)
+
+    def _set_placement_attrs(self, sp, table_name: str,
+                             phi: tuple[str, ...], fam, struct, consts_list,
+                             flat: bool = False) -> None:
+        """Scan-span shard-placement provenance (docs/OBSERVABILITY.md):
+        the family's placement over the process fleet plus the routed shard
+        subset when the batch's template pins every φ column by equality
+        (placement.route_shard_set — provenance only, the executor always
+        scans the full set so clean answers stay bit-identical)."""
+        pl = self._placement_for(table_name, phi)
+        consts = (list(consts_list) if flat
+                  else [exec_lib.flatten_pred_vals(v) for v in consts_list])
+        route = place_lib.route_shard_set(
+            fam.strata_keys, phi, struct, consts,
+            self.config.n_logical_shards)
+        sp.set(placement=pl.span_attrs(),
+               shard_set=("all" if route is None else list(route)))
+
+    def _count_shard_report(
+            self, report: "exec_lib.ShardScanReport | None") -> None:
+        if report is None:
+            return
+        self._m_shards_lost.inc(len(report.lost))
+        self._m_shard_reroutes.inc(len(report.rerouted))
+        for s in range(report.n_shards):
+            if s not in report.lost:
+                self._m_shard_scans.labels(str(s)).inc()
+
+    def mark_hot_family(self, table_name: str, phi: tuple[str, ...]
+                        ) -> bool:
+        """Promote one family to hot replication: its shard placement is
+        rebuilt with the longer `hot_replicas` chain, widening fail-over
+        (replicas are re-executions, so this changes fault-path behavior
+        only — never which strata a shard owns, never a clean answer).
+        Driven by the service WorkloadMonitor's hot-family signal; True on
+        first promotion."""
+        phi = tuple(phi)
+        if phi not in self.families.get(table_name, {}):
+            return False
+        newly = self.placements.mark_hot(table_name, phi)
+        if newly:
+            self._m_hot_promotions.inc()
+        return newly
+
+    def storage_stats(self, table_name: str) -> dict:
+        """Host-side storage accounting for the fleet maintainer (§3.2
+        budget arithmetic, docs/MAINTENANCE.md): live base bytes, dead base
+        bytes still held by tombstoned rows, sample bytes, and the ghost
+        sample bytes dead slots keep occupying in striped blocks."""
+        tbl = self.tables[table_name]
+        rb = tbl.row_bytes()
+        sample_rb = rb + 8
+        sample_rows = sum(f.n_rows
+                          for f in self.families.get(table_name, {}).values())
+        ghost_rows = sum(s.n_ghosts for (t, _), s in self._striped.items()
+                         if t == table_name)
+        return {"live_bytes": rb * tbl.n_live,
+                "dead_base_bytes": rb * (tbl.n_rows - tbl.n_live),
+                "sample_bytes": sample_rb * sample_rows,
+                "ghost_sample_bytes": sample_rb * ghost_rows,
+                "dead_bytes": rb * (tbl.n_rows - tbl.n_live)
+                + sample_rb * ghost_rows}
+
     def _run_at_k(self, table_name: str, q: Query, phi: tuple[str, ...],
                   k: float) -> tuple[est_lib.GroupedMoments, int, float,
                                      "exec_lib.ShardScanReport | None"]:
@@ -899,6 +994,8 @@ class BlinkDB:
         with obs_trace.span("scan", table=table_name, k=float(k)) as sp:
             if obs_trace.tracing_active():
                 sp.set(bytes_per_row=_scan_stream_bytes(striped))
+                self._set_placement_attrs(sp, table_name, phi, fam,
+                                          struct, [vals])
             t0 = time.perf_counter()
             report = None
             if self._fault_sharding_active():
@@ -912,7 +1009,8 @@ class BlinkDB:
                     n_logical=self.config.n_logical_shards,
                     n_replicas=self.config.shard_replicas,
                     site_ctx={"table": table_name},
-                    deadline_s=self.config.straggler_deadline_s)
+                    deadline_s=self.config.straggler_deadline_s,
+                    placement=self._placement_for(table_name, phi))
             else:
                 mom = fn(jnp.float32(k), vals, *args)
                 mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
@@ -925,9 +1023,7 @@ class BlinkDB:
                        reweight=report.reweight)
         self._m_scan_seconds.observe(dt)
         self._m_rows_read.inc(rows)
-        if report is not None:
-            self._m_shards_lost.inc(len(report.lost))
-            self._m_shard_reroutes.inc(len(report.rerouted))
+        self._count_shard_report(report)
         return mom, rows, dt, report
 
     def _answer_from_moments(self, q: Query, table_name: str,
@@ -1576,6 +1672,9 @@ class BlinkDB:
                             k=float(max(ks))) as sp:
             if obs_trace.tracing_active():
                 sp.set(bytes_per_row=_scan_stream_bytes(striped))
+                self._set_placement_attrs(
+                    sp, table_name, phi, self.families[table_name][phi],
+                    struct, consts_list, flat=True)
             t0 = time.perf_counter()
             report = None
             if self._fault_sharding_active():
@@ -1588,7 +1687,8 @@ class BlinkDB:
                     n_logical=self.config.n_logical_shards,
                     n_replicas=self.config.shard_replicas,
                     site_ctx={"table": table_name},
-                    deadline_s=self.config.straggler_deadline_s)
+                    deadline_s=self.config.straggler_deadline_s,
+                    placement=self._placement_for(table_name, phi))
             else:
                 mom = fn(ks_dev, consts_dev, *args)
                 mom = jax.tree.map(lambda x: x.block_until_ready(), mom)
@@ -1600,9 +1700,7 @@ class BlinkDB:
                        rerouted=list(report.rerouted))
         self._m_scan_seconds.observe(dt)
         self._m_rows_read.inc(rows)
-        if report is not None:
-            self._m_shards_lost.inc(len(report.lost))
-            self._m_shard_reroutes.inc(len(report.rerouted))
+        self._count_shard_report(report)
         return jax.tree.map(lambda x: x[:n_q], mom), dt, report
 
     def _run_batched_subsampled(self, scan_key, ks: Sequence[float],

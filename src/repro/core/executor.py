@@ -976,7 +976,7 @@ def merge_shard_reports(reports: Sequence["ShardScanReport | None"]
 
 def run_sharded_scan(call, striped: StripedFamily, *, n_logical: int,
                      n_replicas: int = 2, site_ctx: dict | None = None,
-                     deadline_s: float | None = None
+                     deadline_s: float | None = None, placement=None
                      ) -> tuple[est_lib.GroupedMoments, ShardScanReport]:
     """Execute `call(valid_mask) -> GroupedMoments` once per logical shard,
     with replica re-route and HT reweighting of survivors.
@@ -991,6 +991,15 @@ def run_sharded_scan(call, striped: StripedFamily, *, n_logical: int,
     every replica fails are LOST: the surviving partials are summed and
     HT-reweighted by S/(S-L) (estimators.reweight_moments), which widens
     every CI. Raises AllShardsLostError when nothing survives.
+
+    With a `FamilyPlacement` (sharding/placement.py) each replica attempt
+    additionally carries the PROCESS it executes on: the chain length
+    overrides `n_replicas` (hot families run longer chains) and the fault
+    site gains a `process` key, so one FaultSpec matching
+    `(("process", p),)` kills every attempt homed on process p — machine
+    loss, with fail-over to replicas placed elsewhere. Specs matching only
+    shard/replica keys behave exactly as before (extra ctx keys are ignored
+    by FaultSpec.matches), so PR-6 plans and tests are untouched.
     """
     ctx = dict(site_ctx or {})
     partials: list[est_lib.GroupedMoments] = []
@@ -999,16 +1008,21 @@ def run_sharded_scan(call, striped: StripedFamily, *, n_logical: int,
     for s in range(n_logical):
         mask = shard_valid_mask(striped.strat, striped.valid, s,
                                 n_logical=n_logical)
+        chain = (placement.replicas_for(s) if placement is not None
+                 else tuple(None for _ in range(n_replicas)))
         mom = None
-        for r in range(n_replicas):
+        for r, proc in enumerate(chain):
             t0 = time.perf_counter()
+            pctx = {} if proc is None else {"process": proc}
             # Each attempt is its own span: a trace of a degraded query
             # shows every replica tried, which ones a fault plan failed
-            # (attrs carry ok=False + error), and which one finally served.
-            with obs_trace.span("scan.shard", shard=s, replica=r) as sp:
+            # (attrs carry ok=False + error), which process each attempt
+            # was placed on, and which one finally served.
+            with obs_trace.span("scan.shard", shard=s, replica=r,
+                                **pctx) as sp:
                 try:
                     action = inject.site("shard.scan", shard=s, replica=r,
-                                         **ctx)
+                                         **pctx, **ctx)
                     m = call(mask)
                     if action == "poison":
                         m = jax.tree.map(lambda x: x.block_until_ready(),
@@ -1035,9 +1049,11 @@ def run_sharded_scan(call, striped: StripedFamily, *, n_logical: int,
                 rerouted.append(s)
             partials.append(mom)
     if not partials:
+        n_rep = (placement.n_replicas if placement is not None
+                 else n_replicas)
         raise AllShardsLostError(
             f"all {n_logical} logical shards lost every one of "
-            f"{n_replicas} replicas")
+            f"{n_rep} replicas")
     total = jax.tree.map(lambda *xs: functools.reduce(jnp.add, xs), *partials)
     factor = n_logical / (n_logical - len(lost))
     if lost:

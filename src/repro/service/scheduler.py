@@ -131,6 +131,14 @@ class ServiceConfig:
     trace: bool = True
     trace_sample_every: int = 16
     trace_capacity: int = 256
+    # Hot-family replication (ISSUE-10, docs/SERVICE.md): families serving
+    # ≥ hot_family_share of the monitor's recent window (after
+    # hot_family_min answers of evidence) are promoted via
+    # BlinkDB.mark_hot_family — their shard placements grow longer fail-over
+    # chains. Promotion is placement metadata only; answers are unchanged.
+    hot_replication: bool = True
+    hot_family_share: float = 0.25
+    hot_family_min: int = 32
 
 
 @dataclasses.dataclass
@@ -165,8 +173,13 @@ class BlinkQLService:
         self.cache = (AnswerCache(db, self.config.cache_capacity)
                       if self.config.use_cache else None)
         if maintainer is not None:
+            # Fleet maintainer (ISSUE-10): the drift baseline seeds from
+            # EVERY table's templates — per-table drift is still scored per
+            # table (drift_score(table)), one monitor serves the fleet.
             self.monitor = WorkloadMonitor.from_templates(
-                maintainer.templates, self.config.workload)
+                [t for name in maintainer.tables
+                 for t in maintainer.templates_for(name)],
+                self.config.workload)
         else:
             self.monitor = WorkloadMonitor(self.config.workload)
         self.workload_epochs: list[dict] = []
@@ -367,12 +380,29 @@ class BlinkQLService:
         self._m_queries.labels("cache_hit").inc()
         self.monitor.record(q, hit, cache_hit=True,
                             elapsed_s=time.monotonic() - t0)
-        if self.config.reoptimize and self.maintainer is not None \
-                and self.monitor.should_reoptimize(
-                    self.maintainer.table_name):
+        if self._drift_pending():
             with self._cond:
                 self._epoch_pending = True
                 self._cond.notify_all()
+
+    def _drift_pending(self) -> bool:
+        """Any fleet table's workload drifted past the reoptimize trigger."""
+        return (self.config.reoptimize and self.maintainer is not None
+                and any(self.monitor.should_reoptimize(t)
+                        for t in self.maintainer.tables))
+
+    def _promote_hot_families(self) -> None:
+        """Hot-family replication (ISSUE-10): promote families dominating
+        the recent window so their shard placements grow longer fail-over
+        chains (BlinkDB.mark_hot_family — placement metadata only, never an
+        answer change). Monotone and idempotent, so re-running per dispatch
+        iteration is cheap."""
+        if not self.config.hot_replication:
+            return
+        for table, phi in self.monitor.hot_families(
+                self.config.hot_family_share, self.config.hot_family_min):
+            if phi:
+                self.db.mark_hot_family(table, phi)
 
     # ----------------------------------------------------------- tracing
     def _start_trace(self, q: Query, text: str, t0: float, t_parsed: float,
@@ -630,8 +660,8 @@ class BlinkQLService:
             ans = self._attach_trace(ans, tr)
         finally:
             self._exec_lock.release()
-        if self.config.reoptimize and self.maintainer is not None \
-                and self.monitor.should_reoptimize(self.maintainer.table_name):
+        self._promote_hot_families()
+        if self._drift_pending():
             # Epochs stay on the dispatcher thread (serialized with batches).
             with self._cond:
                 self._epoch_pending = True
@@ -779,9 +809,8 @@ class BlinkQLService:
                     self._epoch_pending = False
                     if self._stop and not self._queue:
                         return
-                if self.config.reoptimize and self.maintainer is not None \
-                        and self.monitor.should_reoptimize(
-                            self.maintainer.table_name):
+                self._promote_hot_families()
+                if self._drift_pending():
                     self._run_workload_epoch()
         except BaseException as e:   # noqa: BLE001 — dispatcher-death safety
             self._on_dispatcher_death(e)
@@ -913,28 +942,35 @@ class BlinkQLService:
     def _run_workload_epoch(self) -> None:
         """Template churn past the drift threshold: §3.2 re-optimization with
         the OBSERVED workload, no data delta (docs/SERVICE.md). Runs on the
-        dispatcher thread, serialized with query execution."""
-        templates = self.monitor.templates(self.maintainer.table_name)
-        if not templates:
-            # Nothing stratifiable in the window (pure aggregates): rebase so
-            # the trigger doesn't re-fire on every subsequent request.
-            self.monitor.rebase(table=self.maintainer.table_name)
-            return
-        try:
-            with self._exec_lock:
-                report = self.maintainer.run_workload_epoch(templates)
-            report["drift_score"] = self.monitor.drift_score(
-                self.maintainer.table_name)
-        except Exception as e:   # noqa: BLE001 — an epoch failure must not
-            # kill the dispatcher. Do NOT rebase: the optimizer never
-            # consumed these templates, so the drift signal must survive.
-            # Resetting the evidence counter backs the retry off until
-            # another min_queries of traffic accrues.
-            self.workload_epochs.append({"error": repr(e)})
-            self.monitor.defer()
-            return
-        self.workload_epochs.append(report)
-        self.monitor.rebase(templates)
+        dispatcher thread, serialized with query execution. With a fleet
+        maintainer each drifted table gets its own epoch — per-table drift
+        scoring, per-table templates, one shared evidence counter."""
+        for table in self.maintainer.tables:
+            if not self.monitor.should_reoptimize(table):
+                continue
+            templates = self.monitor.templates(table)
+            if not templates:
+                # Nothing stratifiable in the window (pure aggregates):
+                # rebase so the trigger doesn't re-fire on every request.
+                self.monitor.rebase(table=table)
+                continue
+            try:
+                with self._exec_lock:
+                    report = self.maintainer.run_workload_epoch(
+                        templates, table=table)
+                report["table"] = table
+                report["drift_score"] = self.monitor.drift_score(table)
+            except Exception as e:   # noqa: BLE001 — an epoch failure must
+                # not kill the dispatcher. Do NOT rebase: the optimizer
+                # never consumed these templates, so the drift signal must
+                # survive. Resetting the evidence counter backs the retry
+                # off until another min_queries of traffic accrues.
+                self.workload_epochs.append({"table": table,
+                                             "error": repr(e)})
+                self.monitor.defer()
+                continue
+            self.workload_epochs.append(report)
+            self.monitor.rebase(templates)
 
     # ------------------------------------------------------- observability
     def metrics_snapshot(self) -> dict:

@@ -104,6 +104,10 @@ class WorkloadMonitor:
         # (table, QCS frozenset) stream, sliding window
         self._window: deque[tuple[str, frozenset]] = deque(
             maxlen=self.config.window)
+        # Parallel window of (table, Answer.sample_phi): which FAMILY served
+        # each recent answer — the hot-family replication signal (ISSUE-10).
+        self._phi_window: deque[tuple[str, tuple[str, ...]]] = deque(
+            maxlen=self.config.window)
         self._all_time: Counter = Counter()
         self.template_stats: dict[tuple[str, frozenset], TemplateStats] = {}
         self._baseline: dict[frozenset, float] = dict(baseline or {})
@@ -148,6 +152,8 @@ class WorkloadMonitor:
         outcome = "unjudged"
         with self._lock:
             self._window.append(key)
+            if answer is not None and answer.sample_phi is not None:
+                self._phi_window.append((q.table, tuple(answer.sample_phi)))
             self._all_time[key] += 1
             self._since_epoch += 1
             st = self.template_stats.setdefault(key, TemplateStats())
@@ -212,6 +218,21 @@ class WorkloadMonitor:
         top = sorted(freqs.items(), key=lambda kv: (-kv[1], sorted(kv[0])))
         return [QueryTemplate(qcs, n / total)
                 for qcs, n in top[:max_templates]]
+
+    def hot_families(self, min_share: float = 0.25,
+                     min_n: int = 32) -> list[tuple[str, tuple[str, ...]]]:
+        """Families serving at least `min_share` of the recent window — the
+        replication signal (ISSUE-10): the scheduler promotes these via
+        BlinkDB.mark_hot_family so their shard placements grow longer
+        fail-over chains. Evidence-floored like should_reoptimize: no
+        promotions until `min_n` answers accrue."""
+        with self._lock:
+            counts = Counter(self._phi_window)
+            total = len(self._phi_window)
+        if total < min_n:
+            return []
+        return sorted(key for key, n in counts.items()
+                      if n / total >= min_share)
 
     def defer(self) -> None:
         """An epoch attempt failed: keep the baseline (the optimizer never

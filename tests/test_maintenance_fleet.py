@@ -1,0 +1,192 @@
+"""Fleet-wide SampleMaintainer: many tables under one scheduler (ISSUE-10).
+
+Pins the two contracts the fleet refactor added on top of the single-table
+maintainer:
+
+* **per-table equivalence** — a fleet maintainer running table "a"'s
+  reclamation produces BIT-identical samples, reports, and answers to the
+  classic single-table maintainer on an identical engine: co-tenancy must
+  not perturb any table's maintenance sequence;
+* **the storage-budget trigger** — `maybe_reclaim_fleet` watches TOTAL dead
+  bytes against the §3.2 budget (`storage_budget_fraction` × fleet live
+  bytes) and force-reclaims every table once the aggregate passes
+  `reclaim_pressure`, catching the many-tables-each-slightly-dirty regime
+  where every per-table threshold individually stays quiet.
+
+Plus interleaved delta/tombstone epochs across tables through one maintainer
+and the `run_fleet_epoch` wrapper.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Atom, BlinkDB, CmpOp, EngineConfig, Predicate,
+                        QueryTemplate)
+from repro.core import table as table_lib
+from repro.core.maintenance import MaintenanceConfig, SampleMaintainer
+from repro.data import synth
+from repro.service import parse_blinkql
+
+TPL = [QueryTemplate(frozenset({"City"}), 1.0)]
+
+
+def _mk_db(table_names, n_rows=8_000, seed=2):
+    db = BlinkDB(EngineConfig(k1=200.0, m=3, seed=1))
+    for name in table_names:
+        db.register_table(name, table_lib.from_columns(
+            name, synth.sessions_table(n_rows, seed=seed)))
+        db.add_family(name, ("City",))
+    return db
+
+
+def _avg(db, table, city="city003"):
+    return db.query(parse_blinkql(
+        f"SELECT AVG(SessionTime) FROM {table} WHERE City = '{city}' "
+        "ERROR WITHIN 10% CONFIDENCE 95%", db).normalized())
+
+
+def _delete_cities(db, table, cities):
+    for c in cities:
+        db.delete_rows(table, Predicate.where(Atom("City", CmpOp.EQ, c)))
+
+
+def _assert_reports_equal(a: dict, b: dict):
+    assert a["base_compacted"] == b["base_compacted"]
+    assert a["compacted"] == b["compacted"]
+    assert a["decayed"].keys() == b["decayed"].keys()
+    for phi in a["decayed"]:
+        np.testing.assert_array_equal(a["decayed"][phi], b["decayed"][phi])
+
+
+# ------------------------------------------------------------ construction
+
+def test_constructor_signatures():
+    db = _mk_db(["a"])
+    with pytest.raises(ValueError, match="not both"):
+        SampleMaintainer(db, "a", TPL, tables={"a": TPL})
+    with pytest.raises(ValueError):
+        SampleMaintainer(db)
+    m = SampleMaintainer(db, tables={"a": TPL})
+    assert m.tables == ["a"] and m.table_name == "a"
+    assert m.templates_for("a") == TPL
+    with pytest.raises(KeyError):
+        m.reclaim(table="nope")
+
+
+# --------------------------------------------- per-table path equivalence
+
+def test_fleet_reclaim_bit_identical_to_single_table():
+    """Co-tenant table "b" must not change one byte of "a"'s reclamation."""
+    fleet_db = _mk_db(["a", "b"])
+    solo_db = _mk_db(["a"])
+    fleet = SampleMaintainer(fleet_db, tables={"a": TPL, "b": TPL})
+    solo = SampleMaintainer(solo_db, "a", TPL)
+
+    # Identical churn on "a" in both engines (and extra churn on "b" in the
+    # fleet engine — it must stay invisible to "a"). Past the per-table
+    # base-compact threshold so the reclaim pass actually does work.
+    doomed = [f"city{i:03d}" for i in range(7)]
+    _delete_cities(fleet_db, "a", doomed)
+    _delete_cities(solo_db, "a", doomed)
+    _delete_cities(fleet_db, "b", doomed[:3])
+
+    rep_fleet = fleet.reclaim(table="a")
+    rep_solo = solo.reclaim()
+    _assert_reports_equal(rep_fleet, rep_solo)
+
+    fam_f = fleet_db.families["a"][("City",)]
+    fam_s = solo_db.families["a"][("City",)]
+    assert fam_f.n_rows == fam_s.n_rows
+    np.testing.assert_array_equal(np.asarray(fam_f.strata_keys),
+                                  np.asarray(fam_s.strata_keys))
+    st_f = fleet_db._striped_for("a", ("City",))
+    st_s = solo_db._striped_for("a", ("City",))
+    for attr in ("unit", "strat", "valid"):
+        np.testing.assert_array_equal(np.asarray(getattr(st_f, attr)),
+                                      np.asarray(getattr(st_s, attr)))
+
+    a_f = _avg(fleet_db, "a", "city020")
+    a_s = _avg(solo_db, "a", "city020")
+    got = {g.key: g for g in a_f.groups}
+    want = {g.key: g for g in a_s.groups}
+    assert got.keys() == want.keys()
+    for k in got:
+        assert got[k].estimate == want[k].estimate
+        assert got[k].stderr == want[k].stderr
+
+
+# ------------------------------------------- interleaved multi-table epochs
+
+def test_interleaved_delta_and_tombstone_epochs():
+    db = _mk_db(["a", "b"], n_rows=6_000)
+    m = SampleMaintainer(db, tables={"a": TPL, "b": TPL})
+
+    rep_a = m.run_epoch(delta=synth.sessions_table(1_500, seed=7), table="a")
+    _delete_cities(db, "b", ["city001", "city002"])
+    rep_b = m.run_epoch(table="b")
+    _delete_cities(db, "a", ["city005"])
+    rep_a2 = m.run_epoch(table="a")
+    rep_b2 = m.run_epoch(delta=synth.sessions_table(1_000, seed=9),
+                         table="b")
+    assert m.epochs == 4
+    for rep in (rep_a, rep_b, rep_a2, rep_b2):
+        assert "reclaim" in rep or "drift" in rep or rep  # epoch completed
+    # Both tables still answer, with finite estimates.
+    for t in ("a", "b"):
+        ans = _avg(db, t)
+        assert all(np.isfinite(g.estimate) for g in ans.groups)
+
+    fleet = m.run_fleet_epoch()
+    assert set(fleet["tables"]) == {"a", "b"}
+    assert "fleet_reclaim" in fleet
+
+
+# ----------------------------------------------- storage-budget trigger
+
+def test_storage_budget_trigger_fires_on_total_dead_bytes():
+    """Each table stays below its own base-compact threshold, but the SUM
+    of dead bytes crosses the fleet budget — only the fleet trigger sees
+    it, and the forced pass reclaims both tables."""
+    db = _mk_db(["a", "b"])
+    cfg = MaintenanceConfig()   # budget 0.5×live, trigger at 0.5×budget
+    m = SampleMaintainer(db, tables={"a": TPL, "b": TPL}, config=cfg)
+
+    assert m.maybe_reclaim_fleet() is None   # clean fleet: no pressure
+
+    # ~25% of each table dead (the City distribution is zipf-skewed, so
+    # cities 1-3 cover it): below base_compact_threshold (0.3) per table,
+    # so a default per-table reclaim would not base-compact —
+    doomed = ["city001", "city002", "city003"]
+    _delete_cities(db, "a", doomed)
+    _delete_cities(db, "b", doomed)
+    for t in ("a", "b"):
+        assert db.dead_fraction(t) < cfg.base_compact_threshold
+
+    status = m.storage_status()
+    assert set(status["tables"]) == {"a", "b"}
+    assert status["dead_bytes"] > 0 and status["budget_bytes"] > 0
+    # — but fleet pressure (total dead / budget) is over the trigger.
+    assert m.storage_pressure() >= cfg.reclaim_pressure
+
+    out = m.maybe_reclaim_fleet()
+    assert out is not None
+    assert out["pressure_before"] >= cfg.reclaim_pressure
+    # The FORCED pass compacts both tables despite per-table thresholds.
+    for t in ("a", "b"):
+        assert out["tables"][t]["base_compacted"] > 0
+        assert db.dead_fraction(t) == 0.0
+    assert out["pressure_after"] < out["pressure_before"]
+    assert m.maybe_reclaim_fleet() is None   # pressure released
+
+    # Answers survive the forced reclaim with finite estimates.
+    for t in ("a", "b"):
+        ans = _avg(db, t, "city020")
+        assert all(np.isfinite(g.estimate) for g in ans.groups)
+
+
+def test_storage_trigger_disabled_by_config():
+    db = _mk_db(["a", "b"], n_rows=4_000)
+    m = SampleMaintainer(
+        db, tables={"a": TPL, "b": TPL},
+        config=MaintenanceConfig(reclaim_pressure=0.0))
+    _delete_cities(db, "a", [f"city{i:03d}" for i in range(10)])
+    assert m.maybe_reclaim_fleet() is None

@@ -1,0 +1,219 @@
+"""Fleet placement: striping sample shards across simulated processes.
+
+Covers the placement layer itself (deterministic home/replica chains, hot
+replication), its integration with the replicated sharded scan (process-kill
+fail-over stays bit-identical with zero lost shards; losing every process
+raises the typed all-lost error), predicate-to-shard routing provenance
+(`route_shard_set` agrees with the scan's stratum hash and declines anything
+it cannot pin), workload-driven hot-family promotion through the service,
+and the placement attributes the obs plane stamps on scan spans.
+
+Placement is fault-domain METADATA: with no fault plan armed the engine runs
+the same fused program regardless of placement, so every clean-path test
+here doubles as a bit-identity check against the unsharded path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import BlinkDB, EngineConfig
+from repro.core import table as table_lib
+from repro.core.executor import shard_of_strata
+from repro.core.types import CmpOp
+from repro.data import synth
+from repro.fault.inject import AllShardsLostError, FaultPlan, FaultSpec, arm
+from repro.obs.trace import QueryTrace, activate
+from repro.service import BlinkQLService, ServiceConfig, parse_blinkql
+from repro.sharding.placement import (PlacementConfig, PlacementMap,
+                                      build_placement, route_shard_set,
+                                      shard_load)
+
+N_SHARDS = 4   # EngineConfig default n_logical_shards
+
+
+@pytest.fixture(scope="module")
+def db():
+    tbl = table_lib.from_columns("sessions",
+                                 synth.sessions_table(20_000, seed=2))
+    d = BlinkDB(EngineConfig(k1=400.0, m=3, seed=1))
+    d.register_table("sessions", tbl)
+    d.add_family("sessions", ("City",))
+    d.add_family("sessions", ())
+    return d
+
+
+AVG_TXT = ("SELECT AVG(SessionTime) FROM sessions WHERE City = 'city003' "
+           "ERROR WITHIN 10% CONFIDENCE 95%")
+
+
+def _q(db, text=AVG_TXT):
+    return parse_blinkql(text, db).normalized()
+
+
+def _assert_bit_identical(a, b):
+    ka = {g.key: g for g in a.groups}
+    kb = {g.key: g for g in b.groups}
+    assert ka.keys() == kb.keys()
+    for key in ka:
+        assert ka[key].estimate == kb[key].estimate
+        assert ka[key].stderr == kb[key].stderr
+
+
+# -------------------------------------------------------- placement layer
+
+def test_build_placement_round_robin_and_deterministic():
+    cfg = PlacementConfig(n_processes=2, n_replicas=2, hot_replicas=3)
+    pl = build_placement("t", ("City",), 4, cfg)
+    assert [pl.home(s) for s in range(4)] == [0, 1, 0, 1]
+    # Replica r of shard s lives on process (s + r) % P: the fail-over
+    # chain for every shard visits DISTINCT processes when P >= replicas.
+    for s in range(4):
+        chain = pl.replicas_for(s)
+        assert len(chain) == 2
+        assert chain[0] == pl.home(s)
+        assert len(set(chain)) == 2
+    assert pl.replicas == build_placement("t", ("City",), 4, cfg).replicas
+    # shards_on lists the shards HOMED on a process; the homes partition
+    # the shard set across processes.
+    for p in range(2):
+        assert pl.shards_on(p) == tuple(
+            s for s in range(4) if pl.home(s) == p)
+    assert sorted(pl.shards_on(0) + pl.shards_on(1)) == [0, 1, 2, 3]
+
+
+def test_hot_placement_grows_failover_chain():
+    cfg = PlacementConfig(n_processes=2, n_replicas=2, hot_replicas=3)
+    pm = PlacementMap(cfg)
+    cold = pm.for_family("t", ("City",), 4)
+    assert cold.n_replicas == 2 and not cold.hot
+    assert pm.mark_hot("t", ("City",)) is True
+    assert pm.mark_hot("t", ("City",)) is False   # idempotent
+    hot = pm.for_family("t", ("City",), 4)
+    assert hot.hot and hot.n_replicas == 3
+    assert hot.replicas == tuple(
+        tuple((s + r) % 2 for r in range(3)) for s in range(4))
+    assert pm.hot_families() == [("t", ("City",))]
+
+
+def test_span_attrs_are_json_plain():
+    pl = build_placement("t", ("City",), 4, PlacementConfig())
+    attrs = pl.span_attrs()
+    assert attrs["n_processes"] == 2 and attrs["hot"] is False
+    assert attrs["homes"] == [0, 1, 0, 1]
+
+
+# ------------------------------------------------- routing + shard load
+
+def test_route_shard_set_matches_scan_hash(db):
+    fam = db.families["sessions"][("City",)]
+    q = _q(db)
+    struct = ((("City", CmpOp.EQ),),)
+    cities = db.tables["sessions"].dictionaries["City"]
+    code = float(np.flatnonzero(cities == "city003")[0])
+    route = route_shard_set(fam.strata_keys, ("City",), struct,
+                            [(code,)], N_SHARDS)
+    # The pinned stratum's shard under the scan's own hash:
+    d = int(np.flatnonzero(fam.strata_keys[:, 0] == code)[0])
+    expect = int(shard_of_strata(np.array([d]), N_SHARDS)[0])
+    assert route == (expect,)
+    assert q is not None   # parse sanity
+
+
+def test_route_declines_unpinned_predicates(db):
+    fam = db.families["sessions"][("City",)]
+    # Non-EQ atom on a phi column: cannot pin a stratum.
+    assert route_shard_set(fam.strata_keys, ("City",),
+                           ((("City", CmpOp.GE),),), [(1.0,)],
+                           N_SHARDS) is None
+    # Empty predicate: every stratum — no routing signal.
+    assert route_shard_set(fam.strata_keys, ("City",), (), [],
+                           N_SHARDS) is None
+    # A conjunction missing the phi column: unpinned.
+    assert route_shard_set(fam.strata_keys, ("City",),
+                           ((("OS", CmpOp.EQ),),), [(0.0,)],
+                           N_SHARDS) is None
+
+
+def test_shard_load_partitions_sample(db):
+    striped = db._striped_for("sessions", ("City",))
+    load = shard_load(striped, N_SHARDS)
+    assert load.shape == (N_SHARDS,)
+    assert int(load.sum()) == db.families["sessions"][("City",)].n_rows
+
+
+# --------------------------------------------- fail-over under placement
+
+def test_process_kill_fails_over_bit_identical(db):
+    q = _q(db)
+    clean = db.query(q)
+    # Never-firing plan: engages the sharded path without any fault.
+    with arm(FaultPlan([FaultSpec(site="nowhere", kind="kill")], seed=0)):
+        sharded = db.query(q)
+    _assert_bit_identical(clean, sharded)
+    # Kill every replica attempt on process 0: each shard's chain visits
+    # process 1 next, so the answer is identical and NO shard is lost.
+    plan = FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                match=(("process", 0),))], seed=0)
+    with arm(plan):
+        failed_over = db.query(q)
+    assert plan.n_fires > 0
+    assert failed_over.shards_lost == 0 and not failed_over.degraded
+    _assert_bit_identical(clean, failed_over)
+
+
+def test_all_processes_down_raises_typed_error(db):
+    plan = FaultPlan([FaultSpec(site="shard.scan", kind="kill",
+                                match=(("process", p),)) for p in (0, 1)],
+                     seed=0)
+    with arm(plan), pytest.raises(AllShardsLostError):
+        db.query(_q(db))
+
+
+# ------------------------------------------------ service hot promotion
+
+def test_service_promotes_hot_family(db):
+    svc = BlinkQLService(db, config=ServiceConfig(
+        use_cache=False, hot_family_min=8, hot_family_share=0.25))
+    try:
+        for _ in range(12):
+            svc.submit(AVG_TXT)
+    finally:
+        svc.close()
+    assert db.placements.is_hot("sessions", ("City",))
+    pl = db.placements.for_family("sessions", ("City",),
+                                  db.config.n_logical_shards)
+    assert pl.n_replicas == db.config.hot_replicas
+    # Promotion must not perturb answers: clean path still bit-identical.
+    _assert_bit_identical(db.query(_q(db)), db.query(_q(db)))
+
+
+def test_hot_promotion_disabled_by_config():
+    tbl = table_lib.from_columns("sessions",
+                                 synth.sessions_table(5_000, seed=3))
+    d = BlinkDB(EngineConfig(k1=200.0, m=3, seed=1))
+    d.register_table("sessions", tbl)
+    d.add_family("sessions", ("City",))
+    svc = BlinkQLService(d, config=ServiceConfig(
+        use_cache=False, hot_replication=False, hot_family_min=4))
+    try:
+        for _ in range(8):
+            svc.submit(AVG_TXT)
+    finally:
+        svc.close()
+    assert not d.placements.is_hot("sessions", ("City",))
+
+
+# ------------------------------------------------------- obs integration
+
+def test_scan_span_carries_placement_attrs(db):
+    tr = QueryTrace("placement")
+    with activate(tr):
+        db.query(_q(db))
+    scans = [s for s in tr.spans if s.name == "scan"]
+    assert scans, "query must open a scan span"
+    attrs = scans[0].attrs
+    assert attrs["placement"]["n_processes"] == db.config.n_processes
+    assert attrs["placement"]["homes"] == [
+        s % db.config.n_processes
+        for s in range(db.config.n_logical_shards)]
+    # The EQ template pins its stratum: shard_set is the routed subset.
+    assert attrs["shard_set"] != "all" and len(attrs["shard_set"]) == 1
